@@ -1,0 +1,152 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+All experiments run on the synthetic Gaussian-mixture dataset (the
+container is offline; DESIGN.md §6.3) at input shapes matching the
+paper's (F)MNIST/CIFAR geometry, scaled so a full benchmark suite
+completes on one CPU core.  Numbers are therefore compared QUALITATIVELY
+against the paper's orderings (RBD > FPD > NES, Normal > Uniform >
+Bernoulli, compartmentalization helps), not absolutely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_plan, nes as nes_lib, rng
+from repro.core.rbd import RandomBasesTransform
+from repro.data import synthetic
+from repro.models import vision
+
+IMG = (14, 14, 1)          # reduced MNIST geometry (paper uses 28x28)
+NOISE = 1.0
+BATCH = 32                 # paper batch size
+EVAL_N = 1024
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    accuracy: float
+    final_loss: float
+    steps: int
+    wall_s: float
+    grad_corr: float = float("nan")
+
+
+IMG_CNN = (20, 20, 1)      # paper CNN needs >=18px after 2 pools
+
+
+def setup(model_name: str = "fc", img=None, seed: int = 0):
+    if img is None:
+        img = IMG_CNN if model_name == "cnn" else IMG
+    init, apply = vision.get_vision_model(model_name)
+    params = init(jax.random.PRNGKey(seed), img)
+
+    def loss_fn(p, x, y):
+        logp = jax.nn.log_softmax(apply(p, x))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    xe, ye = synthetic.mixture_images(
+        jax.random.PRNGKey(10_000), EVAL_N, shape=img, noise=NOISE)
+
+    def accuracy(p):
+        return float(jnp.mean(jnp.argmax(apply(p, xe), -1) == ye))
+
+    return params, apply, loss_fn, accuracy, img
+
+
+def train(
+    params,
+    loss_fn,
+    accuracy,
+    *,
+    method: str,               # sgd | rbd | fpd | nes
+    dim: int = 0,
+    lr: float,
+    steps: int = 200,
+    seed: int = 0,
+    granularity: str = "global",
+    distribution: str = "normal",
+    normalization: str = "exact",
+    measure_corr: bool = False,
+    img=IMG,
+    n_compartments: int = 1,
+) -> RunResult:
+    transform = None
+    plan = make_plan(params, dim, granularity=granularity,
+                     distribution=distribution,
+                     normalization=normalization,
+                     n_compartments=n_compartments)
+    if method in ("rbd", "fpd"):
+        transform = RandomBasesTransform(plan, seed,
+                                         redraw=(method == "rbd"))
+
+    state = transform.init(params) if transform else None
+
+    @jax.jit
+    def grad_step(p, st, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        corr = jnp.zeros(())
+        if transform is not None:
+            u, st = transform.update(g, st)
+            if measure_corr:
+                gf = jnp.concatenate(
+                    [a.ravel() for a in jax.tree_util.tree_leaves(g)])
+                uf = jnp.concatenate(
+                    [a.ravel() for a in jax.tree_util.tree_leaves(u)])
+                corr = jnp.corrcoef(gf, uf)[0, 1]
+        else:
+            u = g
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, u)
+        return p, st, loss, corr
+
+    @jax.jit
+    def nes_step(p, step_i, x, y):
+        seed_t = rng.fold_seed(seed, step_i)
+        u = nes_lib.nes_gradient(lambda q: loss_fn(q, x, y), p, plan,
+                                 seed_t, sigma=0.02)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, u)
+        return p, loss_fn(p, x, y)
+
+    data = synthetic.mixture_dataset(seed, BATCH, shape=img, noise=NOISE)
+    t0 = time.time()
+    corrs = []
+    loss = float("nan")
+    for i in range(steps):
+        x, y = next(data)
+        if method == "nes":
+            params, loss = nes_step(params, jnp.uint32(i), x, y)
+        else:
+            params, state, loss, corr = grad_step(params, state, x, y)
+            if measure_corr and i % 10 == 0:
+                corrs.append(float(corr))
+    return RunResult(
+        name=method,
+        accuracy=accuracy(params),
+        final_loss=float(loss),
+        steps=steps,
+        wall_s=time.time() - t0,
+        grad_corr=float(np.mean(corrs)) if corrs else float("nan"),
+    )
+
+
+def emit(rows: list[dict], header: str):
+    """Print a compact aligned table + machine-readable CSV lines."""
+    print(f"\n== {header} ==")
+    if not rows:
+        return
+    keys = list(rows[0])
+    print("  ".join(f"{k:>12s}" for k in keys))
+    for r in rows:
+        print("  ".join(
+            f"{r[k]:>12.4f}" if isinstance(r[k], float) else f"{r[k]!s:>12s}"
+            for k in keys))
+    for r in rows:
+        print("CSV," + header.replace(" ", "_") + ","
+              + ",".join(f"{k}={r[k]}" for k in keys))

@@ -1,0 +1,258 @@
+"""Closed-form FLOP / HBM-byte model per (architecture x input shape).
+
+Why analytical: XLA's ``compiled.cost_analysis()`` counts a while-loop
+body ONCE, not x trip-count (verified on this container -- see
+EXPERIMENTS.md §Roofline "method"), and every production model here runs
+its layer stack, flash attention, and RBD basis generation under
+``lax.scan``.  Raw HLO numbers therefore understate compute by ~n_layers
+and are reported only as a cross-check.  The closed-form model below is
+exact for the dominant terms (matmul FLOPs are exact; elementwise terms
+are counted with small constants).
+
+Conventions: FLOPs are global per step (multiply-add = 2 FLOPs); bytes
+are global HBM traffic per step.  Divide by chip count for per-device
+roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig, RBDConfig
+
+BF16 = 2
+F32 = 4
+
+# Threefry-20rounds + Box-Muller per generated basis element, in VPU ops.
+# 20 rounds x (add, rotl(2 ops), xor) + key inject + uniform + cos/log.
+GEN_OPS_PER_ELEM = 100
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0          # MXU-countable matmul flops
+    gen_flops: float = 0.0      # PRNG generation (VPU) ops
+    bytes_hbm: float = 0.0      # HBM traffic
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.gen_flops + o.gen_flops,
+                    self.bytes_hbm + o.bytes_hbm)
+
+    def scale(self, k):
+        return Cost(self.flops * k, self.gen_flops * k, self.bytes_hbm * k)
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts via eval_shape (exact)."""
+    from repro.models import get_model
+
+    shapes = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    total = active = 0
+    for path, x in jax.tree_util.tree_leaves_with_path(shapes):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += x.size
+        if cfg.is_moe and "moe/" in name and "router" not in name:
+            active += x.size // cfg.n_experts * cfg.top_k
+        else:
+            active += x.size
+    return total, active
+
+
+def _attn_ctx(cfg: ModelConfig, s: int, layer_global: bool) -> float:
+    """Average attended context length per query position."""
+    if cfg.window is not None and not layer_global:
+        w = min(cfg.window, s)
+        # causal ramp up to w then constant
+        return (w * (w + 1) / 2 + (s - w) * w) / s if s > w else (s + 1) / 2
+    return (s + 1) / 2  # causal full
+
+
+def _layer_forward_cost(cfg: ModelConfig, b: int, s: int,
+                        layer_global: bool) -> Cost:
+    t = b * s
+    d, hd = cfg.d_model, cfg.d_head
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    c = Cost()
+    if cfg.block_kind == "attn":
+        # qkvo projections
+        c.flops += 2 * t * d * (2 * h * hd + 2 * kv * hd)
+        ctx = _attn_ctx(cfg, s, layer_global)
+        c.flops += 2 * 2 * t * ctx * h * hd          # scores + values
+        if cfg.is_moe:
+            e, k = cfg.n_experts, cfg.top_k
+            c.flops += 2 * t * d * e                 # router
+            c.flops += 3 * 2 * t * k * d * cfg.d_ff * cfg.capacity_factor
+            # dispatch scatter/gather traffic (tokens cross experts)
+            c.bytes_hbm += 2 * t * k * d * BF16
+        else:
+            n_mats = 3 if cfg.act == "silu" else 2
+            c.flops += n_mats * 2 * t * d * cfg.d_ff
+    elif cfg.block_kind == "rwkv":
+        c.flops += 5 * 2 * t * d * d                 # r,k,v,g,o projections
+        c.flops += 2 * t * d * 64 * 2                # decay LoRA
+        c.flops += 6 * t * d * hd                    # recurrence (outer
+        #                                              product + readout)
+        c.flops += 2 * 2 * t * d * cfg.d_ff          # channel mix
+    elif cfg.block_kind == "mamba":
+        di = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        c.flops += 2 * t * d * (2 * di + 2 * n + cfg.n_heads)
+        c.flops += 2 * t * di * cfg.conv_width
+        c.flops += 5 * t * di * n                    # recurrence
+        c.flops += 2 * t * di * d
+    return c
+
+
+def _shared_attn_cost(cfg: ModelConfig, b: int, s: int) -> Cost:
+    t = b * s
+    d, hd, h, kv = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    c = Cost()
+    c.flops += 2 * t * d * (2 * h * hd + 2 * kv * hd)
+    c.flops += 2 * 2 * t * _attn_ctx(cfg, s, True) * h * hd
+    c.flops += 3 * 2 * t * d * cfg.d_ff
+    return c
+
+
+def forward_cost(cfg: ModelConfig, b: int, s: int) -> Cost:
+    c = Cost()
+    n_global = (cfg.n_layers // cfg.global_every
+                if cfg.global_every else 0)
+    n_local = cfg.n_layers - n_global
+    c = c + _layer_forward_cost(cfg, b, s, False).scale(n_local)
+    c = c + _layer_forward_cost(cfg, b, s, True).scale(n_global)
+    if cfg.hybrid_attn_every:
+        c = c + _shared_attn_cost(cfg, b, s).scale(
+            cfg.n_layers // cfg.hybrid_attn_every)
+    if cfg.is_encoder_decoder:
+        # encoder over enc_seq frames (non-causal full attention)
+        enc = Cost()
+        t_e = b * cfg.enc_seq
+        d, hd, h, kv = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+        enc.flops += cfg.n_enc_layers * (
+            2 * t_e * d * (2 * h * hd + 2 * kv * hd)
+            + 2 * 2 * t_e * cfg.enc_seq * h * hd
+            + 2 * 2 * t_e * d * cfg.d_ff)
+        # decoder cross attention
+        enc.flops += cfg.n_layers * (
+            2 * b * s * d * 2 * h * hd
+            + 2 * 2 * b * s * cfg.enc_seq * h * hd)
+        c = c + enc
+    # logits
+    c.flops += 2 * b * s * cfg.d_model * cfg.vocab
+    return c
+
+
+def rbd_cost(cfg: ModelConfig, rbd: RBDConfig, n_params: int,
+             backend: str = "pallas") -> Cost:
+    """Project + reconstruct over all compartments.
+
+    kernel ('pallas') backend: basis tiles live in VMEM -> zero HBM
+    traffic for the basis; jnp backend on TPU would round-trip each
+    generated block through HBM (reported for comparison in §Perf).
+    """
+    # each compartment generates its (d_k x Q_k) basis twice per step
+    # (project + reconstruct; 'exact' norms reuse the projection pass)
+    gen_elems = 2.0 * _sum_dk_qk(cfg, rbd, n_params)
+    c = Cost()
+    c.gen_flops += gen_elems * GEN_OPS_PER_ELEM
+    c.flops += 2 * 2 * _sum_dk_qk(cfg, rbd, n_params)  # dots, both passes
+    # gradient read + update write (f32 master)
+    c.bytes_hbm += 2 * n_params * F32
+    if backend == "jnp":
+        c.bytes_hbm += gen_elems * F32  # blocks round-trip HBM
+    return c
+
+
+def _sum_dk_qk(cfg: ModelConfig, rbd: RBDConfig, n_params: int) -> float:
+    """sum_k d_k * Q_k from the actual compartment plan."""
+    from repro.models import get_model
+    from repro.train.step import make_plan
+
+    plan = make_plan(get_model(cfg), rbd)
+    return float(sum(lp.n_coeffs * lp.size for lp in plan.leaves))
+
+
+def train_cost(cfg: ModelConfig, shape: InputShape,
+               rbd: Optional[RBDConfig] = None,
+               remat: bool = True) -> Cost:
+    b, s = shape.global_batch, shape.seq_len
+    fwd = forward_cost(cfg, b, s)
+    # backward = 2x forward matmuls; remat recomputes forward once more
+    mult = 3.0 + (1.0 if remat else 0.0)
+    c = Cost(flops=fwd.flops * mult, gen_flops=0.0,
+             bytes_hbm=fwd.bytes_hbm * mult)
+    n_params, _ = param_count(cfg)
+    # weights: read fwd + bwd(+remat) in bf16; grads written f32
+    c.bytes_hbm += n_params * BF16 * (3 if remat else 2)
+    c.bytes_hbm += n_params * F32
+    # activation checkpoints: one (B,S,D) residual per layer, saved+read
+    c.bytes_hbm += 2 * cfg.n_layers * b * s * cfg.d_model * BF16
+    # optimizer update: params read+write f32
+    c.bytes_hbm += 2 * n_params * F32
+    if rbd is not None and rbd.enabled:
+        c = c + rbd_cost(cfg, rbd, n_params, rbd.backend)
+    return c
+
+
+def prefill_cost(cfg: ModelConfig, shape: InputShape) -> Cost:
+    b, s = shape.global_batch, shape.seq_len
+    c = forward_cost(cfg, b, s)
+    n_params, _ = param_count(cfg)
+    c.bytes_hbm += n_params * BF16
+    c.bytes_hbm += 2 * cfg.n_layers * b * s * cfg.d_model * BF16
+    return c
+
+
+def decode_cost(cfg: ModelConfig, shape: InputShape) -> Cost:
+    """One token for every sequence in the batch, full-context cache."""
+    b, s = shape.global_batch, shape.seq_len
+    c = forward_cost(cfg, b, 1)
+    # attention against the cache: KV read dominates
+    kv_bytes = 0
+    if cfg.block_kind == "attn":
+        ctx = min(cfg.window, s) if cfg.window else s
+        n_global = (cfg.n_layers // cfg.global_every
+                    if cfg.global_every else 0)
+        n_local = cfg.n_layers - n_global
+        ctx_total = n_local * ctx + n_global * s
+        kv_bytes = 2 * b * ctx_total * cfg.n_kv_heads * cfg.d_head * BF16
+        c.flops += 2 * 2 * b * ctx_total * cfg.n_heads * cfg.d_head
+    elif cfg.block_kind in ("rwkv", "mamba"):
+        # O(1) state read/write per layer
+        if cfg.block_kind == "rwkv":
+            st = cfg.n_layers * b * cfg.d_model * cfg.d_head * F32
+        else:
+            st = (cfg.n_layers * b * cfg.ssm_expand * cfg.d_model
+                  * cfg.ssm_state * F32)
+        kv_bytes = 2 * st
+        if cfg.hybrid_attn_every:
+            n_sh = cfg.n_layers // cfg.hybrid_attn_every
+            kv_bytes += 2 * n_sh * b * s * cfg.n_kv_heads * cfg.d_head * BF16
+            c.flops += 2 * 2 * b * n_sh * s * cfg.n_heads * cfg.d_head
+    c.bytes_hbm += kv_bytes
+    n_params, active = param_count(cfg)
+    # decode reads only active weights (MoE: top-k experts per token, but
+    # with b tokens the expert working set is min(b*k, E)/E of the stack)
+    if cfg.is_moe:
+        frac = min(1.0, b * cfg.top_k / cfg.n_experts)
+        expert_params = n_params - active
+        c.bytes_hbm += (active + frac * expert_params) * BF16
+    else:
+        c.bytes_hbm += n_params * BF16
+    return c
+
+
+def cost_for(cfg: ModelConfig, shape: InputShape,
+             rbd: Optional[RBDConfig] = None,
+             backend: str = "pallas") -> Cost:
+    if rbd is not None:
+        rbd = dataclasses.replace(rbd, backend=backend)
+    if shape.kind == "train":
+        return train_cost(cfg, shape, rbd)
+    if shape.kind == "prefill":
+        return prefill_cost(cfg, shape)
+    return decode_cost(cfg, shape)

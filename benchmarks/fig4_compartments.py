@@ -1,0 +1,42 @@
+"""Paper Fig 4 + B.10: compartmentalization sweep at fixed coefficient
+budget -- more compartments (smaller randomization dimensionality per
+compartment) should improve accuracy, with layer-wise compartments as
+the architecture-aligned variant."""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+DIM = 16  # tight budget so approximation quality differentiates
+
+
+def run(quick: bool = True):
+    rows = []
+    cases = [("global", 1, "1 compartment"), ("even", 4, "4 even"),
+             ("even", 16, "16 even"), ("leaf", 0, "per-tensor")]
+    for gran, k, label in cases:
+        accs = []
+        for seed in ((0,) if quick else (0, 1)):
+            params, _, loss_fn, accuracy, img = common.setup("cnn", seed=seed)
+            r = common.train(
+                params, loss_fn, accuracy, img=img, method="rbd",
+                dim=DIM, lr=2.0, steps=150, seed=seed,
+                granularity=gran, n_compartments=k)
+            accs.append(r.accuracy)
+        rows.append({"compartments": label,
+                     "acc_mean": float(sum(accs) / len(accs))})
+    # FPD with compartments (paper B.9: helps FPD too, below RBD)
+    params, _, loss_fn, accuracy, img = common.setup("cnn", seed=0)
+    r = common.train(params, loss_fn, accuracy, img=img, method="fpd",
+                     dim=DIM, lr=2.0, steps=150, granularity="leaf")
+    rows.append({"compartments": "per-tensor FPD", "acc_mean": r.accuracy})
+    common.emit(rows, "fig4 compartmentalization")
+    by = {r["compartments"]: r["acc_mean"] for r in rows}
+    ok = by["per-tensor"] >= by["1 compartment"] - 0.02
+    print(f"compartmentalization helps: "
+          f"{'CONFIRMED' if ok else 'VIOLATED'} {by}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

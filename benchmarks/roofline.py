@@ -1,0 +1,107 @@
+"""Deliverable (g): three-term roofline per (arch x shape) on the
+single-pod 16x16 mesh.
+
+  compute    = FLOPs / (chips * 197 TFLOP/s)       [analytical model]
+  memory     = bytes / (chips * 819 GB/s)          [analytical model]
+  collective = coll_bytes / (chips * 50 GB/s)      [trip-weighted HLO]
+
+FLOPs/bytes come from ``benchmarks.costmodel`` (closed-form, exact for
+matmuls) because XLA's cost_analysis counts while-loop bodies once
+(verified; raw HLO numbers are carried in the table as a cross-check).
+Collective bytes come from the compiled per-partition HLO with
+while-loop trip-count attribution (repro.launch.hlo_analysis) -- these
+are per-chip, so the term divides by link bandwidth only.
+
+Generation (PRNG) ops execute on the VPU, not the MXU; the compute term
+reports them separately scaled by the VPU/MXU throughput ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import costmodel as cm
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import RBDConfig
+
+CHIPS = 256
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+VPU = 4.9e12  # v5e vector unit, f32 ops/s (8 MACs x 128 lanes x 4 x clock)
+
+
+def one_row(arch: str, shape_name: str, dr: dict | None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rbd = RBDConfig() if shape.kind == "train" else None
+    c = cm.cost_for(cfg, shape, rbd)
+    n_params, active = cm.param_count(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * active * tokens
+
+    t_compute = c.flops / (CHIPS * PEAK) + c.gen_flops / (CHIPS * VPU)
+    t_memory = c.bytes_hbm / (CHIPS * HBM)
+    coll_dev = (dr or {}).get("collective_bytes_per_device", float("nan"))
+    t_coll = coll_dev / ICI if coll_dev == coll_dev else float("nan")
+
+    terms = {"compute": t_compute, "memory": t_memory}
+    if t_coll == t_coll:
+        terms["collective"] = t_coll
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(c.flops, 1.0),
+        "mfu_bound": model_flops / (CHIPS * PEAK) / max(step_time, 1e-12),
+        "hlo_flops_dev_raw": (dr or {}).get("flops_per_device",
+                                            float("nan")),
+        "compile_s": (dr or {}).get("compile_s", float("nan")),
+    }
+
+
+def load_dryrun(out_dir: str, arch: str, shape: str,
+                mesh: str = "16x16", mode: str = "rbd") -> dict | None:
+    path = os.path.join(out_dir, f"{arch}_{shape}_{mesh}_{mode}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            d = json.load(f)
+        return None if "skipped" in d else d
+    return None
+
+
+def run(quick: bool = True, out_dir: str = "reports/dryrun"):
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            cfg = get_config(arch)
+            from repro.launch.dryrun import should_skip
+
+            if should_skip(cfg, INPUT_SHAPES[shape]):
+                continue
+            dr = load_dryrun(out_dir, arch, shape)
+            rows.append(one_row(arch, shape, dr))
+    # report
+    print(f"\n== roofline (single pod, {CHIPS} chips) ==")
+    hdr = (f"{'arch':24s} {'shape':12s} {'Tc(s)':>8s} {'Tm(s)':>8s} "
+           f"{'Tcoll(s)':>9s} {'bound':>10s} {'useful':>7s} {'MFUmax':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']:8.3f} {r['t_memory_s']:8.3f} "
+              f"{r['t_collective_s']:9.3f} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['mfu_bound']:7.2%}")
+    for r in rows:
+        print("CSV,roofline," + ",".join(f"{k}={v}" for k, v in r.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

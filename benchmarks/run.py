@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure, plus the
+roofline assembly.  Prints aligned tables and ``CSV,...`` lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table1_baselines", "paper Table 1: NES/FPD/RBD/SGD"),
+    ("table2_distributions", "paper Table 2: directional distributions"),
+    ("fig4_compartments", "paper Fig 4/B.9/B.10: compartmentalization"),
+    ("fig5_distributed", "paper Fig 5: distributed workers"),
+    ("table3_compression", "paper Table 3: compression sweep"),
+    ("figB7_dimensionality", "paper Fig B.7: dimensionality sweep"),
+    ("fig3_switching", "paper Fig 3/B.11/B.12: optimizer switching"),
+    ("kernel_throughput", "paper sec 4.2: basis generation throughput"),
+    ("roofline", "deliverable (g): roofline table from dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale seeds/steps (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    t0 = time.time()
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"\n######## {mod_name}: {desc} ########", flush=True)
+        t1 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(quick=not args.full)
+            print(f"[{mod_name} done in {time.time() - t1:.1f}s]")
+        except Exception:  # noqa: BLE001
+            failures.append(mod_name)
+            traceback.print_exc()
+    print(f"\ntotal wall: {time.time() - t0:.1f}s")
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+    print("all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serve a small model with batched requests: prefill + KV-cached decode.
+
+Demonstrates the serving substrate the decode-shape dry-runs lower
+(prefill -> cache -> batched decode_step).  Uses the reduced tinyllama
+family; on real hardware this is the same engine pjit'd over the
+production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"serving {cfg.name}: D={n:,} params, vocab={cfg.vocab}")
+
+    engine = Engine(model, params, max_len=128)
+
+    # batched requests: 8 prompts of 16 tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                 cfg.vocab, jnp.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, n_tokens=32, temperature=0.0)
+    t1 = time.time()
+    print(f"generated {out.shape} tokens in {t1 - t0:.1f}s "
+          f"({out.size / (t1 - t0):.1f} tok/s incl. compile)")
+    # cached generation is deterministic at temperature 0
+    out2 = engine.generate(prompts, n_tokens=32, temperature=0.0)
+    assert (out == out2).all(), "greedy decode must be deterministic"
+    t2 = time.time()
+    print(f"second batch (warm): {out.size / (t2 - t1):.1f} tok/s")
+    print("sample continuation:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Config registry: ``--arch <id>`` -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    RBDConfig,
+    TrainConfig,
+)
+
+ARCH_IDS = {
+    "gemma3-4b": "gemma3_4b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-0.5b": "qwen2_05b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_16b",
+    "tinyllama-1.1b": "tinyllama_11b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-2.7b": "zamba2_27b",
+    "granite-34b": "granite_34b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.get_config()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {aid: get_config(aid) for aid in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "RBDConfig",
+    "TrainConfig",
+    "all_configs",
+    "get_config",
+]

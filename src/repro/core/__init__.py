@@ -1,0 +1,22 @@
+"""Core of the reproduction: random-bases optimization (RBD/FPD/NES) with
+on-demand counter-PRNG basis generation and shared-seed distribution."""
+
+from repro.core import compartments, distributed, nes, projector, rbd, rng
+from repro.core.compartments import Plan, make_even_plan, make_plan
+from repro.core.rbd import RandomBasesTransform, fpd
+from repro.core.rbd import rbd as rbd_transform
+
+__all__ = [
+    "Plan",
+    "RandomBasesTransform",
+    "compartments",
+    "distributed",
+    "fpd",
+    "make_even_plan",
+    "make_plan",
+    "nes",
+    "projector",
+    "rbd",
+    "rbd_transform",
+    "rng",
+]

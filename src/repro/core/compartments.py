@@ -1,0 +1,253 @@
+"""Compartmentalization plans (paper section 3.1.1).
+
+A *compartment* is a contiguous piece of the parameter space that gets its
+own independent random basis of dimensionality ``d_k``.  The paper shows
+that limiting the dimensionality of randomization (many small compartments
+instead of one global basis) improves both accuracy and wall-clock.
+
+Plans supported:
+
+* ``global``    -- one compartment over the whole (flattened) network;
+                   this is the construction of Li et al. (FPD) and the
+                   plain RBD baseline.
+* ``even``      -- K evenly sized compartments over the flattened space
+                   (paper Fig. 4).
+* ``leaf``      -- one compartment per parameter tensor (pytree leaf).
+* ``layer``     -- like ``leaf``, but leaves carrying a stacked layer axis
+                   (scan-over-layers parameter stacks of shape (L, ...))
+                   get one *independent* compartment per layer, which is
+                   the paper's "layer-wise compartmentalization".
+
+Coefficient allocation (paper: "bases dimension in each compartment can be
+adjusted dynamically based on the number of parameters"):
+
+* ``proportional`` -- d_k ~ Q_k (paper's ResNet scheme)
+* ``sqrt``         -- d_k ~ sqrt(Q_k)  (favors small tensors)
+* ``uniform``      -- equal d_k per compartment
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Projection plan for one pytree leaf.
+
+    A leaf of shape (L, ...) with ``stacked=True`` is treated as L
+    independent compartments of size ``size`` each, every one with its
+    own basis of ``dim`` directions and its own PRNG stream (seed folded
+    with the layer index).  An unstacked leaf is a single compartment.
+    """
+
+    name: str
+    leaf_idx: int
+    shape: tuple[int, ...]
+    stacked: bool
+    n_stack: int           # number of compartments carried by this leaf
+    size: int              # flat size per compartment
+    dim: int               # d_k per compartment
+    seed_tag: int          # unique per-leaf PRNG domain separator
+
+    @property
+    def n_coeffs(self) -> int:
+        return self.n_stack * self.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    leaves: tuple[LeafPlan, ...]
+    total_dim: int                     # sum of all trainable coefficients
+    total_params: int
+    distribution: str = "normal"
+    normalization: str = "rsqrt_dim"   # "exact" | "rsqrt_dim" | "none"
+                                       # | "orthonormal"
+    # global/even granularity: the pytree is raveled into one (K, D/K)
+    # virtual leaf (zero-padded by ``pad``); the projector handles the
+    # flatten/unflatten transparently.
+    flatten: bool = False
+    pad: int = 0
+
+    @property
+    def reduction_factor(self) -> float:
+        return self.total_params / max(self.total_dim, 1)
+
+    def describe(self) -> str:
+        lines = [
+            f"Plan: D={self.total_params:,} -> d={self.total_dim:,} "
+            f"({self.reduction_factor:.1f}x reduction), "
+            f"dist={self.distribution}, norm={self.normalization}"
+        ]
+        for lp in self.leaves:
+            lines.append(
+                f"  {lp.name}: shape={lp.shape} "
+                f"{'stacked L=' + str(lp.n_stack) if lp.stacked else 'single'}"
+                f" Q={lp.size:,} d_k={lp.dim}"
+            )
+        return "\n".join(lines)
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _allocate(weights: np.ndarray, total_dim: int, min_dim: int) -> np.ndarray:
+    """Largest-remainder allocation of total_dim coefficients by weight."""
+    w = weights / weights.sum()
+    raw = w * total_dim
+    dims = np.maximum(np.floor(raw).astype(int), min_dim)
+    # distribute the remainder to the largest fractional parts
+    deficit = total_dim - dims.sum()
+    if deficit > 0:
+        order = np.argsort(-(raw - np.floor(raw)))
+        for i in range(deficit):
+            dims[order[i % len(dims)]] += 1
+    return dims
+
+
+def make_plan(
+    params: Any,
+    total_dim: int,
+    *,
+    granularity: str = "layer",
+    allocation: str = "proportional",
+    distribution: str = "normal",
+    normalization: str = "rsqrt_dim",
+    is_stacked: Callable[[str], bool] | None = None,
+    min_dim: int = 1,
+    n_compartments: int = 1,
+) -> Plan:
+    """Build a compartment plan for a parameter pytree.
+
+    ``is_stacked(name)`` marks leaves whose leading axis is a scan-stacked
+    layer axis (granularity="layer" splits those into per-layer
+    compartments).  ``total_dim`` counts ALL trainable coefficients across
+    all compartments, matching the paper's accounting (e.g. layer-wise
+    d=250 x 5 layers = 1250 trainable parameters).
+    """
+    if granularity not in ("global", "even", "leaf", "layer"):
+        raise ValueError(f"unknown granularity {granularity!r}")
+    if allocation not in ("proportional", "sqrt", "uniform"):
+        raise ValueError(f"unknown allocation {allocation!r}")
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    names = [_leaf_name(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+
+    if granularity in ("global", "even"):
+        # ONE basis over the raveled parameter vector (Li et al. / paper
+        # baseline), or K even compartments of it (paper Fig. 4).  The
+        # projector flattens/unflattens; zero-padding makes K | D.
+        k = 1 if granularity == "global" else max(1, n_compartments)
+        d_total = int(sum(np.prod(l.shape, dtype=np.int64) for l in leaves))
+        pad = (-d_total) % k
+        size = (d_total + pad) // k
+        lp = LeafPlan(
+            name="<flat>", leaf_idx=0, shape=(k, size), stacked=(k > 1),
+            n_stack=k, size=size, dim=min(max(min_dim, total_dim // k),
+                                          size),
+            seed_tag=0,
+        )
+        return Plan(
+            leaves=(lp,), total_dim=lp.n_coeffs, total_params=d_total,
+            distribution=distribution, normalization=normalization,
+            flatten=True, pad=pad,
+        )
+
+    entries = []  # (name, leaf_idx, shape, stacked, n_stack, size)
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        shape = tuple(leaf.shape)
+        stacked = (
+            granularity == "layer"
+            and is_stacked is not None
+            and is_stacked(name)
+            and len(shape) >= 2
+        )
+        if stacked:
+            n_stack = shape[0]
+            size = int(np.prod(shape[1:], dtype=np.int64))
+        else:
+            n_stack = 1
+            size = int(np.prod(shape, dtype=np.int64))
+        entries.append((name, i, shape, stacked, n_stack, size))
+
+    total_params = sum(n * s for *_, n, s in entries)
+
+    if allocation == "proportional":
+        weights = np.array([n * s for *_, n, s in entries], dtype=np.float64)
+    elif allocation == "sqrt":
+        weights = np.sqrt(np.array([n * s for *_, n, s in entries], dtype=np.float64))
+    else:
+        weights = np.ones(len(entries), dtype=np.float64)
+
+    # allocate per-leaf coefficient budgets, then split across the stack
+    budgets = _allocate(weights, total_dim, min_dim)
+    plans = []
+    for (name, idx, shape, stacked, n_stack, size), budget in zip(entries, budgets):
+        dim = max(min_dim, int(round(budget / n_stack)))
+        dim = min(dim, size)  # never more directions than parameters
+        plans.append(
+            LeafPlan(
+                name=name,
+                leaf_idx=idx,
+                shape=shape,
+                stacked=stacked,
+                n_stack=n_stack,
+                size=size,
+                dim=dim,
+                seed_tag=idx,
+            )
+        )
+
+    actual_total = sum(p.n_coeffs for p in plans)
+    return Plan(
+        leaves=tuple(plans),
+        total_dim=actual_total,
+        total_params=total_params,
+        distribution=distribution,
+        normalization=normalization,
+    )
+
+
+def make_even_plan(
+    n_params: int,
+    n_compartments: int,
+    total_dim: int,
+    *,
+    distribution: str = "normal",
+    normalization: str = "rsqrt_dim",
+) -> Plan:
+    """Plan for K even compartments over a single flattened vector
+    (paper Fig. 4).  The caller flattens the pytree with
+    ``utils.ravel_pytree`` and treats it as one leaf of shape
+    (K, n_params/K) -- i.e. a 'stacked' leaf whose stack axis is the
+    compartment axis."""
+    if n_params % n_compartments != 0:
+        raise ValueError(
+            f"even plan requires K | D (got D={n_params}, K={n_compartments}); "
+            "pad the flattened vector first"
+        )
+    size = n_params // n_compartments
+    dim = max(1, total_dim // n_compartments)
+    lp = LeafPlan(
+        name="flat",
+        leaf_idx=0,
+        shape=(n_compartments, size),
+        stacked=True,
+        n_stack=n_compartments,
+        size=size,
+        dim=min(dim, size),
+        seed_tag=0,
+    )
+    return Plan(
+        leaves=(lp,),
+        total_dim=lp.n_coeffs,
+        total_params=n_params,
+        distribution=distribution,
+        normalization=normalization,
+    )

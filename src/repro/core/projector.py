@@ -1,0 +1,400 @@
+"""Projection into / reconstruction from on-demand random bases.
+
+For one compartment of Q parameters with a basis of d directions, the
+virtual basis matrix P has shape (d, Q); element (i, j) is a pure function
+of (seed, counters=(j, i)) -- see ``core.rng``.  Nothing of P is ever stored:
+
+  project:      u_i = <phi_i, g>            (u = P @ g)       -> (d,)
+  reconstruct:  delta = sum_i s_i phi_i     (delta = s @ P)   -> (Q,)
+
+with normalization handled outside the generation:
+
+  * ``rsqrt_dim``: phi_hat = phi / sqrt(Q)  (E||phi||=sqrt(Q); exact to
+    O(Q^-1/2), the production default)
+  * ``exact``:     phi_hat = phi / ||phi||  (norms computed alongside the
+    projection pass from the same regenerated rows)
+  * ``none``:      raw Gaussian rows
+
+Chunking is over the DIRECTION axis (rows of P): a (dir_chunk, Q) block is
+generated, consumed, and discarded per scan step.  Chunking over rows --
+not positions -- keeps the position axis intact, which matters under
+pjit/shard_map: a Q-sharded gradient contracts with a Q-sharded generated
+block shard-locally, the only collective being a (dir_chunk,)-sized psum.
+The Pallas TPU kernels in ``repro.kernels`` implement the same contract
+with explicit VMEM tiling; this module is the pure-jnp path (also the
+oracle the kernels are tested against).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng
+from repro.core.compartments import LeafPlan, Plan
+
+# Rows of the virtual basis matrix generated per scan step.  The live
+# block is (chunk x Q): small enough to bound memory for huge leaves,
+# large enough to amortize scan overhead.  8 is the floor (f32 sublane
+# count); the budget widens chunks for small compartments.
+DIR_CHUNK = 8
+_BLOCK_BUDGET = 1 << 24  # max live basis elements per chunk (64 MiB f32)
+
+# How the jnp path contracts the generated block against the gradient.
+# "elementwise" (multiply + reduce) keeps the SPMD partitioner aligned
+# with the gradient's sharding -- the only collective is the
+# (chunk,)-sized partial-sum all-reduce.  "dot" (dot_general) lets the
+# partitioner choose and was measured to re-shard the generated block
+# (3 x 235 MB all-reduces x 768 loop trips on qwen2-0.5b train_4k --
+# see EXPERIMENTS.md §Perf iteration 1).  On real TPU the Pallas kernel
+# backend supersedes both.
+CONTRACTION = "elementwise"
+
+
+def _chunk_rows(dim: int, q: int) -> int:
+    r = max(DIR_CHUNK, min(dim, _BLOCK_BUDGET // max(q, 1)))
+    return (r // DIR_CHUNK) * DIR_CHUNK
+
+
+def _padded_dim(d: int, chunk: int = DIR_CHUNK) -> int:
+    return ((d + chunk - 1) // chunk) * chunk
+
+
+def _leaf_seed(base_seed, lp: LeafPlan):
+    return rng.fold_seed(base_seed, lp.seed_tag)
+
+
+def _stack_seeds(leaf_seed, n_stack: int):
+    """Independent PRNG streams per stacked compartment (layer)."""
+    return jax.vmap(lambda i: rng.fold_seed(leaf_seed, i))(
+        jnp.arange(n_stack, dtype=jnp.uint32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-compartment primitives (flat gradient of size Q)
+# ---------------------------------------------------------------------------
+
+
+def _project_flat(seed, g, dim: int, distribution: str):
+    """u = P @ g and row sum-of-squares, chunked over directions.
+
+    ``g`` may have ANY shape; it is treated as one compartment of
+    Q = g.size parameters without being flattened -- basis rows are
+    generated tensor-shaped from linear-position counters, so a sharded
+    gradient projects shard-locally (the contraction reduces over all of
+    g's axes; under pjit the only collective is a (DIR_CHUNK,) psum).
+
+    Returns (u, sq) of shape (dim,) each (unnormalized projection and
+    squared row norms; sq is consumed by the 'exact' normalization).
+    """
+    tail = tuple(g.shape)
+    axes = tuple(range(len(tail)))
+    q = int(np.prod(tail)) if tail else 1
+    chunk = _chunk_rows(dim, q)
+    d_pad = _padded_dim(dim, chunk)
+    n_chunks = d_pad // chunk
+    g = g.astype(jnp.float32)
+
+    def panel(row0):
+        block = rng.generate_rows_nd(seed, row0, chunk, tail, distribution)
+        red = tuple(a + 1 for a in axes)
+        if CONTRACTION == "elementwise":
+            u = jnp.sum(block * g[None], axis=red)
+        else:
+            u = jax.lax.dot_general(
+                block, g,
+                dimension_numbers=((red, axes), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        sq = jnp.sum(block * block, axis=red)
+        return u, sq
+
+    if n_chunks == 1:
+        u, sq = panel(jnp.uint32(0))
+        return u[:dim], sq[:dim]
+
+    def body(carry, i):
+        return carry, panel(i * chunk)
+
+    _, (u, sq) = jax.lax.scan(
+        body, None, jnp.arange(n_chunks, dtype=jnp.uint32)
+    )
+    return u.reshape(-1)[:dim], sq.reshape(-1)[:dim]
+
+
+def _reconstruct_flat(seed, scale, tail, distribution: str, dtype):
+    """delta = scale @ P, chunked over directions.  ``scale`` has shape
+    (dim,) and already folds in learning-rate / normalization factors.
+    ``tail`` is the compartment's tensor shape (or an int for flat)."""
+    tail = (tail,) if isinstance(tail, int) else tuple(tail)
+    dim = scale.shape[0]
+    q = int(np.prod(tail)) if tail else 1
+    chunk = _chunk_rows(dim, q)
+    d_pad = _padded_dim(dim, chunk)
+    s = jnp.zeros((d_pad,), jnp.float32).at[:dim].set(scale.astype(jnp.float32))
+    n_chunks = d_pad // chunk
+
+    def panel(row0, sc):
+        block = rng.generate_rows_nd(seed, row0, chunk, tail, distribution)
+        if CONTRACTION == "elementwise":
+            return jnp.sum(
+                sc.reshape((chunk,) + (1,) * len(tail)) * block, axis=0)
+        return jnp.tensordot(sc, block, axes=((0,), (0,)))
+
+    if n_chunks == 1:
+        return panel(jnp.uint32(0), s).astype(dtype)
+
+    s_chunks = s.reshape(n_chunks, chunk)
+
+    def body(acc, xs):
+        i, sc = xs
+        return acc + panel(i * chunk, sc), None
+
+    # `+ 0 * s[0]` keeps the carry's varying-manual-axes (vma) type aligned
+    # with the body output when this runs inside shard_map (the scale may be
+    # device-varying after an all_gather of coordinates).
+    init = jnp.zeros(tail, jnp.float32) + 0.0 * s[0]
+    acc, _ = jax.lax.scan(
+        body,
+        init,
+        (jnp.arange(n_chunks, dtype=jnp.uint32), s_chunks),
+    )
+    return acc.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# explicit orthogonalization (paper §5 / B.8 future work, ref [7])
+# ---------------------------------------------------------------------------
+
+_ORTHO_BUDGET = 1 << 24  # max materialized d*Q elements per compartment
+
+
+def _ortho_basis(seed, dim: int, tail, distribution: str):
+    """Deterministically orthonormalized basis rows for one compartment.
+
+    Materializes the (dim, Q) block and QR-orthonormalizes the rows --
+    only valid for small/compartmentalized spaces (paper B.8: explicit
+    orthogonalization should help exactly there).  Deterministic in the
+    seed, so distributed workers regenerate identical orthonormal bases.
+    """
+    q = int(np.prod(tail)) if tail else 1
+    if dim * q > _ORTHO_BUDGET:
+        raise ValueError(
+            f"orthonormal normalization materializes d*Q = {dim * q:,} "
+            f"elements; compartmentalize below {_ORTHO_BUDGET:,} first")
+    p = rng.generate_rows_nd(seed, 0, dim, tuple(tail),
+                             distribution).reshape(dim, q)
+    qmat, r = jnp.linalg.qr(p.T)           # (q, dim), orthonormal columns
+    # fix the sign ambiguity so the basis is a pure function of the seed
+    sign = jnp.sign(jnp.diagonal(r))
+    return (qmat * sign).T                  # (dim, q) orthonormal rows
+
+
+def _project_ortho(seed, g, dim: int, distribution: str):
+    tail = tuple(g.shape)
+    b = _ortho_basis(seed, dim, tail, distribution)
+    u = b @ g.reshape(-1).astype(jnp.float32)
+    return u, jnp.ones_like(u)
+
+
+def _reconstruct_ortho(seed, scale, tail, distribution: str, dtype):
+    tail = (tail,) if isinstance(tail, int) else tuple(tail)
+    b = _ortho_basis(seed, scale.shape[0], tail, distribution)
+    return (scale.astype(jnp.float32) @ b).reshape(tail).astype(dtype)
+
+
+def _norm_scales(plan: Plan, lp: LeafPlan, u, sq):
+    """Apply normalization to raw projections.
+
+    Returns (coords, recon_scale_factor) where the final update is
+    ``recon_scale = coords * factor`` fed to reconstruction, i.e.
+    delta = sum_i coords_i * phi_i * factor_i = coords_scaled @ P.
+    """
+    if plan.normalization == "rsqrt_dim":
+        inv = np.float32(1.0 / np.sqrt(lp.size))
+        return u * inv, inv
+    if plan.normalization == "exact":
+        inv = jax.lax.rsqrt(jnp.maximum(sq, 1e-30))
+        return u * inv, inv
+    # "none" and "orthonormal" (already unit rows) pass through
+    return u, np.float32(1.0)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level API
+# ---------------------------------------------------------------------------
+
+
+def _ravel_tree(tree, plan: Plan):
+    """Pytree -> the (K, size) virtual leaf of a flatten plan."""
+    vec = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(tree)])
+    if plan.pad:
+        vec = jnp.concatenate([vec, jnp.zeros((plan.pad,), jnp.float32)])
+    lp = plan.leaves[0]
+    return vec.reshape(lp.n_stack, lp.size)
+
+
+def _unravel_tree(flat2d, plan: Plan, params_like):
+    vec = flat2d.reshape(-1)
+    if plan.pad:
+        vec = vec[: vec.shape[0] - plan.pad]
+    leaves = jax.tree_util.tree_leaves(params_like)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(vec[off: off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_like), out)
+
+
+def project(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
+            return_norms: bool = False):
+    """Project a gradient pytree onto the plan's random bases.
+
+    Returns a list (one entry per LeafPlan) of coordinate arrays of shape
+    (n_stack, dim) -- the ONLY quantity a distributed worker communicates.
+    With ``return_norms=True`` additionally returns the squared row norms
+    (same shapes) so a colocated reconstruction can reuse them instead of
+    regenerating the basis a third time ('exact' normalization).
+    """
+    proj_flat = _get_backend(backend).project_flat
+    if plan.normalization == "orthonormal":
+        proj_flat = _project_ortho
+    if plan.flatten:
+        leaves = [_ravel_tree(grads, plan)]
+    else:
+        leaves = jax.tree_util.tree_leaves(grads)
+    coords, norms = [], []
+    for lp in plan.leaves:
+        g = leaves[lp.leaf_idx]
+        lseed = _leaf_seed(seed, lp)
+        if lp.stacked:
+            seeds = _stack_seeds(lseed, lp.n_stack)
+            u, sq = jax.vmap(
+                lambda s, gl: proj_flat(s, gl, lp.dim, plan.distribution)
+            )(seeds, g)
+        else:
+            u, sq = proj_flat(lseed, g, lp.dim, plan.distribution)
+            u, sq = u[None], sq[None]
+        c, _ = _norm_scales(plan, lp, u, sq)
+        coords.append(c)
+        norms.append(sq)
+    if return_norms:
+        return coords, norms
+    return coords
+
+
+def reconstruct(coords: list, plan: Plan, seed, params_like: Any,
+                *, backend: str = "jnp", row_sq: list | None = None) -> Any:
+    """Map coordinates back to a full-space update pytree.
+
+    ``coords`` are normalized coordinates as returned by :func:`project`;
+    the result is sum_i c_i phi_hat_i per compartment, assembled into a
+    pytree shaped like ``params_like``.  For 'exact' normalization,
+    ``row_sq`` (from ``project(..., return_norms=True)``) avoids a
+    regeneration pass; a remote worker that only received coordinates
+    passes None and regenerates.
+    """
+    recon_flat = _get_backend(backend).reconstruct_flat
+    proj_flat = _get_backend(backend).project_flat
+    if plan.normalization == "orthonormal":
+        recon_flat, proj_flat = _reconstruct_ortho, _project_ortho
+
+    def one_leaf(lp: LeafPlan, c, sq_i, ref_dtype):
+        lseed = _leaf_seed(seed, lp)
+        if lp.stacked:
+            seeds = _stack_seeds(lseed, lp.n_stack)
+            tail = lp.shape[1:]
+
+            def one(s, ci, sqi):
+                scale = _recon_scale(plan, lp, s, ci, proj_flat, sqi)
+                return recon_flat(s, scale, tail, plan.distribution,
+                                  jnp.float32)
+
+            if sq_i is None:
+                delta = jax.vmap(lambda s, ci: one(s, ci, None))(seeds, c)
+            else:
+                delta = jax.vmap(one)(seeds, c, sq_i)
+            return delta.astype(ref_dtype)
+        scale = _recon_scale(plan, lp, lseed, c[0], proj_flat,
+                             None if sq_i is None else sq_i[0])
+        return recon_flat(lseed, scale, lp.shape, plan.distribution,
+                          jnp.float32).astype(ref_dtype)
+
+    if plan.flatten:
+        lp = plan.leaves[0]
+        sq0 = row_sq[0] if row_sq is not None else None
+        flat_upd = one_leaf(lp, coords[0], sq0, jnp.float32)
+        return _unravel_tree(flat_upd, plan, params_like)
+
+    leaves = jax.tree_util.tree_leaves(params_like)
+    treedef = jax.tree_util.tree_structure(params_like)
+    out = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+    for i, (lp, c) in enumerate(zip(plan.leaves, coords)):
+        sq_i = row_sq[i] if row_sq is not None else None
+        delta = one_leaf(lp, c, sq_i, leaves[lp.leaf_idx].dtype)
+        out[lp.leaf_idx] = out[lp.leaf_idx] + delta
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _recon_scale(plan: Plan, lp: LeafPlan, seed, coords, proj_flat,
+                 sq=None):
+    """Per-direction reconstruction scales, folding in normalization.
+
+    With phi_hat = phi * f (f = 1/sqrt(Q) or 1/||phi||), the update is
+    sum_i c_i f_i phi_i, so the scale fed to the raw-basis reconstruction
+    is c * f.
+    """
+    if plan.normalization == "rsqrt_dim":
+        return coords * np.float32(1.0 / np.sqrt(lp.size))
+    if plan.normalization == "exact":
+        if sq is None:
+            # row norms regenerate deterministically from the seed
+            tail = lp.shape[1:] if lp.stacked else lp.shape
+            _, sq = proj_flat(seed, jnp.zeros(tail, jnp.float32), lp.dim,
+                              plan.distribution)
+        return coords * jax.lax.rsqrt(jnp.maximum(sq, 1e-30))
+    return coords
+
+
+def rbd_gradient(grads: Any, plan: Plan, seed, *, backend: str = "jnp") -> Any:
+    """The full RBD low-rank gradient sketch:  P_hat^T P_hat g  (paper
+    eq. for g^RBD).  Projection immediately followed by reconstruction,
+    reusing the projection pass's row norms (exact mode)."""
+    coords, norms = project(grads, plan, seed, backend=backend,
+                            return_norms=True)
+    return reconstruct(coords, plan, seed, grads, backend=backend,
+                       row_sq=norms)
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch (jnp reference vs Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+class _JnpBackend:
+    project_flat = staticmethod(_project_flat)
+    reconstruct_flat = staticmethod(_reconstruct_flat)
+
+
+@functools.cache
+def _get_backend(name: str):
+    if name == "jnp":
+        return _JnpBackend
+    if name == "pallas":
+        from repro.kernels import ops  # deferred: kernels import pallas
+
+        class _PallasBackend:
+            project_flat = staticmethod(ops.project_flat)
+            reconstruct_flat = staticmethod(ops.reconstruct_flat)
+
+        return _PallasBackend
+    raise ValueError(f"unknown projector backend {name!r}")

@@ -1,0 +1,86 @@
+"""RBD / FPD as composable gradient transforms.
+
+The paper's method slots into a standard training loop as a gradient
+transform: backprop produces the full-space gradient g (never communicated
+in the distributed setting), the transform replaces it with the random
+low-rank sketch
+
+    g_RBD = P_hat_t^T P_hat_t g         (basis re-drawn every step)
+    g_FPD = P_hat^T  P_hat  g           (basis fixed at step 0)
+
+FPD with a fixed seed is *exactly* Li et al.'s fixed-projection descent:
+theta_t = theta_0 + P c_t  with  c updated by its gradient, because
+c_{t+1} = c_t - eta P^T g  implies  theta_{t+1} = theta_t - eta P P^T g.
+
+This identity (redraw toggles RBD vs FPD) is the cleanest expression of the
+paper's central claim and is property-tested in tests/test_rbd_math.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projector, rng
+from repro.core.compartments import Plan
+
+
+class RBDState(NamedTuple):
+    step: jax.Array  # uint32 step counter (folds into the per-step seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomBasesTransform:
+    """Gradient transform implementing RBD (redraw=True) or FPD (False).
+
+    Usage (mirrors optax's GradientTransformation contract):
+
+        t = RandomBasesTransform(plan, base_seed=0, redraw=True)
+        state = t.init(params)
+        sketch, state = t.update(grads, state)
+        params = tree_map(lambda p, u: p - lr * u, params, sketch)
+    """
+
+    plan: Plan
+    base_seed: int = 0
+    redraw: bool = True
+    backend: str = "jnp"
+
+    def init(self, params: Any) -> RBDState:
+        del params
+        return RBDState(step=jnp.zeros((), jnp.uint32))
+
+    def step_seed(self, step):
+        if self.redraw:
+            return rng.fold_seed(self.base_seed, step)
+        return rng.fold_seed(self.base_seed, jnp.zeros((), jnp.uint32))
+
+    def update(self, grads: Any, state: RBDState, params: Any = None):
+        del params
+        seed = self.step_seed(state.step)
+        sketch = projector.rbd_gradient(
+            grads, self.plan, seed, backend=self.backend
+        )
+        return sketch, RBDState(step=state.step + 1)
+
+    # split-phase API for the distributed path ------------------------------
+    def project(self, grads: Any, state: RBDState):
+        seed = self.step_seed(state.step)
+        return projector.project(grads, self.plan, seed, backend=self.backend)
+
+    def reconstruct(self, coords, state: RBDState, params_like: Any):
+        seed = self.step_seed(state.step)
+        return projector.reconstruct(
+            coords, self.plan, seed, params_like, backend=self.backend
+        )
+
+
+def rbd(plan: Plan, base_seed: int = 0, backend: str = "jnp"):
+    return RandomBasesTransform(plan, base_seed, redraw=True, backend=backend)
+
+
+def fpd(plan: Plan, base_seed: int = 0, backend: str = "jnp"):
+    return RandomBasesTransform(plan, base_seed, redraw=False, backend=backend)

@@ -1,0 +1,230 @@
+"""Counter-based PRNG for on-demand random-basis generation.
+
+The paper's implementation insight is that the D x d projection matrix is
+never materialized: every element is a pure function of (seed, position)
+and can be regenerated anywhere -- on any worker, any shard, forward or
+backward pass.  On the IPU this used per-core hardware PRNG; on TPU we
+express the same property with a Threefry2x32 counter hash written in
+plain uint32 jnp ops, so that the *identical* code runs
+
+  * inside a Pallas kernel body (VMEM-resident generation),
+  * in the pure-jnp oracle (``kernels/ref.py``),
+  * in sharded `shard_map` regions (counters are global positions, so a
+    shard can generate exactly its slice with no communication).
+
+``pltpu.prng_random_bits`` (true hardware PRNG) has no CPU interpret-mode
+lowering, so it is exposed behind a flag for real-TPU deployments only.
+
+All functions are deterministic, stateless and vectorized.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Distribution = Literal["normal", "uniform", "bernoulli", "rademacher",
+                       "sparse"]
+
+# Threefry constants (Salmon et al. 2011), 32-bit variant.
+_KS_PARITY = np.uint32(0x1BD11BDA)
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+
+
+def _rotl32(x, r):
+    r = np.uint32(r)
+    return (x << r) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(key0, key1, ctr0, ctr1):
+    """Threefry-2x32 block cipher: 2x32-bit key, 2x32-bit counter -> 2x32 bits.
+
+    A faithful (full 20-round, 5 four-round groups) implementation in pure
+    uint32 ops.  Matches the construction used by jax.random's default PRNG
+    (modulo key derivation), and runs unchanged inside Pallas kernels.
+    """
+    k0 = jnp.asarray(key0, jnp.uint32)
+    k1 = jnp.asarray(key1, jnp.uint32)
+    k2 = k0 ^ k1 ^ _KS_PARITY
+    x0 = jnp.asarray(ctr0, jnp.uint32) + k0
+    x1 = jnp.asarray(ctr1, jnp.uint32) + k1
+
+    ks = (k0, k1, k2)
+    for group in range(5):
+        for i in range(4):
+            x0 = x0 + x1
+            x1 = _rotl32(x1, _ROTATIONS[(4 * group + i) % 8])
+            x1 = x1 ^ x0
+        # key injection every 4 rounds
+        inj = group + 1
+        x0 = x0 + ks[inj % 3]
+        x1 = x1 + ks[(inj + 1) % 3] + np.uint32(inj)
+    return x0, x1
+
+
+def fold_seed(*parts: int | jax.Array) -> jax.Array:
+    """Fold integer components (step, worker, compartment, ...) into one
+    uint32 seed via iterated Threefry.  Deterministic across hosts."""
+    seed = jnp.asarray(np.uint32(0x243F6A88))  # pi fractional bits
+    for p in parts:
+        p32 = jnp.asarray(p, jnp.uint32)
+        a, b = threefry2x32(seed, p32, p32 ^ np.uint32(0x9E3779B9), seed)
+        seed = a ^ _rotl32(b, 16)
+    return seed
+
+
+def _bits_for_counters(seed, ctr0, ctr1=np.uint32(0)):
+    """uint32 random bits for a 2-word uint32 counter grid; two streams.
+
+    Virtual basis matrices are indexed with ctr0 = column (parameter
+    position) and ctr1 = row (direction index): no ``row * ncols + col``
+    flattening, hence no uint32 overflow for compartments with more than
+    2**32 elements, and any tile is generatable from its coordinates.
+    """
+    c0 = jnp.asarray(ctr0, jnp.uint32)
+    c1 = jnp.asarray(ctr1, jnp.uint32)
+    b0, b1 = threefry2x32(seed, seed ^ np.uint32(0x85EBCA6B), c0, c1 ^ ~c0)
+    return b0, b1
+
+
+def _uniform01(bits):
+    """uint32 bits -> float32 uniform in (0, 1).  Uses the top 24 bits to
+    stay exact in float32; offset by half an ulp so 0 is excluded (safe
+    for log() in Box-Muller)."""
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(
+        1.0 / (1 << 24)
+    ) + np.float32(0.5 / (1 << 24))
+
+
+def normal_from_counter(seed, ctr0, ctr1=np.uint32(0)):
+    """Standard normal samples keyed by (seed, counters) via Box-Muller.
+
+    Both Threefry output streams are consumed for one normal sample per
+    counter -- simple, and keeps a 1:1 counter->sample mapping which is
+    what position-keyed sharded generation needs.
+    """
+    b0, b1 = _bits_for_counters(seed, ctr0, ctr1)
+    u1 = _uniform01(b0)
+    u2 = _uniform01(b1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * np.pi) * u2)
+
+
+def uniform_from_counter(seed, ctr0, ctr1=np.uint32(0)):
+    """Uniform in [-1, 1) keyed by (seed, counters) -- paper Table 2."""
+    b0, _ = _bits_for_counters(seed, ctr0, ctr1)
+    return _uniform01(b0) * 2.0 - 1.0
+
+
+def rademacher_from_counter(seed, ctr0, ctr1=np.uint32(0)):
+    """Zero-mean Bernoulli (+-1 with p=0.5) -- paper's 'Bernoulli-0.5'."""
+    b0, _ = _bits_for_counters(seed, ctr0, ctr1)
+    return jnp.where(b0 & np.uint32(1), 1.0, -1.0).astype(jnp.float32)
+
+
+def sparse_from_counter(seed, ctr0, ctr1=np.uint32(0)):
+    """Achlioptas/Li sparse projection (paper 'future work' [24, 28]):
+    +-sqrt(3) with probability 1/6 each, 0 with probability 2/3.
+    Unit variance; 3x fewer FMAs on TPU (two-thirds of the generated
+    tile multiplies by zero and the VPU predicates them away)."""
+    b0, b1 = _bits_for_counters(seed, ctr0, ctr1)
+    u = _uniform01(b0)
+    sign = jnp.where(b1 & np.uint32(1), np.float32(np.sqrt(3.0)),
+                     np.float32(-np.sqrt(3.0)))
+    return jnp.where(u < np.float32(1.0 / 3.0), sign, 0.0)
+
+
+_GENERATORS = {
+    "normal": normal_from_counter,
+    "uniform": uniform_from_counter,
+    "bernoulli": rademacher_from_counter,
+    "rademacher": rademacher_from_counter,
+    "sparse": sparse_from_counter,
+}
+
+
+def sample_from_counter(seed, ctr0, ctr1=np.uint32(0),
+                        distribution: Distribution = "normal"):
+    return _GENERATORS[distribution](seed, ctr0, ctr1)
+
+
+def generate_block(
+    seed,
+    row_offset,
+    col_offset,
+    shape: tuple[int, int],
+    distribution: Distribution = "normal",
+    dtype=jnp.float32,
+):
+    """Generate a (rows, cols) tile of the virtual random basis matrix.
+
+    Element (i, j) of the tile is keyed by the 2-word counter
+    (col_offset + j, row_offset + i): rows are basis directions, columns
+    are parameter positions.  Any shard of any device can generate any
+    tile independently and consistently -- this function is the single
+    source of truth shared by the jnp projector, the Pallas kernel bodies
+    and the kernels' ref oracle.
+    """
+    rows, cols = shape
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    return sample_from_counter(
+        seed,
+        c + jnp.asarray(col_offset, jnp.uint32),
+        r + jnp.asarray(row_offset, jnp.uint32),
+        distribution,
+    ).astype(dtype)
+
+
+def linear_positions(tail_shape: tuple[int, ...]) -> jax.Array:
+    """Row-major linear position counters for a tensor-shaped compartment.
+
+    Built from per-axis iotas, fully partitionable: a shard holding any
+    slice of the tensor computes exactly its elements' global counters --
+    the property that lets a model-sharded gradient be projected
+    shard-locally under pjit with no gather/reshape of the tensor.
+    """
+    shape = tuple(tail_shape)
+    if (int(np.prod(shape)) if shape else 1) >= 2**32:
+        raise ValueError(f"compartment too large for uint32 counters: {shape}")
+    pos = jnp.zeros(shape, jnp.uint32)
+    stride = 1
+    for ax in range(len(shape) - 1, -1, -1):
+        pos = pos + jax.lax.broadcasted_iota(jnp.uint32, shape, ax) * np.uint32(
+            stride
+        )
+        stride *= shape[ax]
+    return pos
+
+
+def generate_rows_nd(
+    seed,
+    row_offset,
+    n_rows: int,
+    tail_shape: tuple[int, ...],
+    distribution: Distribution = "normal",
+    dtype=jnp.float32,
+):
+    """(n_rows, *tail_shape) tile of the virtual basis, tensor-shaped.
+
+    Bit-identical to ``generate_block`` of the flattened tensor: row i,
+    linear position j here equals generate_block element (i, j).
+    """
+    shape = (n_rows,) + tuple(tail_shape)
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0) + jnp.asarray(
+        row_offset, jnp.uint32
+    )
+    c = jnp.broadcast_to(linear_positions(tail_shape), shape)
+    return sample_from_counter(seed, c, r, distribution).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "distribution", "dtype"))
+def generate_vector(seed, offset, n: int, distribution: Distribution = "normal",
+                    dtype=jnp.float32):
+    """Generate n consecutive row-0 samples starting at column offset."""
+    ctr = jnp.arange(n, dtype=jnp.uint32) + jnp.asarray(offset, jnp.uint32)
+    return sample_from_counter(seed, ctr, np.uint32(0), distribution).astype(dtype)

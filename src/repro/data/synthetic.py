@@ -1,0 +1,95 @@
+"""Synthetic datasets (the container is offline; see DESIGN.md §6.3).
+
+* ``mixture_images``  -- Gaussian-mixture image classification standing in
+  for (F)MNIST / CIFAR-10 in the paper-reproduction experiments: each
+  class is a smoothed random template plus noise, at matched input shapes
+  (28x28x1 / 32x32x3) so parameter counts equal the paper's.  Difficulty
+  is controlled by ``noise``.
+* ``token_stream``    -- synthetic LM corpus for the transformer
+  workloads: a Zipf-distributed Markov chain so that the loss is
+  learnable (not pure noise) and next-token statistics are non-trivial.
+
+Both are deterministic in their seed and generated on the fly -- no
+disk, infinitely shardable by (epoch, step, host).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=8)
+def _class_templates(seed: int, n_classes: int, shape: tuple[int, ...]):
+    rng = np.random.default_rng(seed)
+    t = rng.normal(size=(n_classes,) + shape).astype(np.float32)
+    # smooth spatially so classes have coherent low-frequency structure
+    for _ in range(3):
+        t = (t + np.roll(t, 1, axis=1) + np.roll(t, -1, axis=1)
+             + np.roll(t, 1, axis=2) + np.roll(t, -1, axis=2)) / 5.0
+    t /= t.std(axis=(1, 2, 3), keepdims=True)
+    return t
+
+
+def mixture_images(key, batch: int, *, shape=(28, 28, 1), n_classes=10,
+                   noise: float = 1.0, seed: int = 0):
+    """Returns (x: (B, *shape) f32, y: (B,) i32)."""
+    templates = jnp.asarray(_class_templates(seed, n_classes, shape))
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (batch,), 0, n_classes)
+    x = templates[y] + noise * jax.random.normal(k2, (batch,) + shape)
+    return x, y
+
+
+def mixture_dataset(seed: int, batch: int, *, shape=(28, 28, 1),
+                    n_classes=10, noise: float = 1.0) -> Iterator:
+    """Infinite iterator of (x, y) batches."""
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        yield mixture_images(key, batch, shape=shape, n_classes=n_classes,
+                             noise=noise, seed=seed)
+        step += 1
+
+
+@functools.lru_cache(maxsize=8)
+def _markov_table(seed: int, vocab: int, branch: int = 4):
+    """Sparse Markov transition structure: each token has `branch` likely
+    successors drawn from a Zipf prior."""
+    rng = np.random.default_rng(seed + 1)
+    zipf_p = 1.0 / np.arange(1, vocab + 1)
+    zipf_p /= zipf_p.sum()
+    succ = rng.choice(vocab, size=(vocab, branch), p=zipf_p)
+    return succ.astype(np.int32)
+
+
+def token_stream(key, batch: int, seq_len: int, vocab: int, *,
+                 seed: int = 0, branch: int = 4):
+    """(tokens (B, S+1) i32): Markov chains; split into inputs/labels by
+    the caller.  Vectorized over both batch and time."""
+    succ = jnp.asarray(_markov_table(seed, vocab, branch))
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, vocab)
+    choices = jax.random.randint(k1, (batch, seq_len), 0, branch)
+
+    def step(tok, choice):
+        nxt = succ[tok, choice]
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(
+        step, first, choices.T)
+    return jnp.concatenate([first[:, None], rest.T], axis=1)
+
+
+def lm_batches(seed: int, batch: int, seq_len: int, vocab: int) -> Iterator:
+    """Infinite iterator of {"tokens", "labels"} LM batches."""
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        toks = token_stream(key, batch, seq_len, vocab, seed=seed)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        step += 1

@@ -1,0 +1,131 @@
+"""Pallas TPU flash-attention (forward) for the prefill hot path.
+
+Online-softmax blockwise attention with explicit VMEM tiling: grid
+(batch*kv_heads*q_groups, q_blocks, kv_blocks), the innermost kv axis
+accumulating into VMEM scratch (running max / denominator / weighted
+values) so the (S, S) score matrix never exists and HBM traffic is one
+pass over Q/K/V plus one write of O.
+
+Supports causal masking and the framework's sliding-window patterns
+(static window; the per-layer global/local flag is resolved before the
+call).  GQA is handled by flattening query heads into (KV, G) groups:
+the kernel instance for group (b, kv, g) reads K/V block (b, kv).
+
+The jnp oracle is ``repro.models.attention.flash_attention`` (itself
+tested against naive attention); interpret=True validation lives in
+tests/test_flash_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+Q_BLOCK = 128
+KV_BLOCK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  causal: bool, window, sq: int, sk: int,
+                  q_block: int, kv_block: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                  # (q_block, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (kv_block, hd)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                         # (q_block, kv_block)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    mask = k_pos < sk
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_sc[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_sc[...]
+                    / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block",
+                     "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_block: int = Q_BLOCK, kv_block: int = KV_BLOCK,
+                    interpret: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+
+    q_pad = (-sq) % q_block
+    kv_pad = (-sk) % kv_block
+    # (B*KV*G, Sq_pad, hd) query rows; K/V stay (B*KV, Sk_pad, hd)
+    qf = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    qf = qf.transpose(0, 2, 1, 3).reshape(b * h, sq + q_pad, hd)
+    kf = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    kf = kf.transpose(0, 2, 1, 3).reshape(b * kv, sk + kv_pad, hd)
+    vf = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    vf = vf.transpose(0, 2, 1, 3).reshape(b * kv, sk + kv_pad, hd)
+
+    grid = (b * h, (sq + q_pad) // q_block, (sk + kv_pad) // kv_block)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, window=window, sq=sq, sk=sk,
+            q_block=q_block, kv_block=kv_block, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + q_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sq + q_pad, hd).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the RBD Pallas kernels.
+
+These present the same (seed, flat-array) contract as the jnp projector
+primitives, so ``projector.project(..., backend="pallas")`` swaps them in
+transparently.  ``INTERPRET`` defaults to True on CPU hosts (this
+container) and should be set False on real TPU via
+``repro.kernels.ops.set_interpret(False)`` or the REPRO_PALLAS_INTERPRET
+environment variable.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import rbd_project, rbd_reconstruct
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = value
+
+
+def project_flat(seed, g, dim: int, distribution: str = "normal"):
+    """Tensor-shaped compartment contract (same as the jnp projector):
+    linear positions are row-major, so flattening before the kernel is
+    bit-identical to the jnp backend's tensor-shaped generation."""
+    return rbd_project.project_flat(
+        seed, g.reshape(-1), dim, distribution, interpret=_INTERPRET
+    )
+
+
+def reconstruct_flat(seed, scale, tail, distribution: str = "normal",
+                     dtype=None):
+    import math
+
+    import jax.numpy as jnp
+
+    tail = (tail,) if isinstance(tail, int) else tuple(tail)
+    q = math.prod(tail) if tail else 1
+    out = rbd_reconstruct.reconstruct_flat(
+        seed, scale, q, distribution, dtype or jnp.float32,
+        interpret=_INTERPRET,
+    )
+    return out.reshape(tail)
+
+
+def reconstruct_apply_flat(seed, scale, theta_flat, eta,
+                           distribution: str = "normal"):
+    return rbd_reconstruct.reconstruct_apply_flat(
+        seed, scale, theta_flat, eta, distribution, interpret=_INTERPRET
+    )

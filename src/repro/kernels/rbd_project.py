@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused basis-generation + projection  u = P @ g.
+
+The virtual basis matrix P (d_pad, Q_pad) is never materialized in HBM:
+each grid step generates one (DB, PB) tile directly in VMEM from the
+Threefry counter hash (``repro.core.rng`` -- the identical code runs here
+and in the oracle), multiplies it against the resident gradient tile on
+the MXU, and accumulates into the (DB, 1) output block.  HBM traffic is
+exactly one read of g and one write of u; the basis costs compute only.
+This is the TPU-native translation of the paper's IPU hardware-PRNG
+insight (substitute fast local generation for memory/communication).
+
+Grid: (n_dir_blocks, n_pos_blocks); the position axis is innermost so the
+output block for direction-block ``di`` stays resident in VMEM across the
+whole accumulation sweep.
+
+On real TPU hardware, set ``use_hw_prng=True`` to generate raw bits with
+``pltpu.prng_random_bits`` instead of in-kernel Threefry (faster, but not
+interpretable on CPU and not bit-stable across generations -- the
+framework default stays Threefry for reproducibility).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import rng
+
+# MXU-aligned defaults: 8 sublanes x 128 lanes minimum tile for f32.
+DIR_BLOCK = 8      # rows of P per tile (matches projector.DIR_CHUNK)
+POS_BLOCK = 512    # parameter positions per tile (multiple of 128)
+
+
+def _project_kernel(seed_ref, g_ref, u_ref, sq_ref, *, q: int,
+                    pos_block: int, distribution: str, use_hw_prng: bool):
+    di = pl.program_id(0)
+    pj = pl.program_id(1)
+    seed = seed_ref[0]
+
+    db, pb = u_ref.shape[0], pos_block
+    if use_hw_prng:  # pragma: no cover - requires real TPU
+        from jax.experimental.pallas import tpu as pltpu
+
+        pltpu.prng_seed(seed, di, pj)
+        bits = pltpu.prng_random_bits((db, pb))
+        block = rng._uniform01(bits.astype(jnp.uint32))
+        bits2 = pltpu.prng_random_bits((db, pb))
+        u2 = rng._uniform01(bits2.astype(jnp.uint32))
+        r = jnp.sqrt(-2.0 * jnp.log(block))
+        block = r * jnp.cos((2.0 * np.pi) * u2)
+    else:
+        block = rng.generate_block(
+            seed,
+            di * db,
+            pj * pb,
+            (db, pb),
+            distribution,
+        )
+
+    # mask padded columns (q may not divide POS_BLOCK); the gradient is
+    # zero-padded by the wrapper so u is unaffected, but the row norms must
+    # exclude the padding.
+    cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) + pj * pb
+    valid = cols < q
+    block = jnp.where(valid, block, 0.0)
+
+    g = g_ref[...].astype(jnp.float32)            # (1, pb)
+    part_u = jax.lax.dot_general(
+        block, g,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (db, 1)
+    part_sq = jnp.sum(block * block, axis=1, keepdims=True)
+
+    @pl.when(pj == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    u_ref[...] += part_u
+    sq_ref[...] += part_sq
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dim", "distribution", "interpret", "use_hw_prng",
+                     "dir_block", "pos_block"),
+)
+def project_flat(
+    seed,
+    g_flat,
+    dim: int,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    use_hw_prng: bool = False,
+    dir_block: int = DIR_BLOCK,
+    pos_block: int = POS_BLOCK,
+):
+    """Kernel-backed equivalent of ``projector._project_flat``.
+
+    Returns (u, sq) of shape (dim,): raw projections and squared row
+    norms.  ``interpret=True`` runs the kernel body in Python on CPU --
+    the validation mode for this container; on TPU pass interpret=False.
+    """
+    q = g_flat.shape[0]
+    d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
+    q_pad = ((q + pos_block - 1) // pos_block) * pos_block
+    g = jnp.zeros((1, q_pad), jnp.float32).at[0, :q].set(
+        g_flat.astype(jnp.float32)
+    )
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1)
+
+    grid = (d_pad // dir_block, q_pad // pos_block)
+    u, sq = pl.pallas_call(
+        functools.partial(
+            _project_kernel,
+            q=q,
+            pos_block=pos_block,
+            distribution=distribution,
+            use_hw_prng=use_hw_prng,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda di, pj: (0,)),            # seed
+            pl.BlockSpec((1, pos_block), lambda di, pj: (0, pj)),  # g
+        ],
+        out_specs=[
+            pl.BlockSpec((dir_block, 1), lambda di, pj: (di, 0)),  # u
+            pl.BlockSpec((dir_block, 1), lambda di, pj: (di, 0)),  # sq
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed_arr, g)
+    return u[:dim, 0], sq[:dim, 0]

@@ -1,0 +1,171 @@
+"""Pallas TPU kernels: fused basis-generation + reconstruction.
+
+  reconstruct:        delta = s @ P                      (s: (d,))
+  reconstruct_apply:  theta' = theta - eta * (s @ P)     (fused axpy)
+
+P tiles are regenerated in VMEM with the same counter scheme as the
+projection kernel -- forward and backward passes of the paper's scheme
+regenerate identical bases from the seed, nothing is stored.
+
+Grid: (n_pos_blocks, n_dir_blocks) with the direction axis innermost, so
+each (1, PB) output block accumulates over all direction blocks while
+resident in VMEM.  The fused-apply variant additionally streams theta
+through VMEM once, saving a full HBM round-trip of the update vector
+(2 x 4 x D bytes) versus reconstruct-then-axpy -- on a memory-bound
+optimizer step that is a ~2x traffic reduction for the update stage.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import rng
+from repro.kernels.rbd_project import DIR_BLOCK, POS_BLOCK
+
+
+def _recon_kernel(seed_ref, s_ref, out_ref, *, dir_block: int,
+                  distribution: str):
+    pj = pl.program_id(0)
+    di = pl.program_id(1)
+    seed = seed_ref[0]
+    pb = out_ref.shape[1]
+
+    block = rng.generate_block(
+        seed, di * dir_block, pj * pb, (dir_block, pb), distribution
+    )
+    s = s_ref[...].astype(jnp.float32)  # (1, dir_block)
+    part = jax.lax.dot_general(
+        s, block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, pb)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += part
+
+
+def _recon_apply_kernel(seed_ref, s_ref, theta_ref, eta_ref, out_ref, *,
+                        dir_block: int, n_dir_blocks: int,
+                        distribution: str):
+    pj = pl.program_id(0)
+    di = pl.program_id(1)
+    seed = seed_ref[0]
+    pb = out_ref.shape[1]
+
+    block = rng.generate_block(
+        seed, di * dir_block, pj * pb, (dir_block, pb), distribution
+    )
+    s = s_ref[...].astype(jnp.float32)
+    part = jax.lax.dot_general(
+        s, block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = theta_ref[...].astype(jnp.float32)
+
+    out_ref[...] -= eta_ref[0] * part
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q", "distribution", "dtype", "interpret",
+                     "dir_block", "pos_block"),
+)
+def reconstruct_flat(
+    seed,
+    scale,
+    q: int,
+    distribution: str = "normal",
+    dtype=jnp.float32,
+    *,
+    interpret: bool = True,
+    dir_block: int = DIR_BLOCK,
+    pos_block: int = POS_BLOCK,
+):
+    """Kernel-backed equivalent of ``projector._reconstruct_flat``."""
+    dim = scale.shape[0]
+    d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
+    q_pad = ((q + pos_block - 1) // pos_block) * pos_block
+    s = jnp.zeros((1, d_pad), jnp.float32).at[0, :dim].set(
+        scale.astype(jnp.float32)
+    )
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1)
+
+    grid = (q_pad // pos_block, d_pad // dir_block)
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_kernel, dir_block=dir_block, distribution=distribution
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda pj, di: (0,)),
+            pl.BlockSpec((1, dir_block), lambda pj, di: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, pos_block), lambda pj, di: (0, pj)),
+        out_shape=jax.ShapeDtypeStruct((1, q_pad), jnp.float32),
+        interpret=interpret,
+    )(seed_arr, s)
+    return out[0, :q].astype(dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("distribution", "interpret", "dir_block", "pos_block"),
+)
+def reconstruct_apply_flat(
+    seed,
+    scale,
+    theta_flat,
+    eta,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    dir_block: int = DIR_BLOCK,
+    pos_block: int = POS_BLOCK,
+):
+    """Fused theta' = theta - eta * (scale @ P) over a flat parameter
+    vector: one HBM read of theta, one write of theta', zero traffic for
+    the update vector itself."""
+    q = theta_flat.shape[0]
+    dim = scale.shape[0]
+    d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
+    q_pad = ((q + pos_block - 1) // pos_block) * pos_block
+    s = jnp.zeros((1, d_pad), jnp.float32).at[0, :dim].set(
+        scale.astype(jnp.float32)
+    )
+    theta = jnp.zeros((1, q_pad), jnp.float32).at[0, :q].set(
+        theta_flat.astype(jnp.float32)
+    )
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1)
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1)
+
+    grid = (q_pad // pos_block, d_pad // dir_block)
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_apply_kernel,
+            dir_block=dir_block,
+            n_dir_blocks=d_pad // dir_block,
+            distribution=distribution,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda pj, di: (0,)),
+            pl.BlockSpec((1, dir_block), lambda pj, di: (0, di)),
+            pl.BlockSpec((1, pos_block), lambda pj, di: (0, pj)),
+            pl.BlockSpec((1,), lambda pj, di: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, pos_block), lambda pj, di: (0, pj)),
+        out_shape=jax.ShapeDtypeStruct((1, q_pad), jnp.float32),
+        interpret=interpret,
+    )(seed_arr, s, theta, eta_arr)
+    return out[0, :q].astype(theta_flat.dtype)

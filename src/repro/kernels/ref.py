@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the RBD Pallas kernels.
+
+Materializes the full (d, Q) basis block with the same counter PRNG the
+kernels use, so kernel-vs-ref comparisons are exact up to f32 matmul
+accumulation order.  Only for tests/benchmarks -- O(d*Q) memory.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def materialize_basis(seed, dim: int, q: int, distribution: str = "normal"):
+    return rng.generate_block(seed, 0, 0, (dim, q), distribution)
+
+
+def project_flat(seed, g_flat, dim: int, distribution: str = "normal"):
+    p = materialize_basis(seed, dim, g_flat.shape[0], distribution)
+    g = g_flat.astype(jnp.float32)
+    return p @ g, jnp.sum(p * p, axis=1)
+
+
+def reconstruct_flat(seed, scale, q: int, distribution: str = "normal",
+                     dtype=jnp.float32):
+    p = materialize_basis(seed, scale.shape[0], q, distribution)
+    return (scale.astype(jnp.float32) @ p).astype(dtype)
+
+
+def reconstruct_apply_flat(seed, scale, theta_flat, eta,
+                           distribution: str = "normal"):
+    delta = reconstruct_flat(seed, scale, theta_flat.shape[0], distribution)
+    return (theta_flat.astype(jnp.float32) - eta * delta).astype(
+        theta_flat.dtype
+    )

@@ -1,0 +1,330 @@
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers, compiles, and fits -- without hardware.
+
+MUST be the first jax initialization in the process: the first two lines
+force 512 host placeholder devices so ``jax.make_mesh`` can build the
+production meshes.  Do NOT replicate this env var anywhere global.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod] [--mode rbd|sgd|sharedseed] \
+      [--out reports/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from typing import Any  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
+from repro.configs.base import InputShape, RBDConfig, TrainConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+from repro.train import step as train_step_lib  # noqa: E402
+
+# v5e per-chip constants for the roofline terms (see EXPERIMENTS.md)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
+
+
+def model_flops(cfg, shape: InputShape) -> float:
+    """6*N*D rule (N = active params), D = tokens processed per step."""
+    m = get_model(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    n_params = 0
+    for path, x in jax.tree_util.tree_leaves_with_path(shapes):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if cfg.is_moe and "moe/" in name and "router" not in name:
+            n_params += x.size // cfg.n_experts * cfg.top_k
+        else:
+            n_params += x.size
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_params * tokens
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+
+def _state_shape(model, transform, params_shape):
+    return jax.eval_shape(
+        lambda p: train_step_lib.TrainState(
+            params=p,
+            rbd_state=(transform.init(p) if transform else ()),
+            opt_state=(),
+            step=jnp.zeros((), jnp.int32),
+        ),
+        params_shape,
+    )
+
+
+def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
+    """(step_fn, arg_specs) for the train/prefill kinds.
+
+    mode='sharedseed' wraps the step in shard_map (manual over the batch
+    axes, auto over 'model' when tensor-parallel): per-worker gradients
+    are projected locally and only d-dimensional coordinates cross the
+    wire -- paper Algorithm 1.  The D-dimensional gradient all-reduce of
+    the pjit modes does not exist in the lowered program.
+    """
+    cfg = model.cfg
+    rbd_cfg = RBDConfig(enabled=(mode != "sgd"))
+    tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
+    transform = train_step_lib.make_transform(model, rbd_cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_shape = _state_shape(model, transform, params_shape)
+    batch_shape = model.batch_specs(shape)
+
+    if mode == "sharedseed":
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        layout = rules.layout_policy(params_shape, cfg)
+        baxes = rules.batch_axes(mesh, layout)
+        _, inner = train_step_lib.make_train_step(
+            model, tcfg, transform, axis_name=tuple(baxes))
+        repl_state = jax.tree_util.tree_map(lambda _: P(), state_shape)
+        batch_spec = jax.tree_util.tree_map(lambda _: P(baxes),
+                                            batch_shape)
+        metrics_spec = {k: P() for k in
+                        ("ce", "aux", "loss", "update_norm")}
+        step_fn = shard_map(
+            inner, mesh=mesh,
+            in_specs=(repl_state, batch_spec),
+            out_specs=(repl_state, metrics_spec),
+            axis_names=set(baxes),
+            check_vma=False,
+        )
+        return step_fn, (state_shape, batch_shape)
+
+    _, step_fn = train_step_lib.make_train_step(model, tcfg, transform)
+    return step_fn, (state_shape, batch_shape)
+
+
+def build_prefill_inputs(model, shape: InputShape):
+    def prefill_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        return logits
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_shape = model.batch_specs(shape)
+    return prefill_fn, (params_shape, batch_shape)
+
+
+def build_decode_inputs(model, shape: InputShape):
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    # decode against a (seq_len - 1)-token cache, appending token number
+    # seq_len -- the canonical "decode at full context" roofline point
+    token_shape = model.batch_specs(shape)["token"]
+    return serve_step, (params_shape, cache_shape, token_shape)
+
+
+def shardings_for(args_shape, mesh, cfg=None):
+    """Assign shardings per top-level argument by role."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def to_sharding(spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # layout policy needs the parameter tree (first pass)
+    layout = "megatron"
+    for arg in args_shape:
+        p = arg.params if isinstance(arg, train_step_lib.TrainState) else (
+            arg if not isinstance(arg, dict) else None)
+        if p is not None:
+            layout = rules.layout_policy(p, cfg)
+            break
+
+    out = []
+    for arg in args_shape:
+        if isinstance(arg, train_step_lib.TrainState):
+            specs = train_step_lib.TrainState(
+                params=rules.param_specs(arg.params, mesh, cfg),
+                rbd_state=jax.tree_util.tree_map(lambda _: P(),
+                                                 arg.rbd_state),
+                opt_state=jax.tree_util.tree_map(lambda _: P(),
+                                                 arg.opt_state),
+                step=P(),
+            )
+        elif isinstance(arg, dict) and ("len" in arg):       # cache
+            specs = rules.cache_specs(arg, mesh)
+        elif isinstance(arg, dict):                           # batch
+            specs = rules.batch_specs(arg, mesh, layout)
+        else:                                                 # params
+            specs = rules.param_specs(arg, mesh, cfg)
+        out.append(to_sharding(specs))
+    return tuple(out)
+
+
+def should_skip(cfg, shape: InputShape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention architecture: long_500k requires "
+                "sub-quadratic sequence mixing (DESIGN.md)")
+    if shape.name == "long_500k" and cfg.is_encoder_decoder:
+        return "whisper decoder max context is 448 by design"
+    return None
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            mode: str = "rbd", out_dir: str = "reports/dryrun",
+            save: bool = True) -> dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "mode": mode,
+    }
+    if skip:
+        result["skipped"] = skip
+        _save(result, out_dir, save)
+        return result
+
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    if shape.kind == "train":
+        fn, args_shape = build_train_inputs(model, shape, mode, mesh)
+    elif shape.kind == "prefill":
+        fn, args_shape = build_prefill_inputs(model, shape)
+    else:
+        fn, args_shape = build_decode_inputs(model, shape)
+
+    in_shardings = shardings_for(args_shape, mesh, cfg)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args_shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    coll = collective_bytes(hlo)
+    loops = coll.pop("_loops", [])
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = sum(coll.values())
+
+    mf = model_flops(cfg, shape)
+    result.update(
+        devices=n_dev,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        collectives=coll,
+        hlo_loops=loops[:40],
+        t_compute=flops_dev / PEAK_FLOPS,
+        t_memory=bytes_dev / HBM_BW,
+        t_collective=coll_dev / ICI_BW,
+        model_flops_global=mf,
+        useful_flops_ratio=(mf / (flops_dev * n_dev)
+                            if flops_dev else None),
+        memory_analysis={
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    )
+    terms = {"compute": result["t_compute"], "memory": result["t_memory"],
+             "collective": result["t_collective"]}
+    result["bottleneck"] = max(terms, key=terms.get)
+    _save(result, out_dir, save)
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_tag}_{mode}"
+        with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as fh:
+            fh.write(hlo)
+    return result
+
+
+def _save(result, out_dir, save):
+    if not save:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{result['arch']}_{result['shape']}_{result['mesh']}"
+           f"_{result['mode']}")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="rbd",
+                    choices=["rbd", "sgd", "sharedseed"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+
+    combos = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in INPUT_SHAPES:
+                combos.append((arch, shape, args.multi_pod))
+    else:
+        combos.append((args.arch, args.shape, args.multi_pod))
+
+    failures = []
+    for arch, shape, mp in combos:
+        try:
+            r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
+                        out_dir=args.out)
+            if "skipped" in r:
+                print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")
+            else:
+                print(f"OK    {arch:24s} {shape:12s} mesh={r['mesh']} "
+                      f"compile={r['compile_s']}s "
+                      f"bottleneck={r['bottleneck']} "
+                      f"Tc={r['t_compute']:.3f}s Tm={r['t_memory']:.3f}s "
+                      f"Tcoll={r['t_collective']:.4f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)[:200]))
+            print(f"FAIL  {arch:24s} {shape:12s} {repr(e)[:160]}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

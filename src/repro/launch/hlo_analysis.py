@@ -1,0 +1,139 @@
+"""Optimized-HLO analysis: collective payload accounting with while-loop
+trip-count attribution.
+
+XLA aggregates (and ``cost_analysis`` reports) a while-loop body ONCE.
+Production models here put their layer stack, flash-attention sweeps and
+RBD chunk loops under ``lax.scan``, so a naive sum over collective ops
+undercounts per-step traffic by the loop trip counts.  This module
+parses the post-SPMD module text into computations, recovers each while
+loop's trip count from its condition computation, and multiplies every
+collective's payload by the product of enclosing trip counts.
+
+Shapes in the post-SPMD module are per-partition, so the returned totals
+are per-chip bytes crossing the interconnect per executed step.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterator
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=(%[\w\.\-]+),\s*body=(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"=.*?\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    name, buf = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if name is None:
+            m = _COMP_START.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")
+                      or stripped.endswith("{")):
+                cand = m.group(1)
+                if not cand.startswith("%"):
+                    cand = "%" + cand
+                name, buf = cand, []
+        else:
+            if stripped == "}" or stripped.startswith("} "):
+                comps[name] = buf
+                name, buf = None, []
+            else:
+                buf.append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict[str, list[str]]) -> str | None:
+    m = re.search(r"^ENTRY\s+(%?[\w\.\-]+)", hlo, re.MULTILINE)
+    if m:
+        n = m.group(1)
+        return n if n.startswith("%") else "%" + n
+    return next(iter(comps)) if comps else None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Largest s32 scalar constant in the condition computation -- the
+    loop bound for canonical scan-lowered loops.  Falls back to 1."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _line_result_bytes(line: str) -> float:
+    """Bytes of all result tensors on the LHS of an instruction."""
+    lhs = line.split("=", 1)[0] if "=" in line else ""
+    # result shape(s) appear after '=' and before the op name; take the
+    # segment between '=' and the op keyword
+    seg = line.split("=", 1)[1] if "=" in line else line
+    # cut at the op name (first collective keyword occurrence)
+    cut = len(seg)
+    for k in COLLECTIVE_KINDS:
+        i = seg.find(" " + k)
+        if i >= 0:
+            cut = min(cut, i)
+    seg = seg[:cut]
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    del lhs
+    return total
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Per-chip collective payload bytes per step, trip-count weighted,
+    summed per op kind.  Also returns 'loop_weighted' (True marker) via
+    the '_loops' key for debugging: list of (body, trip)."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    totals: dict[str, float] = {}
+    loops: list[tuple[str, int]] = []
+
+    def visit(name: str, mult: float, seen: tuple):
+        lines = comps.get(name)
+        if lines is None or name in seen:
+            return
+        seen = seen + (name,)
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm:
+                kind = cm.group(1)
+                totals[kind] = totals.get(kind, 0.0) \
+                    + _line_result_bytes(line) * mult
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                loops.append((body, trip))
+                visit(body, mult * trip, seen)
+            else:
+                for callee in re.findall(r"calls=(%[\w\.\-]+)", line):
+                    visit(callee, mult, seen)
+
+    if entry:
+        visit(entry, 1.0, ())
+    totals["_loops"] = loops  # type: ignore[assignment]
+    return totals

@@ -1,0 +1,214 @@
+"""Grouped-query attention with RoPE, causal / sliding-window masking,
+flash-style blockwise softmax for long prefill, and KV-cache decode.
+
+Shapes follow (B, S, H, hd).  GQA repeats each of the KV heads across
+H // KV query heads via a reshape-free einsum grouping.  The blockwise
+path (``flash_attention``) never materializes the (S, S) score matrix:
+an outer scan over query blocks and an inner scan over KV blocks carry
+the online-softmax statistics -- O(S * block) memory, the standard TPU
+formulation (and the jnp oracle for a future Pallas flash kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+Q_BLOCK = 512
+KV_BLOCK = 1024
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    return 1.0 / (
+        theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+                   qkv_bias: bool = False, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv * d_head,), dtype)
+    return p
+
+
+def qkv_project(params, x, n_heads: int, n_kv: int, d_head: int):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        q.reshape(b, s, n_heads, d_head),
+        k.reshape(b, s, n_kv, d_head),
+        v.reshape(b, s, n_kv, d_head),
+    )
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention for train / prefill
+# --------------------------------------------------------------------------
+
+
+def _block_scores(q, k, scale):
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum(
+        "bqkgh,bskh->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    window_flag=None,
+    q_offset=0,
+    q_block: int = Q_BLOCK,
+    kv_block: int = KV_BLOCK,
+):
+    """Blockwise-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H = KV * G.
+    ``window``: static sliding-window size; ``window_flag`` optionally is a
+    traced boolean -- False disables the window at runtime (gemma3's 5
+    local : 1 global pattern inside one scanned layer stack).
+    ``q_offset``: global position of q[0] (cross-attention / cache append).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+
+    q_pad = (-sq) % q_block
+    kv_pad = (-sk) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+
+    qp = qp.reshape(b, nq, q_block, kv, g, hd)
+    kp = kp.reshape(b, nk, kv_block, kv, hd)
+    vp = vp.reshape(b, nk, kv_block, kv, hd)
+
+    def q_step(_, qi):
+        qblk, iq = qi  # (B, q_block, KV, G, hd)
+        q_pos = iq * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, ik = ki
+            k_pos = ik * kv_block + jnp.arange(kv_block)
+            s = _block_scores(qblk, kblk, scale)  # (B, KV, G, qb, kb)
+            mask = k_pos[None, :] <= q_pos[:, None] if causal else (
+                jnp.ones((q_block, kv_block), bool)
+            )
+            mask = mask & (k_pos[None, :] < sk)
+            if window is not None:
+                in_win = k_pos[None, :] > (q_pos[:, None] - window)
+                if window_flag is not None:
+                    in_win = in_win | jnp.logical_not(window_flag)
+                mask = mask & in_win
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, kv, g, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, g, q_block), jnp.float32),
+            jnp.zeros((b, kv, g, q_block, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1),
+             jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, qb, hd)
+        return None, out.transpose(0, 3, 1, 2, 4)      # (B, qb, KV, G, hd)
+
+    _, blocks = jax.lax.scan(
+        q_step, None, (qp.swapaxes(0, 1), jnp.arange(nq))
+    )
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_block, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode: one query against a KV cache
+# --------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None, window_flag=None):
+    """q: (B, 1, H, hd); caches: (B, S_max, KV, hd); cache_len: ()/scalar --
+    number of valid cache entries (the new token's position)."""
+    b, _, h, hd = q.shape
+    _, s_max, kv, _ = k_cache.shape
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+
+    qg = q.reshape(b, 1, kv, g, hd)
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale  # (B, KV, G, 1, S_max)
+    pos = jnp.arange(s_max)
+    mask = pos[None, :] <= cache_len
+    if window is not None:
+        in_win = pos[None, :] > (cache_len - window)
+        if window_flag is not None:
+            in_win = in_win | jnp.logical_not(window_flag)
+        mask = mask & in_win
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention_output(params, ctx):
+    b, s, h, hd = ctx.shape
+    return ctx.reshape(b, s, h * hd) @ params["wo"]

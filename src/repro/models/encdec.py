@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is the sanctioned STUB
+(``frontends.audio_frames``): the encoder consumes precomputed frame
+embeddings of shape (B, enc_seq, d_model).  Everything downstream --
+bidirectional encoder, causal decoder with cross-attention, KV-cached
+decode -- is implemented.
+
+Positions: fixed sinusoidal for the encoder, learned for the decoder
+(as in Whisper).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+def _cdt(cfg):
+    return L._dtype(cfg.compute_dtype)
+
+
+def _init_enc_layer(cfg, key):
+    dt = L._dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.d_head, False, dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def _init_dec_layer(cfg, key):
+    dt = L._dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "self_attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.d_head, False,
+                                         dt),
+        "ln_x": jnp.zeros((cfg.d_model,), dt),
+        "cross_attn": attn.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.d_head, False,
+                                          dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = L._dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(k3, cfg.vocab, cfg.d_model, dt),
+        # learned decoder positions; sized past the decode_32k shape
+        # contract (whisper's own max is 448 -- DESIGN.md notes the
+        # 32k decode is synthetic for this arch)
+        "dec_pos": (jax.random.normal(k4, (40960, cfg.d_model)) * 0.01
+                    ).astype(dt),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def stacked_leaf_prefixes() -> tuple[str, ...]:
+    return ("enc_layers", "dec_layers")
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, enc_seq, d_model) stub embeddings -> (B, enc_seq, D)."""
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    b, s, _ = frames.shape
+    x = frames.astype(cdt) + L.sinusoidal_positions(s, cfg.d_model, cdt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head)
+        ctx = attn.flash_attention(q, k, v, causal=False)
+        x = x + attn.attention_output(lp["attn"], ctx)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    del positions
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(cfg, lp, x, enc_out):
+    h = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    q, _, _ = attn.qkv_project(lp["cross_attn"], h, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.d_head)
+    # keys/values from the encoder output
+    b, se, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, se, cfg.n_kv_heads,
+                                                   cfg.d_head)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, se, cfg.n_kv_heads,
+                                                   cfg.d_head)
+    ctx = attn.flash_attention(q, k, v, causal=False)
+    return x + attn.attention_output(lp["cross_attn"], ctx)
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, *, remat: bool = True):
+    """Teacher-forced decode over full token sequence.
+    tokens: (B, S); frames: (B, enc_seq, d_model).  Returns (logits, aux)."""
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cdt)
+    x = x + params["dec_pos"][:s].astype(cdt)
+
+    def body(x, lp):
+        def blk(x):
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(lp["self_attn"], h, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.d_head)
+            ctx = attn.flash_attention(q, k, v, causal=True)
+            x = x + attn.attention_output(lp["self_attn"], ctx)
+            x = _cross_attend(cfg, lp, x, enc_out)
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + L.mlp(lp["mlp"], h, "gelu")
+
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    cdt = _cdt(cfg)
+    nl = cfg.n_layers
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt),
+        "v": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt),
+        # cross-attention K/V precomputed from the encoder at prefill
+        "xk": jnp.zeros((nl, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                        cdt),
+        "xv": jnp.zeros((nl, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                        cdt),
+    }
+
+
+def prefill_cross_cache(cfg: ModelConfig, params, cache, frames):
+    enc_out = encode(cfg, params, frames)
+    b, se, _ = enc_out.shape
+
+    def per_layer(lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.d_head)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.d_head)
+        return k, v
+
+    xk, xv = jax.vmap(per_layer)(params["dec_layers"])
+    cache["xk"] = xk.astype(cache["xk"].dtype)
+    cache["xv"] = xv.astype(cache["xv"].dtype)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    """token: (B, 1).  Self-attn cache append + cross-attn against the
+    prefilled encoder K/V."""
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    pos = cache["len"]
+    b = token.shape[0]
+    x = L.embed(params["embed"], token).astype(cdt)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos, 1, axis=0).astype(cdt)
+
+    def body(x, xs):
+        lp, k_c, v_c, xk, xv = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["self_attn"], h, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head)
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k.astype(k_c.dtype), pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v.astype(v_c.dtype), pos, axis=1)
+        ctx = attn.decode_attention(q, k_c, v_c, pos)
+        x = x + attn.attention_output(lp["self_attn"], ctx)
+        # cross attention (no causal mask; all enc positions valid)
+        h = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q, _, _ = attn.qkv_project(lp["cross_attn"], h, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head)
+        ctx = attn.decode_attention(q, xk, xv, jnp.asarray(cfg.enc_seq - 1))
+        x = x + attn.attention_output(lp["cross_attn"], ctx)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h, "gelu")
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["xk"],
+         cache["xv"]),
+    )
+    cache["k"], cache["v"] = k_new, v_new
+    cache["len"] = pos + 1
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

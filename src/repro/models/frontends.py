@@ -1,0 +1,41 @@
+"""STUB modality frontends (the one sanctioned carve-out).
+
+The audio conv feature extractor (whisper) and the vision tower +
+projector (llava) are not implemented; ``input_specs()`` hands the
+backbone precomputed frame/patch embeddings of the right shape.  These
+helpers generate deterministic synthetic embeddings for smoke tests and
+ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames(cfg: ModelConfig, batch: int, key=None):
+    """(B, enc_seq, d_model) synthetic mel+conv output embeddings."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(
+        key, (batch, cfg.enc_seq, cfg.d_model)) * 0.02
+
+
+def vision_patches(cfg: ModelConfig, batch: int, key=None):
+    """(B, n_patches, d_model) synthetic ViT+projector patch embeddings
+    (llava-next anyres tiling yields a variable count; we fix it at
+    cfg.n_patches, the base-resolution 24x24=576 + thumbnail grid)."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    return jax.random.normal(
+        key, (batch, cfg.n_patches, cfg.d_model)) * 0.02
+
+
+def audio_frames_spec(cfg: ModelConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model),
+                                jnp.float32)
+
+
+def vision_patches_spec(cfg: ModelConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model),
+                                jnp.float32)

@@ -1,0 +1,100 @@
+"""Elementary layers: norms, MLPs, embeddings.  Pure-functional JAX --
+params are plain dicts of arrays; init functions take explicit PRNG keys.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def cast_for_compute(params, cdt):
+    """Cast float params to the compute dtype at forward entry (master
+    copies stay f32 in the optimizer; norms upcast internally)."""
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(cdt)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "silu":  # SwiGLU: gate branch
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, act: str = "silu"):
+    """SwiGLU (act='silu') or GELU MLP.
+
+    The down-projection pins its accumulation dtype to the activation
+    dtype: under tensor parallelism this is the row-parallel matmul whose
+    partial sums XLA all-reduces, and without the pin the partitioner
+    keeps f32 partials and moves 2x the bytes (EXPERIMENTS.md §Perf
+    iteration 7)."""
+    up = x @ params["w_up"]
+    if act == "silu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    return jax.lax.dot_general(
+        h, params["w_down"],
+        dimension_numbers=(((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head, x, *, tied: bool):
+    if tied:
+        return x @ table_or_head.T
+    return x @ table_or_head
+
+
+def sinusoidal_positions(seq: int, d_model: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal position embeddings."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d_model)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, dtype)

@@ -1,0 +1,106 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a ``Model`` facade with:
+
+  init(key)                    -> params pytree
+  forward(params, batch)       -> (logits, aux_loss)   [train / prefill]
+  init_cache(batch, max_len)   -> cache pytree
+  decode_step(params, cache, token) -> (logits, cache)
+  batch_specs(shape)           -> dict of ShapeDtypeStruct for the dry-run
+  make_batch(shape, key)       -> synthetic concrete batch (smoke tests)
+  is_stacked(leaf_name)        -> stacked-layer predicate for the RBD
+                                  compartment planner
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, frontends, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch, remat=True) -> (logits, aux)
+    init_cache: Callable         # (batch, max_len) -> cache
+    decode_step: Callable        # (params, cache, token) -> (logits, cache)
+    stacked_prefixes: tuple[str, ...]
+
+    def is_stacked(self, leaf_name: str) -> bool:
+        return leaf_name.startswith(self.stacked_prefixes)
+
+    # ---------------- input construction -------------------------------
+    def batch_specs(self, shape: InputShape) -> dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            specs = {"tokens": tok, "frames": frontends.audio_frames_spec(cfg, b)}
+        elif cfg.n_patches > 0:
+            s_text = s - cfg.n_patches
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+                "patches": frontends.vision_patches_spec(cfg, b),
+            }
+        else:
+            specs = {"tokens": tok}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+
+    def make_batch(self, shape: InputShape, key=None) -> dict[str, Any]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.batch_specs(shape)
+        out = {}
+        for name, spec in specs.items():
+            key, sub = jax.random.split(key)
+            if jnp.issubdtype(spec.dtype, jnp.integer):
+                out[name] = jax.random.randint(
+                    sub, spec.shape, 0, self.cfg.vocab, spec.dtype)
+            else:
+                out[name] = jax.random.normal(sub, spec.shape, spec.dtype) * 0.02
+        return out
+
+
+def _decoder_forward(cfg):
+    def fwd(params, batch, *, remat: bool = True):
+        extra = batch.get("patches")
+        return transformer.forward(cfg, params, batch["tokens"],
+                                   extra_embeds=extra, remat=remat)
+    return fwd
+
+
+def _encdec_forward(cfg):
+    def fwd(params, batch, *, remat: bool = True):
+        return encdec.forward(cfg, params, batch["tokens"],
+                              batch["frames"], remat=remat)
+    return fwd
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            forward=_encdec_forward(cfg),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+            decode_step=lambda p, c, t: encdec.decode_step(cfg, p, c, t),
+            stacked_prefixes=encdec.stacked_leaf_prefixes(),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        forward=_decoder_forward(cfg),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+        decode_step=lambda p, c, t: transformer.decode_step(cfg, p, c, t),
+        stacked_prefixes=transformer.stacked_leaf_prefixes(),
+    )

@@ -1,0 +1,241 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent
+per-channel decay (arXiv:2404.05892), plus the squared-ReLU channel mix.
+
+Per head (hd = head size), the recurrent state is the (hd, hd) outer-
+product accumulator
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t in (0,1) produced from the token (data-dependent decay, the
+Finch novelty vs RWKV-5's static decay) through a small LoRA-style
+bottleneck.  Training uses a sequential lax.scan over time (the jnp
+oracle; a chunk-parallel formulation is a §Perf candidate), decode is the
+O(1) state update -- this is why rwkv6 runs the long_500k shape.
+
+Token-shift (mixing x_t with x_{t-1}) follows the RWKV lineage; its
+decode-time state is the previous token's embedding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+DECAY_LORA = 64
+
+
+def init_rwkv(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    p = {
+        "wr": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wg": dense_init(ks[3], d_model, d_model, dtype),
+        "wo": dense_init(ks[4], d_model, d_model, dtype),
+        # data-dependent decay: d_model -> LORA -> d_model
+        "w_decay_a": dense_init(ks[5], d_model, DECAY_LORA, dtype),
+        "w_decay_b": dense_init(ks[6], DECAY_LORA, d_model, dtype),
+        "decay_base": jnp.full((d_model,), -6.0, dtype),  # slow default
+        "bonus_u": (jax.random.normal(ks[7], (n_heads, hd)) * 0.1
+                    ).astype(dtype),
+        # token-shift interpolation factors
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_g": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """x: (B, S, D); prev: (B, D) -- last token of the previous segment."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def _projections(p, x, shifted, n_heads: int):
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def mix(m):
+        return x * p[f"mix_{m}"] + shifted * (1.0 - p[f"mix_{m}"])
+
+    r = (mix("r") @ p["wr"]).reshape(b, s, n_heads, hd)
+    k = (mix("k") @ p["wk"]).reshape(b, s, n_heads, hd)
+    v = (mix("v") @ p["wv"]).reshape(b, s, n_heads, hd)
+    g = jax.nn.silu(mix("g") @ p["wg"])
+    decay_x = mix("w")
+    dec = (jnp.tanh(decay_x @ p["w_decay_a"]) @ p["w_decay_b"])
+    w = jnp.exp(
+        -jnp.exp((p["decay_base"] + dec).astype(jnp.float32))
+    ).reshape(b, s, n_heads, hd)  # in (0, 1)
+    return r, k, v, g, w
+
+
+# Chunk length for the parallel WKV formulation.  Within a chunk the
+# cumulative-decay ratios W_t / W_s stay well above f32 underflow for
+# RWKV-6's decay range (w in (exp(-exp(-6)), 1) at init; even w ~ 0.5
+# gives 2^-32 at length 32 -- acceptable in f32 with the masking below).
+WKV_CHUNK = 32
+
+
+def _wkv_chunk_parallel(r, k, v, w, u, state):
+    """Chunkwise-parallel WKV (the TPU-native replacement for the
+    sequential time scan -- EXPERIMENTS.md §Perf iteration 10).
+
+    Inputs are (B, S, H, hd) with S divisible by the chunk; state is the
+    (B, H, hd, hd) carry.  Per chunk of length C:
+
+      W_t   = prod_{u<=t} w_u                (cumulative decay, (C, hd))
+      y_t   = r_t (W_t * S_in)                         [carry-in term]
+            + sum_{s<t} (r_t W_t/W_s+1) . k_s  v_s     [intra, causal]
+            + (r_t . u . k_t) v_t                      [bonus diagonal]
+      S_out = W_C * S_in + sum_s (W_C/W_s+1 . k_s) v_s
+
+    All inner sums are (C x C) / (C x hd) matmuls -> MXU work instead of
+    S sequential VPU steps; the only sequential loop is over S/C chunks.
+    Matches the sequential scan to f32 tolerance (tests/test_rwkv_chunk).
+    """
+    b, s, h, hd = r.shape
+    c = WKV_CHUNK
+    n = s // c
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32).reshape(b, n, c, h, hd) for a in (r, k, v, w))
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(logw, axis=2)                  # log W_t (incl. t)
+    w_all = jnp.exp(cum[:, :, -1])                  # W_C per chunk
+
+    # decay ratios: D[t, s] = W_t / W_{s} (exclusive of s) = exp(cum_t -
+    # cum_s); masked strictly-causal (s < t)
+    # the two-factor decomposition exp(cum_t - cum_s) =
+    # exp(cum_t) * exp(-cum_s) enables the (C x C) matmul; clamp each
+    # factor so extreme trained decays cannot overflow f32 (valid for
+    # per-step decay w >= exp(-60/C); masked terms beyond that range are
+    # ~0 in the true product anyway)
+    _CLAMP = 60.0
+
+    def chunk(carry, args):
+        rc, kc, vc, cumc = args                     # (B, C, H, hd) ...
+        # cum exclusive of t (i.e. cum_{t-1}; 0 at t=0)
+        cum_excl = jnp.concatenate(
+            [jnp.zeros_like(cumc[:, :1]), cumc[:, :-1]], axis=1)
+        r_dec = rc * jnp.exp(jnp.maximum(cum_excl, -_CLAMP))
+        y_in = jnp.einsum("bthk,bhkv->bthv", r_dec, carry)
+
+        # intra-chunk: A[t, s] = (r_t W_{t-1}/W_s) . k_s  for s < t
+        k_dec = kc * jnp.exp(jnp.minimum(-cumc, _CLAMP))
+        att = jnp.einsum("bthk,bshk->bhts", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhts,bshv->bthv", att, vc)
+
+        # bonus diagonal: (r_t . u . k_t) v_t
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        y_bonus = bonus[..., None] * vc
+
+        # carry update: S' = W_{C-1} * S + sum_s (k_s W_{C-1}/W_s) v_s
+        k_tail = kc * jnp.exp(cumc[:, -1:] - cumc)
+        s_new = jnp.exp(cumc[:, -1])[:, :, :, None] * carry + jnp.einsum(
+            "bshk,bshv->bhkv", k_tail, vc)
+        return s_new, y_in + y_intra + y_bonus
+
+    state, y = jax.lax.scan(
+        chunk, state,
+        (r.transpose(1, 0, 2, 3, 4), k.transpose(1, 0, 2, 3, 4),
+         v.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3, 4)),
+    )
+    del w_all
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return y, state
+
+
+def rwkv_mix(p, x, n_heads: int, *, state=None, shift_state=None,
+             chunked: bool = True):
+    """Full-sequence time mix.  Returns (y, (state, shift_state)).
+
+    state: (B, H, hd, hd) accumulator; shift_state: (B, D).
+    ``chunked`` selects the chunk-parallel WKV (default; falls back to
+    the sequential scan when S is not a chunk multiple)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    if state is None:
+        state = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+
+    shifted = _token_shift(x, shift_state)
+    r, k, v, g, w = _projections(p, x, shifted, n_heads)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if chunked and s % WKV_CHUNK == 0 and s > WKV_CHUNK:
+        y, state = _wkv_chunk_parallel(r, k, v, w, u, state)
+    else:
+        def step(S, rkvw):
+            rt, kt, vt, wt = rkvw  # (B, H, hd) each
+            kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                            vt.astype(jnp.float32))
+            out = jnp.einsum(
+                "bhk,bhkv->bhv", rt.astype(jnp.float32),
+                S + u[None, :, :, None] * kv,
+            )
+            S = wt.astype(jnp.float32)[..., None] * S + kv
+            return S, out
+
+        state, y = jax.lax.scan(
+            step, state,
+            (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+             v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)),
+        )
+        y = y.transpose(1, 0, 2, 3)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = y * g
+    y = y @ p["wo"]
+    return y, (state, x[:, -1])
+
+
+def rwkv_decode(p, x_tok, n_heads: int, state, shift_state):
+    """One-token step.  x_tok: (B, 1, D)."""
+    b, _, d = x_tok.shape
+    hd = d // n_heads
+    shifted = shift_state[:, None]
+    r, k, v, g, w = _projections(p, x_tok, shifted, n_heads)
+    u = p["bonus_u"].astype(jnp.float32)
+    rt, kt, vt, wt = (a[:, 0] for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                    vt.astype(jnp.float32))
+    out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                     state + u[None, :, :, None] * kv)
+    state = wt.astype(jnp.float32)[..., None] * state + kv
+    y = out.reshape(b, 1, d).astype(x_tok.dtype) * g
+    return y @ p["wo"], (state, x_tok[:, -1])
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "wk": dense_init(k1, d_model, d_ff, dtype),
+        "wv": dense_init(k2, d_ff, d_model, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+    }
+
+
+def channel_mix(p, x, shift_state=None):
+    """RWKV channel mix (squared-ReLU FFN with token shift).
+    Returns (y, new_shift_state)."""
+    b, s, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    shifted = _token_shift(x, shift_state)
+    xk = x * p["mix_k"] + shifted * (1.0 - p["mix_k"])
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"], x[:, -1]

@@ -1,0 +1,127 @@
+"""Mamba2-style selective state-space (SSD) block for the zamba2 hybrid
+(arXiv:2411.15242 uses Mamba2 blocks; arXiv:2405.21060 for SSD).
+
+Per head the state is h in R^(P x N) (P = head channels, N = ssm_state):
+
+    h_t = exp(-softplus(a) * dt_t) * h_{t-1} + dt_t * x_t B_t^T
+    y_t = h_t C_t + D * x_t
+
+with scalar-per-head decay (SSD restriction), data-dependent dt_t, B_t,
+C_t, a causal depthwise conv front, and a gated output.  Training runs a
+sequential lax.scan (jnp oracle; chunk-parallel SSD is a §Perf
+candidate); decode is the O(1) recurrence -- hence zamba2 is eligible for
+long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mamba(key, d_model: int, n_heads: int, ssm_state: int,
+               expand: int = 2, conv_width: int = 4, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    d_inner = expand * d_model
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        # input projection -> [x (d_inner), z gate (d_inner), B, C, dt]
+        "w_in": dense_init(
+            ks[0], d_model, 2 * d_inner + 2 * ssm_state + n_heads, dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, d_inner))
+                   * (1.0 / np.sqrt(conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),   # decay rate per head
+        "dt_bias": jnp.full((n_heads,), -4.0, jnp.float32),
+        "d_skip": jnp.ones((n_heads, hd), dtype),
+        "w_out": dense_init(ks[2], d_inner, d_model, dtype),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+    }
+
+
+def _split_proj(p, x, d_model, n_heads, ssm_state, expand):
+    d_inner = expand * d_model
+    proj = x @ p["w_in"]
+    xs, z, b, c, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + ssm_state,
+         2 * d_inner + 2 * ssm_state],
+        axis=-1,
+    )
+    return xs, z, b, c, dt
+
+
+def _causal_conv(p, xs, conv_state=None):
+    """Depthwise causal conv over time.  xs: (B, S, d_inner); conv_state:
+    (B, W-1, d_inner) trailing inputs of the previous segment."""
+    w = p["conv_w"]
+    width = w.shape[0]
+    b, s, d = xs.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, width - 1, d), xs.dtype)
+    padded = jnp.concatenate([conv_state, xs], axis=1)
+    out = jnp.zeros_like(xs)
+    for i in range(width):
+        out = out + padded[:, i:i + s] * w[i]
+    out = jax.nn.silu(out + p["conv_b"])
+    return out, padded[:, -(width - 1):]
+
+
+def mamba_mix(p, x, *, n_heads: int, ssm_state: int, expand: int = 2,
+              state=None, conv_state=None):
+    """Full-sequence SSD mix.  x: (B, S, D).
+    Returns (y, (state (B,H,P,N), conv_state))."""
+    from repro.models.layers import rms_norm
+
+    b, s, d_model = x.shape
+    d_inner = expand * d_model
+    hd = d_inner // n_heads
+
+    xs, z, bmat, cmat, dt = _split_proj(p, x, d_model, n_heads, ssm_state,
+                                        expand)
+    xs, conv_state = _causal_conv(p, xs, conv_state)
+
+    xs = xs.reshape(b, s, n_heads, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    decay = jnp.exp(
+        -jnp.exp(p["a_log"])[None, None] * dt
+    )  # (B, S, H) in (0,1)
+
+    if state is None:
+        state = jnp.zeros((b, n_heads, hd, ssm_state), jnp.float32)
+
+    def step(h, inp):
+        xt, bt, ct, dect, dtt = inp
+        # h: (B, H, P, N)
+        dx = (dtt[..., None] * xt.astype(jnp.float32))  # (B, H, P)
+        h = dect[..., None, None] * h + jnp.einsum(
+            "bhp,bn->bhpn", dx, bt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    state, ys = jax.lax.scan(
+        step, state,
+        (xs.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+         cmat.transpose(1, 0, 2), decay.transpose(1, 0, 2),
+         dt.transpose(1, 0, 2)),
+    )
+    ys = ys.transpose(1, 0, 2, 3)  # (B, S, H, P)
+    ys = ys + p["d_skip"][None, None] * xs.astype(jnp.float32)
+    y = ys.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+    return y @ p["w_out"], (state, conv_state)
+
+
+def mamba_decode(p, x_tok, *, n_heads: int, ssm_state: int, expand: int = 2,
+                 state, conv_state):
+    """One-token step.  x_tok: (B, 1, D)."""
+    y, (state, conv_state) = mamba_mix(
+        p, x_tok, n_heads=n_heads, ssm_state=ssm_state, expand=expand,
+        state=state, conv_state=conv_state,
+    )
+    return y, (state, conv_state)

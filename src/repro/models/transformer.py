@@ -1,0 +1,495 @@
+"""Decoder-only LM assembly covering dense / MoE / RWKV / Mamba / hybrid
+architectures behind one scanned layer stack.
+
+Layer parameters are stacked on a leading L axis and consumed by
+``lax.scan`` -- this keeps the HLO size O(1) in depth (granite-34b is 88
+layers), makes activation rematerialization a one-line policy, and gives
+the RBD compartment planner its "layer" granularity for free (stacked
+leaves => per-layer independent bases, the paper's layer-wise
+compartmentalization).
+
+Heterogeneous patterns are expressed as per-layer *data*, not structure:
+gemma3's 5-local:1-global attention is a (L,) boolean fed through the
+scan; zamba2's shared attention block reshapes the stack into
+(groups, per_group) and applies one (unstacked, parameter-shared)
+attention block per group -- both keep the stack scannable.
+
+Caches: uniform full-length KV caches stacked (L, B, S_max, KV, hd)
+(windowed layers mask instead of ring-buffering -- a documented serving
+trade-off), conv/state caches for recurrent blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+
+
+def _cdt(cfg):  # compute dtype
+    return L._dtype(cfg.compute_dtype)
+
+
+def _pdt(cfg):  # param dtype
+    return L._dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key):
+    dt = _pdt(cfg)
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if cfg.block_kind == "attn":
+        p["attn"] = attn.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+            cfg.qkv_bias, dt,
+        )
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.is_moe:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.n_experts, dt)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    elif cfg.block_kind == "rwkv":
+        p["tmix"] = rwkv_lib.init_rwkv(ks[0], cfg.d_model, cfg.n_heads, dt)
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        p["cmix"] = rwkv_lib.init_channel_mix(ks[1], cfg.d_model, cfg.d_ff, dt)
+    elif cfg.block_kind == "mamba":
+        p["mamba"] = ssm_lib.init_mamba(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.ssm_state, cfg.ssm_expand,
+            cfg.conv_width, dt,
+        )
+    else:
+        raise ValueError(cfg.block_kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _pdt(cfg)
+    k_emb, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(cfg, k))(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    if cfg.hybrid_attn_every > 0:
+        # zamba2: ONE parameter-shared attention block applied every
+        # hybrid_attn_every layers (the paper's shared attn blocks)
+        k_sa, k_sm = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "ln": jnp.zeros((cfg.d_model,), dt),
+            "attn": attn.init_attention(
+                k_sa, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_head, cfg.qkv_bias, dt,
+            ),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": L.init_mlp(k_sm, cfg.d_model, cfg.d_ff, cfg.act, dt),
+        }
+    return params
+
+
+def stacked_leaf_prefixes() -> tuple[str, ...]:
+    """Which top-level param subtrees carry a leading layer-stack axis --
+    consumed by the RBD compartment planner (layer granularity)."""
+    return ("layers",)
+
+
+# --------------------------------------------------------------------------
+# per-layer forward (full sequence)
+# --------------------------------------------------------------------------
+
+
+def _layer_forward(cfg: ModelConfig, lp, x, positions, is_global,
+                   states=None):
+    """One layer, full sequence.  states: optional dict of recurrent
+    carries (for segment continuation); returns (x, aux, new_states)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_states = {}
+    if cfg.block_kind == "attn":
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head)
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        window_flag = None
+        if cfg.window is not None and cfg.global_every > 0:
+            window_flag = jnp.logical_not(is_global)  # True -> windowed
+        ctx = attn.flash_attention(
+            q, k, v, causal=True, window=cfg.window,
+            window_flag=window_flag,
+        )
+        new_states.update(k=k, v=v)  # post-RoPE; DCE'd unless prefilling
+        x = x + attn.attention_output(lp["attn"], ctx)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = moe_lib.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     groups=cfg.moe_groups)
+        else:
+            y = L.mlp(lp["mlp"], h, cfg.act)
+        x = x + y
+    elif cfg.block_kind == "rwkv":
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, (s, sh) = rwkv_lib.rwkv_mix(
+            lp["tmix"], h, cfg.n_heads,
+            state=None if states is None else states.get("rwkv"),
+            shift_state=None if states is None else states.get("shift1"),
+        )
+        new_states.update(rwkv=s, shift1=sh)
+        x = x + y
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, sh2 = rwkv_lib.channel_mix(
+            lp["cmix"], h,
+            shift_state=None if states is None else states.get("shift2"),
+        )
+        new_states.update(shift2=sh2)
+        x = x + y
+    elif cfg.block_kind == "mamba":
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, (s, cs) = ssm_lib.mamba_mix(
+            lp["mamba"], h, n_heads=cfg.n_heads, ssm_state=cfg.ssm_state,
+            expand=cfg.ssm_expand,
+            state=None if states is None else states.get("ssm"),
+            conv_state=None if states is None else states.get("conv"),
+        )
+        new_states.update(ssm=s, conv=cs)
+        x = x + y
+    return x, aux, new_states
+
+
+def _shared_attn_forward(cfg: ModelConfig, sp, x, positions):
+    h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(sp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.d_head)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    ctx = attn.flash_attention(q, k, v, causal=True, window=cfg.window)
+    x = x + attn.attention_output(sp["attn"], ctx)
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp(sp["mlp"], h, cfg.act)
+
+
+def _global_flags(cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.global_every > 0:
+        idx = np.arange(cfg.n_layers)
+        return jnp.asarray((idx + 1) % cfg.global_every == 0)
+    return jnp.zeros((cfg.n_layers,), bool)
+
+
+# --------------------------------------------------------------------------
+# full forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra_embeds=None,
+            remat: bool = True, return_hidden: bool = False):
+    """tokens: (B, S) int32.  extra_embeds: optional (B, P, D) prepended
+    embeddings (VLM patches / audio frames for decoder-only audio).
+    Returns (logits, aux_loss)."""
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    x = L.embed(params["embed"], tokens)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    flags = _global_flags(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, is_global = xs
+
+        def blk(x):
+            y, a, _ = _layer_forward(cfg, lp, x, positions, is_global)
+            return y, a
+
+        if remat:
+            blk = jax.checkpoint(blk)
+        x, a = blk(x)
+        return (x, aux + a), None
+
+    if cfg.hybrid_attn_every > 0:
+        n_g = cfg.n_layers // cfg.hybrid_attn_every
+        per_g = cfg.hybrid_attn_every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_g, per_g) + a.shape[1:]), params["layers"]
+        )
+        gflags = flags.reshape(n_g, per_g)
+        sp = params["shared_attn"]
+
+        def group_body(carry, xs):
+            glp, gfl = xs
+            (x, aux), _ = jax.lax.scan(body, carry, (glp, gfl))
+            x = _shared_attn_forward(cfg, sp, x, positions)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)), (grouped, gflags)
+        )
+    else:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["layers"], flags)
+        )
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    logits = _logits(cfg, params, x)
+    return logits, aux
+
+
+def _logits(cfg, params, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x, tied=cfg.tie_embeddings).astype(jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, *,
+            extra_embeds=None):
+    """Run the full prompt and return (last-position logits, filled cache).
+
+    Collects per-layer attention K/V (or recurrent states) as scan outputs
+    and assembles a decode cache of capacity ``max_len``.
+    """
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    x = L.embed(params["embed"], tokens)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    flags = _global_flags(cfg)
+
+    def body(x, xs):
+        lp, is_global = xs
+        x, _, st = _layer_forward(cfg, lp, x, positions, is_global)
+        return x, st
+
+    if cfg.hybrid_attn_every > 0:
+        n_g = cfg.n_layers // cfg.hybrid_attn_every
+        per_g = cfg.hybrid_attn_every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_g, per_g) + a.shape[1:]), params["layers"])
+        gflags = flags.reshape(n_g, per_g)
+        sp = params["shared_attn"]
+
+        def group_body(x, xs):
+            glp, gfl = xs
+            x, st = jax.lax.scan(body, x, (glp, gfl))
+            h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(sp["attn"], h, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.d_head)
+            q = attn.apply_rope(q, positions, cfg.rope_theta)
+            k = attn.apply_rope(k, positions, cfg.rope_theta)
+            ctx = attn.flash_attention(q, k, v, causal=True,
+                                       window=cfg.window)
+            x = x + attn.attention_output(sp["attn"], ctx)
+            h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + L.mlp(sp["mlp"], h, cfg.act)
+            return x, (st, k, v)
+
+        x, (states, sk, sv) = jax.lax.scan(group_body, x, (grouped, gflags))
+        states = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_g * per_g,) + a.shape[2:]), states)
+    else:
+        x, states = jax.lax.scan(body, x, (params["layers"], flags))
+        sk = sv = None
+
+    cache = init_cache(cfg, b, max_len)
+    pad_s = max_len - s
+
+    def pad_seq(a):  # (L, B, S, ...) -> (L, B, max_len, ...)
+        return jnp.pad(a, [(0, 0), (0, 0), (0, pad_s)]
+                       + [(0, 0)] * (a.ndim - 3))
+
+    if cfg.block_kind == "attn":
+        cache["k"] = pad_seq(states["k"]).astype(cache["k"].dtype)
+        cache["v"] = pad_seq(states["v"]).astype(cache["v"].dtype)
+    elif cfg.block_kind == "rwkv":
+        cache["rwkv"] = states["rwkv"]
+        cache["shift1"] = states["shift1"].astype(cache["shift1"].dtype)
+        cache["shift2"] = states["shift2"].astype(cache["shift2"].dtype)
+    elif cfg.block_kind == "mamba":
+        cache["ssm"] = states["ssm"]
+        cache["conv"] = states["conv"].astype(cache["conv"].dtype)
+    if cfg.hybrid_attn_every > 0 and cfg.block_kind == "attn":
+        pass
+    if sk is not None:
+        cache["shared_k"] = pad_seq(sk).astype(cache["shared_k"].dtype)
+        cache["shared_v"] = pad_seq(sv).astype(cache["shared_v"].dtype)
+    cache["len"] = jnp.asarray(s, jnp.int32)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+# --------------------------------------------------------------------------
+# decode (one token against caches)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Cache pytree (zeros).  Use jax.eval_shape(init_cache, ...) for the
+    dry-run's allocation-free stand-ins."""
+    cdt = _cdt(cfg)
+    lcount = cfg.n_layers
+    cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.block_kind == "attn":
+        cache["k"] = jnp.zeros(
+            (lcount, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)
+        cache["v"] = jnp.zeros(
+            (lcount, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)
+    elif cfg.block_kind == "rwkv":
+        hd = cfg.d_model // cfg.n_heads
+        cache["rwkv"] = jnp.zeros(
+            (lcount, batch, cfg.n_heads, hd, hd), jnp.float32)
+        cache["shift1"] = jnp.zeros((lcount, batch, cfg.d_model), cdt)
+        cache["shift2"] = jnp.zeros((lcount, batch, cfg.d_model), cdt)
+    elif cfg.block_kind == "mamba":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        hd = d_inner // cfg.n_heads
+        cache["ssm"] = jnp.zeros(
+            (lcount, batch, cfg.n_heads, hd, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (lcount, batch, cfg.conv_width - 1, d_inner), cdt)
+    if cfg.hybrid_attn_every > 0:
+        n_g = cfg.n_layers // cfg.hybrid_attn_every
+        cache["shared_k"] = jnp.zeros(
+            (n_g, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)
+        cache["shared_v"] = jnp.zeros(
+            (n_g, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)
+    return cache
+
+
+def _decode_attn_layer(cfg, lp_attn, ln_w, x, pos, k_cache, v_cache,
+                       is_global):
+    """Shared helper: one attention sublayer decode step.
+    x: (B, 1, D).  Returns (y, k_cache, v_cache)."""
+    h = L.rms_norm(x, ln_w, cfg.norm_eps)
+    q, k, v = attn.qkv_project(lp_attn, h, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.d_head)
+    posb = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+    q = attn.apply_rope(q, posb, cfg.rope_theta)
+    k = attn.apply_rope(k, posb, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    window_flag = None
+    if cfg.window is not None and cfg.global_every > 0:
+        window_flag = jnp.logical_not(is_global)
+    ctx = attn.decode_attention(
+        q, k_cache, v_cache, pos, window=cfg.window,
+        window_flag=window_flag,
+    )
+    return attn.attention_output(lp_attn, ctx), k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    """token: (B, 1) int32 -- append one token, return (logits, cache)."""
+    cdt = _cdt(cfg)
+    params = L.cast_for_compute(params, cdt)
+    pos = cache["len"]
+    x = L.embed(params["embed"], token)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    flags = _global_flags(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(x, xs):
+        lp, is_global, *c = xs
+        if cfg.block_kind == "attn":
+            k_c, v_c = c
+            y, k_c, v_c = _decode_attn_layer(
+                cfg, lp["attn"], lp["ln1"], x, pos, k_c, v_c, is_global)
+            x = x + y
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = moe_lib.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor,
+                                       groups=cfg.moe_groups)
+            else:
+                y = L.mlp(lp["mlp"], h, cfg.act)
+            x = x + y
+            return x, (k_c, v_c)
+        if cfg.block_kind == "rwkv":
+            s, sh1, sh2 = c
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, (s, sh1) = rwkv_lib.rwkv_decode(lp["tmix"], h, cfg.n_heads,
+                                               s, sh1)
+            x = x + y
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, sh2 = rwkv_lib.channel_mix(lp["cmix"], h, shift_state=sh2)
+            x = x + y
+            return x, (s, sh1, sh2)
+        if cfg.block_kind == "mamba":
+            s, cs = c
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, (s, cs) = ssm_lib.mamba_decode(
+                lp["mamba"], h, n_heads=cfg.n_heads, ssm_state=cfg.ssm_state,
+                expand=cfg.ssm_expand, state=s, conv_state=cs)
+            x = x + y
+            return x, (s, cs)
+        raise ValueError(cfg.block_kind)
+
+    cache_keys = {
+        "attn": ("k", "v"),
+        "rwkv": ("rwkv", "shift1", "shift2"),
+        "mamba": ("ssm", "conv"),
+    }[cfg.block_kind]
+
+    if cfg.hybrid_attn_every > 0:
+        n_g = cfg.n_layers // cfg.hybrid_attn_every
+        per_g = cfg.hybrid_attn_every
+        regroup = lambda a: a.reshape((n_g, per_g) + a.shape[1:])
+        grouped_lp = jax.tree_util.tree_map(regroup, params["layers"])
+        gflags = regroup(flags)
+        gcaches = [regroup(cache[k]) for k in cache_keys]
+        sp = params["shared_attn"]
+
+        def group_body(x, xs):
+            glp, gfl, gc, sk, sv = xs
+            x, new_c = jax.lax.scan(body, x, (glp, gfl, *gc))
+            y, sk, sv = _decode_attn_layer(
+                cfg, sp["attn"], sp["ln"], x, pos, sk, sv, jnp.asarray(True))
+            x = x + y
+            h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + L.mlp(sp["mlp"], h, cfg.act)
+            return x, (new_c, sk, sv)
+
+        x, (new_caches, sk, sv) = jax.lax.scan(
+            group_body, x,
+            (grouped_lp, gflags, tuple(gcaches),
+             cache["shared_k"], cache["shared_v"]),
+        )
+        for key, val in zip(cache_keys, new_caches):
+            cache[key] = val.reshape(cache[key].shape)
+        cache["shared_k"], cache["shared_v"] = sk, sv
+    else:
+        x, new_caches = jax.lax.scan(
+            body, x,
+            (params["layers"], flags, *(cache[k] for k in cache_keys)),
+        )
+        for key, val in zip(cache_keys, new_caches):
+            cache[key] = val
+
+    cache["len"] = pos + 1
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x), cache

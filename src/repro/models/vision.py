@@ -1,0 +1,150 @@
+"""The paper's own experiment models (supplementary C.1), rebuilt in JAX:
+
+* FC      -- one hidden layer of width 128 (D=101,770 on 28x28x1 inputs,
+             D=394,634 on 32x32x3, matching the paper exactly)
+* CNN     -- conv(3x3,32) pool conv(3x3,64) pool conv(3x3,64) dense(64)
+             (D=93,322 on MNIST shapes, D=122,570 on CIFAR shapes)
+* ResNet8 -- 8-layer residual CNN at comparable parameter count (~78k on
+             CIFAR shapes), layer-compartmentalizable
+
+Used by the paper-reproduction benchmarks (Table 1/2/3, Figs 3-5) on the
+synthetic image datasets in ``repro.data.synthetic``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else np.sqrt(2.0 / n_in)
+    k1, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (n_in, n_out)) * scale,
+        "b": jnp.zeros((n_out,)),
+    }
+
+
+def _conv(key, h, w, c_in, c_out):
+    scale = np.sqrt(2.0 / (h * w * c_in))
+    return {
+        "w": jax.random.normal(key, (h, w, c_in, c_out)) * scale,
+        "b": jnp.zeros((c_out,)),
+    }
+
+
+def _apply_conv(p, x, *, stride=1, padding="VALID"):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+# --------------------------------------------------------------------------
+# FC
+# --------------------------------------------------------------------------
+
+
+def fc_init(key, input_shape=(28, 28, 1), n_classes=10, width=128):
+    d_in = int(np.prod(input_shape))
+    k1, k2 = jax.random.split(key)
+    return {"fc1": _dense(k1, d_in, width), "fc2": _dense(k2, width, n_classes)}
+
+
+def fc_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# --------------------------------------------------------------------------
+# CNN (paper C.1)
+# --------------------------------------------------------------------------
+
+
+def cnn_init(key, input_shape=(28, 28, 1), n_classes=10):
+    c_in = input_shape[-1]
+    ks = jax.random.split(key, 5)
+    h, w = input_shape[:2]
+    # conv valid 3x3 -> pool2 -> conv -> pool2 -> conv
+    h1, w1 = (h - 2) // 2, (w - 2) // 2
+    h2, w2 = (h1 - 2) // 2, (w1 - 2) // 2
+    h3, w3 = h2 - 2, w2 - 2
+    return {
+        "conv1": _conv(ks[0], 3, 3, c_in, 32),
+        "conv2": _conv(ks[1], 3, 3, 32, 64),
+        "conv3": _conv(ks[2], 3, 3, 64, 64),
+        "fc1": _dense(ks[3], h3 * w3 * 64, 64),
+        "fc2": _dense(ks[4], 64, n_classes),
+    }
+
+
+def cnn_apply(params, x):
+    x = jax.nn.relu(_apply_conv(params["conv1"], x))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_apply_conv(params["conv2"], x))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_apply_conv(params["conv3"], x))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# --------------------------------------------------------------------------
+# ResNet-8 (3 residual blocks of 2 convs + stem + head)
+# --------------------------------------------------------------------------
+
+
+def resnet8_init(key, input_shape=(32, 32, 3), n_classes=10, width=16):
+    ks = jax.random.split(key, 9)
+    c = width
+    p = {"stem": _conv(ks[0], 3, 3, input_shape[-1], c)}
+    for i, (cin, cout) in enumerate([(c, c), (c, 2 * c), (2 * c, 4 * c)]):
+        p[f"block{i}_conv1"] = _conv(ks[2 * i + 1], 3, 3, cin, cout)
+        p[f"block{i}_conv2"] = _conv(ks[2 * i + 2], 3, 3, cout, cout)
+        if cin != cout:
+            p[f"block{i}_proj"] = _conv(ks[2 * i + 2], 1, 1, cin, cout)
+    p["head"] = _dense(ks[8], 4 * c, n_classes)
+    return p
+
+
+def resnet8_apply(params, x):
+    x = jax.nn.relu(_apply_conv(params["stem"], x, padding="SAME"))
+    for i in range(3):
+        stride = 1 if i == 0 else 2
+        h = jax.nn.relu(_apply_conv(params[f"block{i}_conv1"], x,
+                                    stride=stride, padding="SAME"))
+        h = _apply_conv(params[f"block{i}_conv2"], h, padding="SAME")
+        sc = x
+        if f"block{i}_proj" in params:
+            sc = _apply_conv(params[f"block{i}_proj"], x, stride=stride,
+                             padding="SAME")
+        x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+MODELS = {
+    "fc": (fc_init, fc_apply),
+    "cnn": (cnn_init, cnn_apply),
+    "resnet8": (resnet8_init, resnet8_apply),
+}
+
+
+def get_vision_model(name: str):
+    return MODELS[name]
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

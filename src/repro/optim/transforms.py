@@ -1,0 +1,113 @@
+"""Gradient transforms and optimizers (optax-style, self-contained).
+
+The RBD/FPD transforms from ``repro.core.rbd`` chain in front of any of
+these: backprop -> [random-bases sketch] -> [momentum/adam] -> apply.
+The paper uses plain SGD without momentum or schedules; the framework
+supports the full set as ordinary substrate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transform(NamedTuple):
+    init: Any
+    update: Any  # (updates, state, params) -> (updates, state)
+
+
+def sgd() -> Transform:
+    return Transform(
+        init=lambda params: (),
+        update=lambda u, s, p=None: (u, s),
+    )
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Transform:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(u, m, p=None):
+        m = jax.tree_util.tree_map(lambda mi, ui: beta * mi + ui, m, u)
+        if nesterov:
+            u = jax.tree_util.tree_map(
+                lambda mi, ui: beta * mi + ui, m, u)
+        else:
+            u = m
+        return u, m
+
+    return Transform(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Transform:
+    class State(NamedTuple):
+        mu: Any
+        nu: Any
+        count: jax.Array
+
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return State(z, z, jnp.zeros((), jnp.int32))
+
+    def update(u, s, p=None):
+        count = s.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, s.mu, u)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, s.nu, u)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        u = jax.tree_util.tree_map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return u, State(mu, nu, count)
+
+    return Transform(init, update)
+
+
+def scale(factor: float) -> Transform:
+    return Transform(
+        init=lambda params: (),
+        update=lambda u, s, p=None: (
+            jax.tree_util.tree_map(lambda x: x * factor, u), s),
+    )
+
+
+def add_weight_decay(wd: float) -> Transform:
+    return Transform(
+        init=lambda params: (),
+        update=lambda u, s, p: (
+            jax.tree_util.tree_map(lambda ui, pi: ui + wd * pi, u, p), s),
+    )
+
+
+def chain(*transforms: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(u, states, p=None):
+        new_states = []
+        for t, s in zip(transforms, states):
+            u, s = t.update(u, s, p)
+            new_states.append(s)
+        return u, tuple(new_states)
+
+    return Transform(init, update)
+
+
+def get_optimizer(name: str) -> Transform:
+    return {"sgd": sgd(), "momentum": momentum(), "adam": adam()}[name]
+
+
+def apply_updates(params, updates, lr):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p - lr * u.astype(p.dtype)).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,58 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+Small but real: batched prompts, KV-cache reuse, jit'd decode step.  The
+dry-run lowers the same ``decode_step`` this engine drives; RBD is a
+training-time technique and plays no role at serving (DESIGN.md
+§Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.registry import Model
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_len: int = 2048):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        cfg = model.cfg
+
+        @jax.jit
+        def _prefill(params, tokens):
+            return transformer.prefill(cfg, params, tokens, max_len)
+
+        @jax.jit
+        def _step(params, cache, token, key, temperature):
+            logits, cache = model.decode_step(params, cache, token)
+            logits = logits[:, -1, :]
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(
+                key, logits / jnp.maximum(temperature, 1e-4))
+            tok = jnp.where(temperature <= 0.0, greedy, sampled)
+            return tok[:, None].astype(jnp.int32), cache
+
+        self._prefill = _prefill
+        self._step = _step
+
+    def generate(self, prompts, n_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0):
+        """prompts: (B, S) int32 -> (B, n_tokens) int32 continuations."""
+        logits, cache = self._prefill(self.params, prompts)
+        token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(
+            jnp.int32)
+        out = [token]
+        key = jax.random.PRNGKey(seed)
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            token, cache = self._step(self.params, cache, token, sub,
+                                      jnp.float32(temperature))
+            out.append(token)
+        return jnp.concatenate(out, axis=1)

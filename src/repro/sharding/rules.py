@@ -1,0 +1,177 @@
+"""Partitioning rules: param/activation/cache PartitionSpecs for the
+production meshes.
+
+Mesh axes: ``("data", "model")`` single-pod (16, 16) or
+``("pod", "data", "model")`` multi-pod (2, 16, 16).  The ``pod`` axis is
+pure data parallelism (it extends the batch axis); ``model`` carries
+tensor/expert parallelism.  Parameters are Megatron-style sharded:
+column-parallel in-projections, row-parallel out-projections, experts
+over ``model`` (expert parallelism), embeddings over vocab.
+
+Rules are (regex over the flattened leaf path) -> axis tuple template,
+where each element names which *tensor* dimension gets the ``model``
+axis; everything else is replicated.  RBD coordinates are tiny and always
+replicated.  A dimension is only sharded if divisible by the mesh axis
+size (checked at spec build time; falls back to replication otherwise).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# leaf-path regex -> index of the dimension to shard over "model"
+#  (negative indices count from the right)
+_PARAM_RULES: list[tuple[str, int]] = [
+    (r".*embed$", 0),                   # (V, D): vocab-sharded
+    (r".*dec_pos$", -1),
+    # rwkv channel-mix carries wk/wv names too but is an MLP: shard the
+    # hidden (F) axis both ways (iteration 9: the generic attention rule
+    # column-sharded cmix/wv (F, D) on D and XLA all-gathered the F-dim
+    # hidden every layer)
+    (r".*cmix/wk$", -1),                # (D, F)
+    (r".*cmix/wv$", -2),                # (F, D): row parallel
+    (r".*(wq|wk|wv)$", -1),             # (.., D, H*hd): column parallel
+    (r".*(bq|bk|bv)$", -1),
+    (r".*wo$", -2),                     # (.., H*hd, D): row parallel
+    (r".*(w_up|w_gate)$", -1),          # (.., D, F)
+    (r".*w_down$", -2),                 # (.., F, D)
+    (r".*moe/(w_up|w_gate|w_down)$", -3),  # (L, E, .., ..): expert parallel
+    (r".*moe/router$", None),           # tiny, replicated
+    (r".*(wr|wg)$", -1),                # rwkv in-projections
+    (r".*w_decay_a$", -1),
+    (r".*w_decay_b$", -2),
+    (r".*w_in$", -1),                   # mamba in-projection
+    (r".*w_out$", -2),
+    (r".*conv_w$", -1),
+    (r".*lm_head$", -1),                # (D, V)
+    (r".*fc1/w$", -1),
+]
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+# attention projections must shard on whole heads: splitting the packed
+# (H * hd) axis below head granularity makes XLA shard the FEATURE axis
+# of Q/K/V, turning every flash-attention score block into a partial-sum
+# all-reduce inside the (layers x q-blocks x kv-blocks) loop nest --
+# measured at 540 GB/chip/step on qwen2-0.5b (14 heads, kv=2, model=16).
+# See EXPERIMENTS.md §Perf iteration 2.
+_Q_HEAD_RULES = re.compile(r".*(wq|bq)$")
+_KV_HEAD_RULES = re.compile(r".*(wk|wv|bk|bv)$")
+_O_HEAD_RULES = re.compile(r".*wo$")
+
+
+def _head_divisible(name: str, heads: tuple[int, int] | None,
+                    model_size: int) -> bool:
+    if heads is None or "cmix/" in name:   # rwkv channel mix is an MLP
+        return True
+    n_heads, n_kv = heads
+    if _Q_HEAD_RULES.match(name) or _O_HEAD_RULES.match(name):
+        return n_heads % model_size == 0
+    if _KV_HEAD_RULES.match(name):
+        return n_kv % model_size == 0
+    return True
+
+
+def _spec_for(name: str, ndim: int, shape, model_size: int,
+              heads: tuple[int, int] | None = None) -> P:
+    for pattern, dim in _PARAM_RULES:
+        if re.match(pattern, name):
+            if dim is None:
+                return P()
+            d = dim % ndim
+            if shape[d] % model_size != 0:
+                return P()  # indivisible -> replicate
+            if not _head_divisible(name, heads, model_size):
+                return P()
+            axes: list[Any] = [None] * ndim
+            axes[d] = "model"
+            return P(*axes)
+    return P()
+
+
+# Below this parameter count a model trains as pure data parallel on the
+# production mesh: params replicated (f32 master + bf16 compute + grad
+# fits in 16 GB HBM up to ~1B params), batch sharded over data x model,
+# zero tensor-parallel collectives.  Above it, Megatron-style TP over
+# 'model'.  See EXPERIMENTS.md §Perf iteration 3.
+PURE_DP_MAX_PARAMS = 1_200_000_000  # 12 B/param state < 16 GB HBM
+
+
+def layout_policy(params_shape: Any, cfg=None) -> str:
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params_shape))
+    return "pure_dp" if n <= PURE_DP_MAX_PARAMS else "megatron"
+
+
+def param_specs(params_shape: Any, mesh, cfg=None) -> Any:
+    """PartitionSpec pytree for a parameter (shape) pytree.  ``cfg``
+    (ModelConfig) enables head-aware attention sharding decisions."""
+    if layout_policy(params_shape, cfg) == "pure_dp":
+        return jax.tree_util.tree_map(lambda _: P(), params_shape)
+    model_size = mesh.shape.get("model", 1)
+    heads = (cfg.n_heads, cfg.n_kv_heads) if cfg is not None else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        _spec_for(_leaf_name(p), len(l.shape), l.shape, model_size, heads)
+        for p, l in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_axes(mesh, layout: str = "megatron") -> tuple:
+    """The mesh axes that jointly shard the batch dimension.  Under the
+    pure_dp layout the 'model' axis carries batch too."""
+    names = tuple(mesh.axis_names)
+    axes = ("pod", "data") if "pod" in names else ("data",)
+    if layout == "pure_dp" and "model" in names:
+        axes = axes + ("model",)
+    return axes
+
+
+def batch_specs(batch_shape: Any, mesh, layout: str = "megatron") -> Any:
+    """Shard the leading (batch) dimension of every input leaf."""
+    baxes = batch_axes(mesh, layout)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % bsize == 0:
+            return P(baxes, *([None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh) -> Any:
+    """KV/state caches: batch axis over data(+pod), kv-heads (or, for MQA,
+    the sequence axis) over model.  Cache layout is (L, B, S, KV, hd) for
+    attention, (L, B, ...) for recurrent states."""
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+    msize = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        axes: list[Any] = [None] * nd
+        if nd >= 2 and leaf.shape[1] % bsize == 0:
+            axes[1] = baxes
+        if name.endswith(("k", "v")) and nd == 5:
+            if leaf.shape[3] % msize == 0:       # kv heads
+                axes[3] = "model"
+            elif leaf.shape[2] % msize == 0:     # MQA: shard sequence
+                axes[2] = "model"
+        elif nd >= 4 and leaf.shape[2] % msize == 0:
+            axes[2] = "model"                    # recurrent: heads axis
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

@@ -1,0 +1,55 @@
+"""Host-side training loop: data feed, jit, metrics, checkpoints."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.models.registry import Model
+from repro.train.step import make_train_step
+
+
+def train(
+    model: Model,
+    tcfg: TrainConfig,
+    data: Iterator,
+    *,
+    eval_fn: Optional[Callable] = None,
+    eval_every: int = 0,
+    log_every: int = 10,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    verbose: bool = True,
+):
+    """Simple single-process loop (examples / paper-repro experiments).
+    The multi-pod path lives in repro.launch.train."""
+    init_state, train_step = make_train_step(model, tcfg)
+    state = init_state(jax.random.PRNGKey(tcfg.seed))
+    train_step = jax.jit(train_step)
+
+    history = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = next(data)
+        state, metrics = train_step(state, batch)
+        if verbose and (step % log_every == 0 or step == tcfg.steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m.update(step=step, wall=time.time() - t0)
+            history.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"wall {m['wall']:.1f}s")
+        if eval_fn and eval_every and step % eval_every == eval_every - 1:
+            acc = eval_fn(state.params)
+            history[-1]["eval"] = float(acc)
+            if verbose:
+                print(f"  eval: {float(acc):.4f}")
+        if (checkpoint_dir and checkpoint_every
+                and step % checkpoint_every == checkpoint_every - 1):
+            from repro.checkpoint import io as ckpt
+
+            ckpt.save(checkpoint_dir, state, step)
+    return state, history

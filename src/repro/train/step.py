@@ -1,0 +1,135 @@
+"""Training step: loss, gradient, random-bases sketch, parameter update.
+
+``make_train_step`` builds the single-program step used both by the
+single-host examples and (wrapped in pjit / shard_map by
+``repro.launch.train``) by the production launcher.  The RBD transform
+is a drop-in stage of the update chain; disabling it yields the SGD
+baseline the paper compares against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RBDConfig, TrainConfig
+from repro.core import compartments, rbd as rbd_lib
+from repro.models.registry import Model
+from repro.optim import transforms as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    rbd_state: Any          # RBDState or ()
+    opt_state: Any
+    step: jax.Array
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits: (B, S, V) f32; labels: (B, S) i32 -> scalar mean CE."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def make_plan(model: Model, rbd_cfg: RBDConfig, params_shape=None):
+    """Compartment plan for the model's parameter pytree (shapes only)."""
+    if params_shape is None:
+        params_shape = jax.eval_shape(
+            model.init, jax.random.PRNGKey(0))
+    return compartments.make_plan(
+        params_shape,
+        rbd_cfg.total_dim,
+        granularity=rbd_cfg.granularity,
+        allocation=rbd_cfg.allocation,
+        distribution=rbd_cfg.distribution,
+        normalization=rbd_cfg.normalization,
+        is_stacked=model.is_stacked,
+    )
+
+
+def make_transform(model: Model, rbd_cfg: RBDConfig, params_shape=None):
+    if not rbd_cfg.enabled:
+        return None
+    plan = make_plan(model, rbd_cfg, params_shape)
+    return rbd_lib.RandomBasesTransform(
+        plan, base_seed=rbd_cfg.base_seed, redraw=rbd_cfg.redraw,
+        backend=rbd_cfg.backend,
+    )
+
+
+def make_loss_fn(model: Model, aux_coef: float = 0.01) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        ce = softmax_cross_entropy(logits, batch["labels"])
+        return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    transform: Optional[rbd_lib.RandomBasesTransform] = None,
+                    axis_name: Optional[str] = None):
+    """Returns (init_state_fn, train_step_fn).
+
+    ``axis_name``: if set, the step runs inside shard_map over that axis
+    and uses the paper's shared-seed exchange (``tcfg.rbd.mode``) instead
+    of relying on an implicit D-dimensional gradient all-reduce.
+    """
+    loss_fn = make_loss_fn(model, model.cfg.router_aux_coef)
+    optimizer = opt.get_optimizer(tcfg.optimizer)
+    if transform is None and tcfg.rbd.enabled:
+        transform = make_transform(model, tcfg.rbd)
+
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        return TrainState(
+            params=params,
+            rbd_state=(transform.init(params) if transform else ()),
+            opt_state=optimizer.init(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+
+        if axis_name is not None and transform is None:
+            # SGD baseline under manual data parallelism: the classic
+            # D-dimensional gradient all-reduce the paper eliminates.
+            grads = jax.lax.pmean(grads, axis_name)
+            loss = jax.lax.pmean(loss, axis_name)
+
+        rbd_state = state.rbd_state
+        if transform is not None:
+            if axis_name is None:
+                updates, rbd_state = transform.update(grads, rbd_state)
+            else:
+                from repro.core import distributed
+
+                loss = jax.lax.pmean(loss, axis_name)
+                fn = (distributed.shared_basis_update
+                      if tcfg.rbd.mode == "shared_basis"
+                      else distributed.independent_bases_update)
+                updates, rbd_state = fn(transform, grads, rbd_state,
+                                        axis_name)
+        else:
+            updates = grads
+
+        if tcfg.weight_decay:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u + tcfg.weight_decay * p, updates,
+                state.params)
+        updates, opt_state = optimizer.update(updates, state.opt_state,
+                                              state.params)
+        params = opt.apply_updates(state.params, updates,
+                                   tcfg.learning_rate)
+        metrics = dict(metrics, loss=loss,
+                       update_norm=opt.global_norm(updates))
+        return TrainState(params, rbd_state, opt_state, state.step + 1), \
+            metrics
+
+    return init_state, train_step

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+REDUCED config (<=2 layers, d_model<=256, <=4 experts) runs one forward
+and one RBD train step on CPU with shape and finiteness assertions.
+The FULL configs are exercised via the dry-run only."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import InputShape, RBDConfig, TrainConfig
+from repro.models import get_model
+from repro.train import step as steplib
+
+SMOKE_SHAPE = InputShape("smoke", seq_len=32, global_batch=2, kind="train")
+DECODE_SHAPE = InputShape("smoke-dec", seq_len=48, global_batch=2,
+                          kind="decode")
+
+
+@pytest.fixture(scope="module", params=sorted(ARCH_IDS))
+def arch(request):
+    cfg = get_config(request.param).reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_forward_shapes_and_finiteness(arch):
+    cfg, model, params = arch
+    batch = model.make_batch(SMOKE_SHAPE)
+    logits, aux = model.forward(params, batch)
+    b, s = SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{cfg.name}: NaN in logits"
+    assert bool(jnp.isfinite(aux)), f"{cfg.name}: NaN aux loss"
+
+
+def test_rbd_train_step(arch):
+    cfg, model, params = arch
+    tcfg = TrainConfig(model=cfg, rbd=RBDConfig(total_dim=256),
+                       learning_rate=0.1)
+    init_state, train_step = steplib.make_train_step(model, tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    batch = model.make_batch(SMOKE_SHAPE)
+    new_state, metrics = jax.jit(train_step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["update_norm"]) > 0.0
+    # parameters actually moved
+    moved = any(
+        not jnp.allclose(a, b)
+        for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                        jax.tree_util.tree_leaves(new_state.params)))
+    assert moved, f"{cfg.name}: RBD step did not change parameters"
+    assert int(new_state.rbd_state.step) == 1
+
+
+def test_decode_step(arch):
+    cfg, model, params = arch
+    b = DECODE_SHAPE.global_batch
+    cache = model.init_cache(b, DECODE_SHAPE.seq_len)
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec, frontends
+
+        cache = encdec.prefill_cross_cache(
+            cfg, params, cache, frontends.audio_frames(cfg, b))
+    token = jnp.zeros((b, 1), jnp.int32)
+    logits, cache = jax.jit(model.decode_step)(params, cache, token)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{cfg.name}: NaN at decode"
+    assert int(cache["len"]) == 1
+    # a second step must append, not overwrite
+    logits2, cache = jax.jit(model.decode_step)(params, cache, token)
+    assert int(cache["len"]) == 2
+
+
+def test_decode_matches_forward(arch):
+    """Teacher-forced forward and step-by-step decode must agree --
+    validates cache correctness (positions, masks, RoPE)."""
+    import dataclasses
+
+    from repro.models import get_model as _gm
+
+    cfg, model, params = arch
+    if cfg.is_encoder_decoder:
+        pytest.skip("covered by encdec-specific test")
+    if cfg.is_moe:
+        # capacity dropping is batch-order dependent; equivalence holds
+        # only in the drop-free regime (capacity >= T*k worst case)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+        model = _gm(cfg)
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.n_patches:
+        from repro.models import frontends
+
+        batch["patches"] = frontends.vision_patches(cfg, b)
+    logits_full, _ = model.forward(params, batch)
+
+    cache = model.init_cache(b, s + 4)
+    outs = []
+    if cfg.n_patches:
+        # VLM: patch positions precede text; step the patches through
+        # decode is not supported in the reduced test -- compare the
+        # text-only tail against a text-only forward instead.
+        logits_full, _ = model.forward(params, {"tokens": toks})
+    for i in range(s):
+        lg, cache = model.decode_step(params, cache, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    assert jnp.allclose(logits_full, logits_dec, rtol=2e-2, atol=2e-2), (
+        f"{cfg.name}: max err "
+        f"{float(jnp.abs(logits_full - logits_dec).max())}")

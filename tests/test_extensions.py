@@ -1,0 +1,69 @@
+"""Beyond-paper extensions from the paper's own future-work list:
+sparse projections (refs [24, 28]) and explicit orthogonalization
+(ref [7], supplementary B.8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_plan, projector, rng
+
+
+def test_sparse_distribution_statistics():
+    s = rng.fold_seed(3)
+    x = np.asarray(rng.generate_vector(s, 0, 300_000,
+                                       distribution="sparse"))
+    vals = set(np.unique(np.round(x, 5)))
+    assert vals == {np.float32(0.0), np.float32(np.round(np.sqrt(3), 5)),
+                    np.float32(np.round(-np.sqrt(3), 5))}
+    assert abs((x == 0).mean() - 2 / 3) < 0.01   # density 1/3
+    assert abs(x.mean()) < 0.01
+    assert abs(x.var() - 1.0) < 0.02             # unit variance
+
+
+def test_sparse_projection_roundtrip():
+    params = {"w": jnp.ones((80, 25))}
+    plan = make_plan(params, 32, distribution="sparse")
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (80, 25))}
+    sk = projector.rbd_gradient(grads, plan, rng.fold_seed(5))
+    assert bool(jnp.isfinite(sk["w"]).all())
+    dot = float(jnp.vdot(grads["w"], sk["w"]))
+    assert dot > 0  # PSD sketch property holds for sparse bases too
+
+
+def test_orthonormal_basis_rows():
+    b = projector._ortho_basis(rng.fold_seed(1), 16, (40, 5), "normal")
+    gram = b @ b.T
+    np.testing.assert_allclose(np.asarray(gram), np.eye(16), atol=1e-5)
+
+
+def test_orthonormal_sketch_is_idempotent_projection():
+    """With orthonormal rows, g_RBD = P^T P g is an exact orthogonal
+    projector: applying it twice equals applying it once."""
+    params = {"w": jnp.ones((60, 10))}
+    plan = make_plan(params, 24, normalization="orthonormal")
+    g = {"w": jax.random.normal(jax.random.PRNGKey(2), (60, 10))}
+    seed = rng.fold_seed(9)
+    s1 = projector.rbd_gradient(g, plan, seed)
+    s2 = projector.rbd_gradient(s1, plan, seed)
+    np.testing.assert_allclose(np.asarray(s1["w"]), np.asarray(s2["w"]),
+                               rtol=1e-4, atol=1e-5)
+    # and the projection shrinks the norm (strict subspace)
+    assert float(jnp.linalg.norm(s1["w"])) < float(jnp.linalg.norm(g["w"]))
+
+
+def test_orthonormal_budget_guard():
+    params = {"w": jnp.ones((1 << 14, 1 << 11))}  # 32M elements
+    plan = make_plan(params, 8, normalization="orthonormal")
+    g = {"w": jnp.ones((1 << 14, 1 << 11))}
+    with pytest.raises(ValueError, match="orthonormal"):
+        projector.rbd_gradient(g, plan, rng.fold_seed(0))
+
+
+def test_orthonormal_deterministic_across_workers():
+    """Two 'workers' regenerating the orthonormal basis from the same
+    seed must agree bit-for-bit (QR sign fixed)."""
+    b1 = projector._ortho_basis(rng.fold_seed(7), 8, (33,), "normal")
+    b2 = projector._ortho_basis(rng.fold_seed(7), 8, (33,), "normal")
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))

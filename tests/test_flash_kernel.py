@@ -1,0 +1,63 @@
+"""Pallas flash-attention kernel vs the jnp blockwise oracle (which is
+itself validated against naive attention in test_attention.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fk
+from repro.models import attention as attn
+
+
+def _qkv(key, b, sq, sk, h, kv, hd):
+    return (
+        jax.random.normal(key, (b, sq, h, hd)),
+        jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kv, hd)),
+        jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kv, hd)),
+    )
+
+
+@pytest.mark.parametrize("sq,hkv,window", [
+    (256, (4, 4), None),          # MHA causal
+    (256, (8, 2), None),          # GQA 4:1
+    (200, (4, 1), None),          # MQA, ragged length
+    (256, (4, 2), 64),            # sliding window
+    (384, (2, 2), 100),           # window not a block multiple
+])
+def test_flash_kernel_matches_oracle(sq, hkv, window):
+    h, kv = hkv
+    q, k, v = _qkv(jax.random.PRNGKey(sq + h), 2, sq, sq, h, kv, 16)
+    out_k = fk.flash_attention(q, k, v, causal=True, window=window,
+                               q_block=128, kv_block=128)
+    out_r = attn.flash_attention(q, k, v, causal=True, window=window,
+                                 q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_kernel_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 1, 128, 256, 4, 4, 32)
+    out_k = fk.flash_attention(q, k, v, causal=False)
+    out_r = attn.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_kernel_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 128, 128, 4, 2, 32)
+    q, k, v = (a.astype(jnp.bfloat16) for a in (q, k, v))
+    out_k = fk.flash_attention(q, k, v)
+    assert out_k.dtype == jnp.bfloat16
+    out_r = attn.flash_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+def test_flash_kernel_block_invariance():
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 256, 256, 2, 2, 16)
+    a = fk.flash_attention(q, k, v, q_block=128, kv_block=128)
+    b = fk.flash_attention(q, k, v, q_block=64, kv_block=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,138 @@
+"""RBD/FPD mathematical invariants (property-based where it matters)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_plan, projector, rng
+from repro.core.rbd import RandomBasesTransform
+
+
+def _params(key, sizes=((40, 8), (3, 16, 5), (25,))):
+    out = {}
+    for i, s in enumerate(sizes):
+        key, k = jax.random.split(key)
+        name = f"layers/w{i}" if len(s) == 3 else f"p{i}"
+        out[name] = jax.random.normal(k, s)
+    return out
+
+
+def test_sketch_matches_materialized_projection(rng_key):
+    """g_RBD == P_hat P_hat^T g with P materialized -- for both
+    normalizations and all distributions."""
+    params = _params(rng_key)
+    grads = _params(jax.random.fold_in(rng_key, 1))
+    for dist in ("normal", "uniform", "bernoulli"):
+        for norm in ("rsqrt_dim", "exact"):
+            plan = make_plan(params, 48, distribution=dist,
+                             normalization=norm, granularity="leaf")
+            seed = rng.fold_seed(5)
+            sketch = projector.rbd_gradient(grads, plan, seed)
+            for lp in plan.leaves:
+                leaf = jax.tree_util.tree_leaves(grads)[lp.leaf_idx]
+                lseed = rng.fold_seed(seed, lp.seed_tag)
+                p = rng.generate_block(lseed, 0, 0, (lp.dim, lp.size), dist)
+                if norm == "exact":
+                    p = p / jnp.linalg.norm(p, axis=1, keepdims=True)
+                else:
+                    p = p / np.sqrt(lp.size)
+                expect = (p.T @ (p @ leaf.reshape(-1))).reshape(leaf.shape)
+                got = jax.tree_util.tree_leaves(sketch)[lp.leaf_idx]
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(expect),
+                    rtol=2e-3, atol=2e-3)
+
+
+def test_fpd_is_fixed_rbd_redraws(rng_key):
+    params = _params(rng_key)
+    grads = _params(jax.random.fold_in(rng_key, 1))
+    plan = make_plan(params, 32)
+    rbd = RandomBasesTransform(plan, 0, redraw=True)
+    fpd = RandomBasesTransform(plan, 0, redraw=False)
+    s_r = rbd.init(params)
+    s_f = fpd.init(params)
+    u1r, s_r = rbd.update(grads, s_r)
+    u2r, s_r = rbd.update(grads, s_r)
+    u1f, s_f = fpd.update(grads, s_f)
+    u2f, s_f = fpd.update(grads, s_f)
+    l1r, l2r = (jax.tree_util.tree_leaves(u)[0] for u in (u1r, u2r))
+    l1f, l2f = (jax.tree_util.tree_leaves(u)[0] for u in (u1f, u2f))
+    assert not jnp.allclose(l1r, l2r)           # RBD redraws
+    np.testing.assert_allclose(np.asarray(l1f), np.asarray(l2f))  # FPD fixed
+    np.testing.assert_allclose(np.asarray(l1r), np.asarray(l1f))  # step0 equal
+
+
+def test_sketch_is_positively_aligned(rng_key):
+    """<g, P^T P g> >= 0 always (PSD sketch): descent direction is never
+    reversed -- the property that makes RBD a descent method."""
+    params = _params(rng_key)
+    plan = make_plan(params, 64)
+    for i in range(5):
+        grads = _params(jax.random.fold_in(rng_key, i))
+        sketch = projector.rbd_gradient(grads, plan, rng.fold_seed(i))
+        dot = sum(
+            jnp.vdot(a, b) for a, b in zip(
+                jax.tree_util.tree_leaves(grads),
+                jax.tree_util.tree_leaves(sketch)))
+        assert float(dot) >= 0.0
+
+
+@given(d=st.integers(1, 64), q=st.integers(2, 300))
+@settings(max_examples=20, deadline=None)
+def test_projection_unbiasedness_shape(d, q):
+    """Projection/reconstruction round-trip has the right shapes and is
+    finite for arbitrary (d, q)."""
+    seed = rng.fold_seed(1)
+    g = rng.generate_vector(rng.fold_seed(2), 0, q)  # arbitrary vector
+    u, sq = projector._project_flat(seed, g, d, "normal")
+    assert u.shape == (d,) and sq.shape == (d,)
+    r = projector._reconstruct_flat(seed, u, (q,), "normal", jnp.float32)
+    assert r.shape == (q,)
+    assert bool(jnp.isfinite(r).all())
+
+
+def test_expected_sketch_preserves_gradient_direction(rng_key):
+    """E_P[P_hat P_hat^T g] = (d/Q) g for rsqrt_dim normalization: the
+    sketch is an unbiased (scaled) gradient estimator.  Checked by
+    averaging over many seeds."""
+    q, d, n_seeds = 64, 16, 400
+    g = jax.random.normal(rng_key, (q,))
+    params = {"w": g}
+    plan = make_plan(params, d)
+
+    def one(i):
+        return projector.rbd_gradient({"w": g}, plan, rng.fold_seed(i))["w"]
+
+    acc = jnp.mean(jax.vmap(one)(jnp.arange(n_seeds, dtype=jnp.uint32)),
+                   axis=0)
+    expect = g * (d / q)
+    # per-coordinate MC std ~ sqrt(d)/Q/sqrt(n); testing the max over Q
+    # coordinates needs the extreme-value allowance (~8 sigma)
+    err = np.abs(np.asarray(acc - expect))
+    tol = 8 * np.sqrt(d) / q / np.sqrt(n_seeds) * float(jnp.abs(g).max() + 1)
+    assert err.max() < tol, (err.max(), tol)
+
+
+def test_compartment_plan_budget(rng_key):
+    params = _params(rng_key)
+    plan = make_plan(params, 100, granularity="layer",
+                     is_stacked=lambda n: n.startswith("layers"))
+    assert abs(plan.total_dim - 100) <= len(plan.leaves) * 3
+    assert all(lp.dim >= 1 for lp in plan.leaves)
+    assert all(lp.dim <= lp.size for lp in plan.leaves)
+    # stacked leaf got per-layer compartments
+    stacked = [lp for lp in plan.leaves if lp.stacked]
+    assert stacked and stacked[0].n_stack == 3
+
+
+def test_even_plan():
+    from repro.core import make_even_plan
+
+    plan = make_even_plan(1000, 4, 40)
+    assert plan.leaves[0].n_stack == 4
+    assert plan.leaves[0].size == 250
+    assert plan.total_dim == 40
+    with pytest.raises(ValueError):
+        make_even_plan(1001, 4, 40)
