@@ -1,4 +1,5 @@
-"""Paper section 4.2 analogue: on-demand basis generation throughput.
+"""Paper section 4.2 analogue: on-demand basis generation throughput,
+plus the single-launch packed-step benchmark.
 
 The paper's claim is architectural (hardware PRNG makes regeneration
 cheaper than communication).  On this CPU container we (a) measure the
@@ -7,10 +8,35 @@ FLOP cost to show the workload is generation-bound, and (c) derive the
 TPU-side expectation from the v5e VPU ops budget (the Pallas kernel's
 ~100 VPU ops/sample at 197 TFLOP/s-equivalent vector throughput).
 Wall-clock kernel numbers on real TPU replace column (a) in deployment.
+
+The fused-step section compares one RBD optimizer step on the
+qwen2-0.5b reduced config between
+
+* the per-compartment path: project -> reconstruct -> apply, one
+  (vmapped) launch per pytree leaf per stage, delta materialized in HBM;
+* the packed path (``core.rbd.rbd_step``): two launches total,
+  update applied in-stream.
+
+reporting kernel launches/step (static count), wall-clock samples/s
+(basis elements generated per second), and MODELED HBM bytes/step.
+
+The byte model counts KERNEL-STAGE traffic (f32): unfused moves g,
+delta (write+read), theta (read+write) = 20 bytes/param; fused moves
+g, theta (read+write) = 12 bytes/param -- the 8-byte/param delta
+round-trip is what fusion deletes.  Caveat, tracked in ROADMAP: the
+current rbd_step additionally pays pack/unpack STAGING copies
+(~24 bytes/param) because TrainState stores parameters/gradients
+unpacked; those copies are excluded here because they vanish once the
+train state keeps the packed representation across steps (the
+layout is static), which is the intended endgame.  Machine-readable
+results land in ``BENCH_kernel_throughput.json`` at the repo root so
+the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -63,7 +89,123 @@ def run(quick: bool = True):
     common.emit(rows, "kernel generation throughput")
     print(f"CPU generation-bound check: project adds "
           f"{dtj * 1e3:.1f} ms over raw gen -> dot cost is subdominant")
+
+    step_rows = fused_step_benchmark(quick=quick)
+    common.emit(step_rows, "fused packed step (qwen2-0.5b reduced)")
+    _write_json(rows + step_rows)
+    return rows + step_rows
+
+
+def fused_step_benchmark(quick: bool = True):
+    """Per-compartment project->reconstruct->apply vs the two-launch
+    packed step, on the qwen2-0.5b reduced parameter tree."""
+    from repro.configs import get_config
+    from repro.core import projector
+    from repro.core.rbd import RandomBasesTransform, rbd_step
+    from repro.launch.hlo_analysis import count_pallas_calls
+    from repro.models import get_model
+    from repro.train import step as steplib
+
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape,
+                                    jnp.float32), params)
+    from repro.configs.base import RBDConfig
+
+    rbd_cfg = RBDConfig(total_dim=1024)
+    plan = steplib.make_plan(model, rbd_cfg, params)
+    lr = 0.125
+    seed = rng.fold_seed(3)
+    d_total = plan.total_params
+    # basis elements generated per step: one projection + one
+    # reconstruction pass over every compartment's (dim x size) block
+    samples = 2 * sum(lp.n_stack * lp.dim * lp.size for lp in plan.leaves)
+
+    def per_leaf_step(p, g):
+        coords, norms = projector.project(g, plan, seed, return_norms=True)
+        delta = projector.reconstruct(coords, plan, seed, p, row_sq=norms)
+        return jax.tree_util.tree_map(
+            lambda pi, di: pi - lr * di.astype(jnp.float32), p, delta)
+
+    def packed_step(p, g):
+        return rbd_step(p, g, plan, seed, lr, backend="jnp")
+
+    rows = []
+    for name, fn, hbm_per_param in [
+        ("per_leaf_step_jnp", per_leaf_step, 20.0),
+        ("packed_step_jnp", packed_step, 12.0),
+    ]:
+        f = jax.jit(fn)
+        dt = _time(f, params, grads, reps=(3 if quick else 10))
+        rows.append({
+            "stage": name,
+            "samples_per_s": samples / dt,
+            "wall_ms": dt * 1e3,
+            "launches_per_step": 0,          # jnp path: no kernels
+            "hbm_bytes_per_step": hbm_per_param * d_total,
+        })
+
+    # launch accounting on the pallas backend (static trace, no timing:
+    # interpret-mode wall clock measures the interpreter, not the TPU)
+    t = RandomBasesTransform(plan, 0, backend="pallas")
+    st = t.init(params)
+
+    def per_leaf_pallas(p, g):
+        u, _ = t.update(g, st)
+        return jax.tree_util.tree_map(lambda pi, ui: pi - lr * ui, p, u)
+
+    n_per_leaf = count_pallas_calls(per_leaf_pallas, params, grads)
+    n_packed = count_pallas_calls(
+        lambda p, g: rbd_step(p, g, plan, seed, lr, backend="pallas"),
+        params, grads)
+    # modeled v5e step time: roofline over (VPU generation, MXU dots,
+    # HBM traffic) + per-launch dispatch overhead.  CPU wall clocks above
+    # measure XLA-on-host, not the kernel backend -- on the actual
+    # hardware the step is generation-bound and the fused win is the
+    # deleted launches + the delta round-trip.
+    from benchmarks.costmodel import GEN_OPS_PER_ELEM
+
+    v5e_vpu, v5e_mxu, v5e_bw = 4.9e12, 1.97e14, 8.19e11
+    launch_overhead_s = 3e-6
+    dots_flops = 2 * samples  # 2 FLOPs per generated element, both passes
+
+    for name, launches, hbm in [
+        ("per_leaf_step_v5e_modeled", n_per_leaf, 20.0 * d_total),
+        ("packed_step_v5e_modeled", n_packed, 12.0 * d_total),
+    ]:
+        t_compute = (samples * GEN_OPS_PER_ELEM) / v5e_vpu \
+            + dots_flops / v5e_mxu
+        t = max(t_compute, hbm / v5e_bw) + launches * launch_overhead_s
+        rows.append({
+            "stage": name,
+            "samples_per_s": samples / t,
+            "wall_ms": t * 1e3,
+            "launches_per_step": launches,
+            "hbm_bytes_per_step": hbm,
+        })
+    assert n_packed == 2, n_packed
+    assert rows[-1]["wall_ms"] < rows[-2]["wall_ms"], \
+        "fused step must beat the per-compartment path"
     return rows
+
+
+def _write_json(rows, path=None):
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_kernel_throughput.json")
+    payload = {
+        "benchmark": "kernel_throughput",
+        "device": jax.devices()[0].device_kind,
+        "rows": [
+            {k: (None if isinstance(v, float) and v != v else v)
+             for k, v in r.items()} for r in rows
+        ],
+    }
+    with open(os.path.normpath(path), "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.normpath(path)}")
 
 
 if __name__ == "__main__":

@@ -141,6 +141,18 @@ class RBDConfig:
     mode: str = "shared_basis"      # shared_basis | independent_bases
     base_seed: int = 0
     backend: str = "jnp"            # jnp | pallas
+    packed: str = "auto"            # auto | on | off -- single-launch
+                                    # packed step (see core.rbd.rbd_step).
+                                    # "auto" enables it on the pallas
+                                    # backend (two launches/step); the
+                                    # CPU jnp path keeps the wider
+                                    # per-leaf chunks unless forced "on".
+
+    @property
+    def use_packed(self) -> bool:
+        if self.packed == "auto":
+            return self.backend == "pallas"
+        return self.packed == "on"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,3 +166,8 @@ class TrainConfig:
     batch_size: int = 32
     seq_len: int = 128
     seed: int = 0
+    log_update_norm: bool = True    # fused path: the update never
+                                    # materializes, so this metric costs
+                                    # an extra read of both param trees
+                                    # per step -- disable on
+                                    # bandwidth-bound production runs

@@ -29,6 +29,7 @@ adjusted dynamically based on the number of parameters"):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Sequence
 
 import jax
@@ -76,6 +77,10 @@ class Plan:
     @property
     def reduction_factor(self) -> float:
         return self.total_params / max(self.total_dim, 1)
+
+    def packed(self, pos_block: int = 512, dir_block: int = 8) -> "PackedLayout":
+        """Static packed layout for the single-launch step (cached)."""
+        return packed_layout(self, pos_block, dir_block)
 
     def describe(self) -> str:
         lines = [
@@ -250,4 +255,169 @@ def make_even_plan(
         total_params=n_params,
         distribution=distribution,
         normalization=normalization,
+    )
+
+
+# ---------------------------------------------------------------------------
+# packed layout (single-launch step)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedLayout:
+    """Host-side static description of the packed multi-compartment step.
+
+    Every compartment of the plan (a stacked leaf contributes ``n_stack``
+    consecutive *segments*) is placed in one packed parameter buffer and
+    one packed coordinate buffer:
+
+    * parameter buffer (``q_packed`` f32): each segment's flat parameters,
+      zero-padded to a multiple of ``pos_block`` so every segment starts on
+      a tile boundary.  A stacked leaf's layers are consecutive segments
+      with stride ``seg_psize`` -- packing a leaf is one pad + reshape, no
+      per-layer loop.
+    * coordinate buffer (``d_packed`` f32): each segment's ``dim``
+      coefficients, padded to a multiple of ``dir_block``.
+
+    The per-tile tables linearize the ragged (segment, dir_block,
+    pos_block) iteration space so one ``pallas_call`` with a 1-D grid
+    covers every compartment: entry ``t`` names the tile's segment, its
+    block indices into the packed buffers, its within-segment counter
+    offsets for the PRNG, and whether it is the first visit to its output
+    block (accumulator init).  Projection tiles are ordered position-
+    innermost (the (dir_block, 1) output coordinate block stays resident
+    in VMEM across the accumulation sweep); reconstruct-apply tiles are
+    ordered direction-innermost (the (1, pos_block) theta block stays
+    resident).  All tables are host-side numpy -- they bake into the jit
+    program as constants and cost nothing per step.
+    """
+
+    pos_block: int
+    dir_block: int
+    n_segments: int
+    q_packed: int             # packed parameter-buffer length (padded)
+    d_packed: int             # packed coordinate-buffer length (padded)
+    # per-segment arrays, all shape (n_segments,)
+    seg_leaf: np.ndarray      # index into plan.leaves
+    seg_layer: np.ndarray     # layer index within the (possibly) stacked leaf
+    seg_size: np.ndarray      # valid parameter count Q_k
+    seg_dim: np.ndarray       # valid coefficient count d_k
+    seg_psize: np.ndarray     # Q_k padded to pos_block
+    seg_pdim: np.ndarray      # d_k padded to dir_block
+    seg_param_off: np.ndarray # segment start in the packed parameter buffer
+    seg_coord_off: np.ndarray # segment start in the packed coordinate buffer
+    # projection tile tables, shape (n_proj_tiles,); pj innermost per (seg, di)
+    pt_seg: np.ndarray
+    pt_row0: np.ndarray       # di * dir_block   (PRNG row counter offset)
+    pt_col0: np.ndarray       # pj * pos_block   (within-segment position)
+    pt_gblk: np.ndarray       # pos_block-granular block index into params
+    pt_ublk: np.ndarray       # dir_block-granular block index into coords
+    pt_init: np.ndarray       # 1 iff first visit to this output block
+    pt_q: np.ndarray          # valid positions (for column masking)
+    # reconstruct-apply tile tables, (n_recon_tiles,); di innermost per (seg, pj)
+    rt_seg: np.ndarray
+    rt_row0: np.ndarray
+    rt_col0: np.ndarray
+    rt_gblk: np.ndarray
+    rt_sblk: np.ndarray
+    rt_init: np.ndarray
+    # coordinate-slot validity (d_packed,): 0.0 on padding, 1.0 on live slots
+    coord_valid: np.ndarray
+    # rsqrt_dim normalization factors per slot (0 on padding)
+    coord_inv_sqrt_q: np.ndarray
+
+    @property
+    def n_proj_tiles(self) -> int:
+        return int(self.pt_seg.shape[0])
+
+    @property
+    def n_recon_tiles(self) -> int:
+        return int(self.rt_seg.shape[0])
+
+
+@functools.lru_cache(maxsize=32)
+def packed_layout(plan: Plan, pos_block: int = 512,
+                  dir_block: int = 8) -> PackedLayout:
+    """Precompute the packed layout + tile tables for a plan (host-side)."""
+    seg_leaf, seg_layer, seg_size, seg_dim = [], [], [], []
+    for li, lp in enumerate(plan.leaves):
+        for layer in range(lp.n_stack):
+            seg_leaf.append(li)
+            seg_layer.append(layer)
+            seg_size.append(lp.size)
+            seg_dim.append(lp.dim)
+    seg_leaf = np.asarray(seg_leaf, np.int32)
+    seg_layer = np.asarray(seg_layer, np.int32)
+    seg_size = np.asarray(seg_size, np.int64)
+    seg_dim = np.asarray(seg_dim, np.int64)
+
+    def pad_to(x, m):
+        return -(-x // m) * m
+
+    seg_psize = pad_to(seg_size, pos_block)
+    seg_pdim = pad_to(seg_dim, dir_block)
+    seg_param_off = np.concatenate([[0], np.cumsum(seg_psize)[:-1]])
+    seg_coord_off = np.concatenate([[0], np.cumsum(seg_pdim)[:-1]])
+    q_packed = int(seg_psize.sum())
+    d_packed = int(seg_pdim.sum())
+
+    pt, rt = [], []
+    for s in range(len(seg_leaf)):
+        n_di = int(seg_pdim[s]) // dir_block
+        n_pj = int(seg_psize[s]) // pos_block
+        for di in range(n_di):
+            for pj in range(n_pj):
+                pt.append((
+                    s, di * dir_block, pj * pos_block,
+                    (seg_param_off[s] + pj * pos_block) // pos_block,
+                    (seg_coord_off[s] + di * dir_block) // dir_block,
+                    int(pj == 0), seg_size[s],
+                ))
+        for pj in range(n_pj):
+            for di in range(n_di):
+                rt.append((
+                    s, di * dir_block, pj * pos_block,
+                    (seg_param_off[s] + pj * pos_block) // pos_block,
+                    (seg_coord_off[s] + di * dir_block) // dir_block,
+                    int(di == 0),
+                ))
+    pt = np.asarray(pt, np.int64).reshape(-1, 7)
+    rt = np.asarray(rt, np.int64).reshape(-1, 6)
+
+    slot = np.arange(d_packed, dtype=np.int64)
+    seg_of_slot = np.searchsorted(seg_coord_off, slot, side="right") - 1
+    within = slot - seg_coord_off[seg_of_slot]
+    coord_valid = (within < seg_dim[seg_of_slot]).astype(np.float32)
+    coord_inv_sqrt_q = coord_valid / np.sqrt(
+        seg_size[seg_of_slot].astype(np.float64)).astype(np.float32)
+
+    return PackedLayout(
+        pos_block=pos_block,
+        dir_block=dir_block,
+        n_segments=int(seg_leaf.shape[0]),
+        q_packed=q_packed,
+        d_packed=d_packed,
+        seg_leaf=seg_leaf,
+        seg_layer=seg_layer,
+        seg_size=seg_size.astype(np.int64),
+        seg_dim=seg_dim.astype(np.int64),
+        seg_psize=seg_psize.astype(np.int64),
+        seg_pdim=seg_pdim.astype(np.int64),
+        seg_param_off=seg_param_off.astype(np.int64),
+        seg_coord_off=seg_coord_off.astype(np.int64),
+        pt_seg=pt[:, 0].astype(np.int32),
+        pt_row0=pt[:, 1].astype(np.uint32),
+        pt_col0=pt[:, 2].astype(np.uint32),
+        pt_gblk=pt[:, 3].astype(np.int32),
+        pt_ublk=pt[:, 4].astype(np.int32),
+        pt_init=pt[:, 5].astype(np.int32),
+        pt_q=pt[:, 6].astype(np.int32),
+        rt_seg=rt[:, 0].astype(np.int32),
+        rt_row0=rt[:, 1].astype(np.uint32),
+        rt_col0=rt[:, 2].astype(np.uint32),
+        rt_gblk=rt[:, 3].astype(np.int32),
+        rt_sblk=rt[:, 4].astype(np.int32),
+        rt_init=rt[:, 5].astype(np.int32),
+        coord_valid=coord_valid,
+        coord_inv_sqrt_q=coord_inv_sqrt_q,
     )

@@ -36,6 +36,14 @@ from repro.core import rng
 from repro.core.rbd import RandomBasesTransform, RBDState
 
 
+def _axis_size(axis_name, gathered_dim: int) -> int:
+    """Mesh-axis size; jax.lax.axis_size only exists on newer jax, so
+    fall back to the leading dim of an already-all_gathered array."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return gathered_dim
+
+
 def worker_seed(transform: RandomBasesTransform, state: RBDState, axis_name):
     """Per-(step, worker) seed for independent_bases mode."""
     k = jax.lax.axis_index(axis_name)
@@ -86,7 +94,7 @@ def independent_bases_update(
     gathered = [
         jax.lax.all_gather(c, axis_name=axis_name) for c in coords
     ]
-    k_workers = jax.lax.axis_size(axis_name)
+    k_workers = _axis_size(axis_name, gathered[0].shape[0])
 
     def recon_one(carry, k):
         seed_k = rng.fold_seed(base, k.astype(jnp.uint32) + jnp.uint32(1))

@@ -23,6 +23,29 @@ block shard-locally, the only collective being a (dir_chunk,)-sized psum.
 The Pallas TPU kernels in ``repro.kernels`` implement the same contract
 with explicit VMEM tiling; this module is the pure-jnp path (also the
 oracle the kernels are tested against).
+
+Two pytree-level execution strategies exist:
+
+* **per-leaf** (:func:`project` / :func:`reconstruct`): a Python loop
+  over compartments, one chunked pass (or one ``pallas_call``) per leaf,
+  vmapped over stacked layers.  General -- supports every normalization
+  including ``orthonormal`` -- but pays per-leaf launch and padding
+  overhead, and materializes the reconstructed delta before applying it.
+* **packed** (:func:`project_packed` / :func:`reconstruct_apply_packed` /
+  the fused ``core.rbd.rbd_step``): every compartment is packed into one
+  buffer with the static segment table of
+  ``core.compartments.PackedLayout``; the whole optimizer step is two
+  kernel launches regardless of compartment count, and the update is
+  applied in-stream (``theta' = theta - eta * (c_hat @ P)``) without a
+  delta round-trip through HBM.  The jnp flavor here is a single
+  ``lax.scan`` over the identical tile tables the megakernels use, so
+  interpret-mode kernel output is *bit-exact* against it.
+
+Prefer ``backend="pallas"`` (packed) on real TPU -- generation stays in
+VMEM and the MXU does the contractions.  Prefer the jnp path on CPU hosts
+and under pjit auto-sharding, where XLA's fusions beat interpret-mode
+kernels and the elementwise contraction keeps sharding aligned (see
+EXPERIMENTS.md).
 """
 
 from __future__ import annotations
@@ -345,6 +368,59 @@ def reconstruct(coords: list, plan: Plan, seed, params_like: Any,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def reconstruct_apply(coords: list, plan: Plan, seed, params: Any, eta,
+                      *, backend: str = "jnp", row_sq: list | None = None):
+    """Per-leaf fused apply: theta' = theta - eta * (c_hat @ P).
+
+    The fallback for when packing is disabled: still a Python loop over
+    compartments (one launch per leaf on the pallas backend), but the
+    update is applied in-stream by ``reconstruct_apply_flat`` -- the
+    reconstructed delta never round-trips through HBM.  The jnp backend
+    and 'orthonormal' normalization fall back to reconstruct-then-apply
+    (XLA fuses the axpy anyway).  Prefer :func:`reconstruct_apply_packed`
+    / ``core.rbd.rbd_step`` where the plan supports it.
+    """
+    if backend != "pallas" or plan.normalization == "orthonormal" \
+            or plan.flatten:
+        delta = reconstruct(coords, plan, seed, params, backend=backend,
+                            row_sq=row_sq)
+        return jax.tree_util.tree_map(
+            lambda p, d: (p - eta * d.astype(jnp.float32)).astype(p.dtype),
+            params, delta)
+
+    from repro.kernels import ops
+
+    proj_flat = _get_backend(backend).project_flat
+    leaves = jax.tree_util.tree_leaves(params)
+    out = list(leaves)
+    for i, (lp, c) in enumerate(zip(plan.leaves, coords)):
+        sq_i = row_sq[i] if row_sq is not None else None
+        theta = leaves[lp.leaf_idx]
+        lseed = _leaf_seed(seed, lp)
+        if lp.stacked:
+            seeds = _stack_seeds(lseed, lp.n_stack)
+            th2d = theta.reshape(lp.n_stack, lp.size)
+
+            def one(s, ci, sqi, th):
+                scale = _recon_scale(plan, lp, s, ci, proj_flat, sqi)
+                return ops.reconstruct_apply_flat(
+                    s, scale, th, eta, plan.distribution)
+
+            if sq_i is None:
+                new = jax.vmap(lambda s, ci, th: one(s, ci, None, th))(
+                    seeds, c, th2d)
+            else:
+                new = jax.vmap(one)(seeds, c, sq_i, th2d)
+        else:
+            scale = _recon_scale(plan, lp, lseed, c[0], proj_flat,
+                                 None if sq_i is None else sq_i[0])
+            new = ops.reconstruct_apply_flat(
+                lseed, scale, theta.reshape(-1), eta, plan.distribution)
+        out[lp.leaf_idx] = new.reshape(theta.shape).astype(theta.dtype)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), out)
+
+
 def _recon_scale(plan: Plan, lp: LeafPlan, seed, coords, proj_flat,
                  sq=None):
     """Per-direction reconstruction scales, folding in normalization.
@@ -376,6 +452,225 @@ def rbd_gradient(grads: Any, plan: Plan, seed, *, backend: str = "jnp") -> Any:
 
 
 # ---------------------------------------------------------------------------
+# packed multi-compartment path (single-launch step)
+# ---------------------------------------------------------------------------
+
+
+def segment_seeds(plan: Plan, seed):
+    """(n_segments,) uint32 folded seeds, in packed segment order.
+
+    Bit-identical to the per-leaf path's seed schedule: leaf seed =
+    fold(step_seed, seed_tag), and stacked leaves fold the layer index on
+    top (unstacked leaves use the leaf seed directly).
+    """
+    parts = []
+    for lp in plan.leaves:
+        lseed = _leaf_seed(seed, lp)
+        if lp.stacked:
+            parts.append(_stack_seeds(lseed, lp.n_stack))
+        else:
+            parts.append(jnp.reshape(lseed, (1,)))
+    return jnp.concatenate(parts).astype(jnp.uint32)
+
+
+def pack_tree(tree, plan: Plan, layout) -> jax.Array:
+    """Pytree -> (q_packed,) f32 packed buffer (PackedLayout order).
+
+    Each compartment is zero-padded to a multiple of ``layout.pos_block``;
+    a stacked leaf's layers land as consecutive equal-stride segments, so
+    packing is one pad + reshape per leaf.
+    """
+    if plan.flatten:
+        leaves = [_ravel_tree(tree, plan)]
+    else:
+        leaves = jax.tree_util.tree_leaves(tree)
+    parts = []
+    for lp in plan.leaves:
+        x = leaves[lp.leaf_idx].astype(jnp.float32).reshape(
+            lp.n_stack, lp.size)
+        psize = -(-lp.size // layout.pos_block) * layout.pos_block
+        if psize != lp.size:
+            x = jnp.pad(x, ((0, 0), (0, psize - lp.size)))
+        parts.append(x.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def unpack_tree(packed, plan: Plan, layout, params_like):
+    """(q_packed,) packed buffer -> pytree shaped/dtyped like params_like."""
+    if plan.flatten:
+        lp = plan.leaves[0]
+        psize = -(-lp.size // layout.pos_block) * layout.pos_block
+        x = packed[: lp.n_stack * psize].reshape(lp.n_stack, psize)
+        return _unravel_tree(x[:, : lp.size], plan, params_like)
+    leaves = jax.tree_util.tree_leaves(params_like)
+    out = list(leaves)
+    off = 0
+    for lp in plan.leaves:
+        psize = -(-lp.size // layout.pos_block) * layout.pos_block
+        n = lp.n_stack * psize
+        x = packed[off: off + n].reshape(lp.n_stack, psize)[:, : lp.size]
+        ref = leaves[lp.leaf_idx]
+        out[lp.leaf_idx] = x.reshape(ref.shape).astype(ref.dtype)
+        off += n
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_like), out)
+
+
+def unpack_coords(packed_coords, plan: Plan, layout) -> list:
+    """Packed (d_packed,) coordinates -> per-LeafPlan (n_stack, dim)
+    arrays (the :func:`project` return convention)."""
+    out, off = [], 0
+    for lp in plan.leaves:
+        pdim = -(-lp.dim // layout.dir_block) * layout.dir_block
+        n = lp.n_stack * pdim
+        out.append(
+            packed_coords[off: off + n].reshape(lp.n_stack, pdim)[:, : lp.dim])
+        off += n
+    return out
+
+
+def _packed_norm_factor(plan: Plan, layout, sq):
+    """Per-slot normalization factor, zero on padding slots.
+
+    The factor is applied once to get communicated coordinates
+    (c = u * f) and once more for the reconstruction scale (s = c * f),
+    mirroring :func:`_norm_scales` / :func:`_recon_scale`.
+    """
+    if plan.normalization == "rsqrt_dim":
+        return jnp.asarray(layout.coord_inv_sqrt_q)
+    if plan.normalization == "exact":
+        return jnp.asarray(layout.coord_valid) * jax.lax.rsqrt(
+            jnp.maximum(sq, 1e-30))
+    if plan.normalization == "none":
+        return jnp.asarray(layout.coord_valid)
+    raise ValueError(
+        f"normalization {plan.normalization!r} is not supported by the "
+        "packed path; use the per-leaf project/reconstruct API")
+
+
+def _project_packed_jnp(seg_seeds, g_packed, layout, distribution: str):
+    """jnp oracle for the projection megakernel: one lax.scan over the
+    SAME linearized tile table, same tile shapes, same accumulation
+    order -- interpret-mode kernel output is bit-exact against this."""
+    pb, db = layout.pos_block, layout.dir_block
+    g = g_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    xs = (
+        jnp.take(seg_seeds, jnp.asarray(layout.pt_seg), axis=0),
+        jnp.asarray(layout.pt_row0),
+        jnp.asarray(layout.pt_col0),
+        jnp.asarray(layout.pt_q),
+        jnp.asarray(layout.pt_init),
+        jnp.asarray(layout.pt_gblk),
+        jnp.asarray(layout.pt_ublk),
+    )
+
+    def body(carry, x):
+        u, sq = carry
+        seed, row0, col0, q, init, gb, ub = x
+        block = rng.generate_block(seed, row0, col0, (db, pb), distribution)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
+            + col0.astype(jnp.int32)
+        block = jnp.where(cols < q, block, 0.0)
+        gtile = jax.lax.dynamic_slice(g, (0, gb * pb), (1, pb))
+        part_u = jax.lax.dot_general(
+            block, gtile,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        part_sq = jnp.sum(block * block, axis=1, keepdims=True)
+        u_blk = jax.lax.dynamic_slice(u, (ub * db, 0), (db, 1))
+        sq_blk = jax.lax.dynamic_slice(sq, (ub * db, 0), (db, 1))
+        u_blk = jnp.where(init == 1, 0.0, u_blk) + part_u
+        sq_blk = jnp.where(init == 1, 0.0, sq_blk) + part_sq
+        u = jax.lax.dynamic_update_slice(u, u_blk, (ub * db, 0))
+        sq = jax.lax.dynamic_update_slice(sq, sq_blk, (ub * db, 0))
+        return (u, sq), None
+
+    zeros = jnp.zeros((layout.d_packed, 1), jnp.float32)
+    (u, sq), _ = jax.lax.scan(body, (zeros, zeros), xs)
+    return u[:, 0], sq[:, 0]
+
+
+def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
+                                  layout, distribution: str):
+    """jnp oracle for the fused reconstruct-apply megakernel (same tile
+    table, direction-innermost order, carry = streamed theta)."""
+    pb, db = layout.pos_block, layout.dir_block
+    s = scale_packed.astype(jnp.float32).reshape(1, layout.d_packed)
+    xs = (
+        jnp.take(seg_seeds, jnp.asarray(layout.rt_seg), axis=0),
+        jnp.asarray(layout.rt_row0),
+        jnp.asarray(layout.rt_col0),
+        jnp.asarray(layout.rt_gblk),
+        jnp.asarray(layout.rt_sblk),
+    )
+
+    def body(theta, x):
+        seed, row0, col0, gb, sb = x
+        block = rng.generate_block(seed, row0, col0, (db, pb), distribution)
+        stile = jax.lax.dynamic_slice(s, (0, sb * db), (1, db))
+        part = jax.lax.dot_general(
+            stile, block,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc = jax.lax.dynamic_slice(theta, (0, gb * pb), (1, pb)) - part
+        return jax.lax.dynamic_update_slice(theta, acc, (0, gb * pb)), None
+
+    theta0 = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    theta, _ = jax.lax.scan(body, theta0, xs)
+    return theta[0]
+
+
+def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
+                   layout=None, return_norms: bool = False):
+    """Packed-path projection: normalized coordinates for ALL compartments
+    in one (d_packed,) buffer -- ONE kernel launch on the pallas backend,
+    one scan on the jnp backend.
+
+    The packed coordinate buffer (padding slots zeroed) is the single
+    per-step exchange quantity in sharedseed training: one pmean over it
+    replaces one collective per compartment.
+    """
+    layout = layout if layout is not None else plan.packed()
+    seeds = segment_seeds(plan, seed)
+    g_packed = pack_tree(grads, plan, layout)
+    u, sq = _get_backend(backend).project_packed(
+        seeds, g_packed, layout, plan.distribution)
+    coords = u * _packed_norm_factor(plan, layout, sq)
+    if return_norms:
+        return coords, sq
+    return coords
+
+
+def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
+                             eta, *, backend: str = "jnp", row_sq=None,
+                             layout=None):
+    """Fused packed update: theta' = theta - eta * (c_hat @ P), applied to
+    the whole parameter pytree in ONE kernel launch.  The reconstructed
+    delta never exists in HBM.  ``row_sq`` (from
+    ``project_packed(..., return_norms=True)``) is required only for
+    'exact' normalization without a colocated projection; when None it is
+    regenerated with a zero-gradient projection pass.
+    """
+    layout = layout if layout is not None else plan.packed()
+    seeds = segment_seeds(plan, seed)
+    be = _get_backend(backend)
+    if plan.normalization == "exact" and row_sq is None:
+        _, row_sq = be.project_packed(
+            seeds, jnp.zeros((layout.q_packed,), jnp.float32), layout,
+            plan.distribution)
+    # factor is zero on padding slots, so phantom padded basis rows never
+    # contribute to the applied update
+    factor = _packed_norm_factor(plan, layout, row_sq)
+    scale = coords_packed * factor * jnp.float32(eta)
+    theta = pack_tree(params, plan, layout)
+    out = be.reconstruct_apply_packed(
+        seeds, scale, theta, layout, plan.distribution)
+    return unpack_tree(out, plan, layout, params)
+
+
+# ---------------------------------------------------------------------------
 # backend dispatch (jnp reference vs Pallas kernels)
 # ---------------------------------------------------------------------------
 
@@ -383,6 +678,8 @@ def rbd_gradient(grads: Any, plan: Plan, seed, *, backend: str = "jnp") -> Any:
 class _JnpBackend:
     project_flat = staticmethod(_project_flat)
     reconstruct_flat = staticmethod(_reconstruct_flat)
+    project_packed = staticmethod(_project_packed_jnp)
+    reconstruct_apply_packed = staticmethod(_reconstruct_apply_packed_jnp)
 
 
 @functools.cache
@@ -395,6 +692,9 @@ def _get_backend(name: str):
         class _PallasBackend:
             project_flat = staticmethod(ops.project_flat)
             reconstruct_flat = staticmethod(ops.reconstruct_flat)
+            project_packed = staticmethod(ops.project_packed)
+            reconstruct_apply_packed = staticmethod(
+                ops.reconstruct_apply_packed)
 
         return _PallasBackend
     raise ValueError(f"unknown projector backend {name!r}")

@@ -77,6 +77,61 @@ class RandomBasesTransform:
             coords, self.plan, seed, params_like, backend=self.backend
         )
 
+    # fused single-launch step ----------------------------------------------
+    def fused_step(self, params: Any, grads: Any, state: RBDState, lr,
+                   axis_name=None, packed: bool = True):
+        """Fused sketch-and-apply: returns (new_params, new_state).
+
+        Replaces update() + the caller's SGD apply with the two-launch
+        packed :func:`rbd_step` (``packed=True``) or the per-leaf
+        ``projector.reconstruct_apply`` fallback (``packed=False`` --
+        one fused launch per compartment, still no delta in HBM).  Only
+        valid when nothing (momentum, weight decay, clipping) sits
+        between the sketch and the apply.
+        """
+        seed = self.step_seed(state.step)
+        if packed:
+            params = rbd_step(params, grads, self.plan, seed, lr,
+                              backend=self.backend, axis_name=axis_name)
+        else:
+            coords, norms = projector.project(
+                grads, self.plan, seed, backend=self.backend,
+                return_norms=True)
+            if axis_name is not None:
+                coords = [jax.lax.pmean(c, axis_name=axis_name)
+                          for c in coords]
+            params = projector.reconstruct_apply(
+                coords, self.plan, seed, params, lr,
+                backend=self.backend, row_sq=norms)
+        return params, RBDState(step=state.step + 1)
+
+
+def rbd_step(params: Any, grads: Any, plan: Plan, seed, lr, *,
+             backend: str = "jnp", axis_name=None, layout=None) -> Any:
+    """One full RBD optimizer step as two kernel launches.
+
+        theta' = theta - lr * P_hat^T P_hat g
+
+    computed over the packed multi-compartment layout: launch 1 projects
+    the packed gradient onto every compartment's basis (one megakernel,
+    any number of compartments); launch 2 regenerates the bases and
+    applies the update in-stream, never materializing the delta in HBM.
+
+    With ``axis_name`` set (inside shard_map, shared-basis mode) the
+    packed coordinate buffer is pmean'd -- ONE d-sized collective per
+    step, regardless of compartment count, which is the paper's
+    communication claim in its strongest form.
+    """
+    layout = layout if layout is not None else plan.packed()
+    coords, sq = projector.project_packed(
+        grads, plan, seed, backend=backend, layout=layout,
+        return_norms=True)
+    if axis_name is not None:
+        coords = jax.lax.pmean(coords, axis_name=axis_name)
+    return projector.reconstruct_apply_packed(
+        coords, plan, seed, params, lr, backend=backend, row_sq=sq,
+        layout=layout)
+
 
 def rbd(plan: Plan, base_seed: int = 0, backend: str = "jnp"):
     return RandomBasesTransform(plan, base_seed, redraw=True, backend=backend)

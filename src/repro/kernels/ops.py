@@ -53,3 +53,23 @@ def reconstruct_apply_flat(seed, scale, theta_flat, eta,
     return rbd_reconstruct.reconstruct_apply_flat(
         seed, scale, theta_flat, eta, distribution, interpret=_INTERPRET
     )
+
+
+def project_packed(seg_seeds, g_packed, layout, distribution: str = "normal"):
+    """All compartments' (u, sq) in one megakernel launch (packed layout)."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.project_packed(
+        seg_seeds, g_packed, layout, distribution, interpret=_INTERPRET
+    )
+
+
+def reconstruct_apply_packed(seg_seeds, scale_packed, theta_packed, layout,
+                             distribution: str = "normal"):
+    """Fused theta' = theta - scale @ P for all compartments, one launch."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.reconstruct_apply_packed(
+        seg_seeds, scale_packed, theta_packed, layout, distribution,
+        interpret=_INTERPRET,
+    )

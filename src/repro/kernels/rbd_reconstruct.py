@@ -52,8 +52,7 @@ def _recon_kernel(seed_ref, s_ref, out_ref, *, dir_block: int,
 
 
 def _recon_apply_kernel(seed_ref, s_ref, theta_ref, eta_ref, out_ref, *,
-                        dir_block: int, n_dir_blocks: int,
-                        distribution: str):
+                        dir_block: int, distribution: str):
     pj = pl.program_id(0)
     di = pl.program_id(1)
     seed = seed_ref[0]
@@ -135,7 +134,12 @@ def reconstruct_apply_flat(
 ):
     """Fused theta' = theta - eta * (scale @ P) over a flat parameter
     vector: one HBM read of theta, one write of theta', zero traffic for
-    the update vector itself."""
+    the update vector itself.
+
+    dtype contract (pinned by tests/test_kernels.py): the accumulation
+    buffer is f32 regardless of theta's dtype; bf16 parameters are
+    upcast once on load and the result is rounded back to theta's dtype
+    exactly once on the way out."""
     q = theta_flat.shape[0]
     dim = scale.shape[0]
     d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
@@ -154,7 +158,6 @@ def reconstruct_apply_flat(
         functools.partial(
             _recon_apply_kernel,
             dir_block=dir_block,
-            n_dir_blocks=d_pad // dir_block,
             distribution=distribution,
         ),
         grid=grid,

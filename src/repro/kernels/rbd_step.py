@@ -1,0 +1,238 @@
+"""Pallas TPU megakernels: the whole RBD optimizer step in two launches.
+
+The per-compartment kernels in ``rbd_project.py`` / ``rbd_reconstruct.py``
+issue one ``pallas_call`` per pytree leaf (vmapped over stacked layers)
+and reconstruct the update into HBM before a separate apply pass.  These
+megakernels instead consume the *packed* buffers of
+``core.compartments.PackedLayout``: every compartment of every leaf is a
+run of tiles in one linear grid, so one optimizer step is exactly
+
+  1. ``project_packed``        -- u = P_k @ g_k for ALL compartments k
+  2. ``reconstruct_apply_packed`` -- theta' = theta - (eta*c_hat_k) @ P_k
+
+regardless of compartment count.  The ragged (segment, dir_block,
+pos_block) iteration space is linearized host-side into scalar-prefetch
+tables (``PackedLayout.pt_* / rt_*``): entry ``t`` carries the tile's
+block indices into the packed buffers, its within-segment PRNG counter
+offsets, and an accumulator-init flag.  Scalar prefetch makes the tables
+available to the BlockSpec index maps, so the pipeline DMAs exactly the
+blocks each tile needs -- VMEM residency per step is one (DB, PB) basis
+tile plus the revisited output block, same as the per-leaf kernels, but
+with zero per-leaf launch or padding overhead and no HBM round-trip for
+the reconstructed delta (~2 x 4 x D bytes/step saved).
+
+Basis tiles are generated in VMEM from the segment's folded seed with the
+identical counter scheme as everywhere else (``core.rng``): element
+(row, col) of compartment k is keyed by (seed_k, col, row) with col the
+*within-segment* position, so packed and per-leaf paths are bit-identical.
+
+Tile ordering (enforced by the host-side tables, relied on here):
+
+* projection: position-innermost per (segment, dir-block) -- the (DB, 1)
+  coordinate output block stays resident across its accumulation sweep;
+* reconstruct-apply: direction-innermost per (segment, pos-block) -- the
+  (1, PB) theta block loads once, accumulates every direction's
+  contribution, and writes back exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import rng
+from repro.core.compartments import PackedLayout
+
+__all__ = ["project_packed", "reconstruct_apply_packed"]
+
+
+def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
+                    gblk_ref, ublk_ref, g_ref, u_ref, sq_ref, *,
+                    pos_block: int, distribution: str):
+    t = pl.program_id(0)
+    db = u_ref.shape[0]
+    pb = pos_block
+
+    block = rng.generate_block(
+        seed_ref[t],
+        row0_ref[t].astype(jnp.uint32),
+        col0_ref[t].astype(jnp.uint32),
+        (db, pb),
+        distribution,
+    )
+    # mask positions past the segment's true size (the packed gradient is
+    # zero there, so u is unaffected, but the row norms must exclude it)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
+        + col0_ref[t].astype(jnp.int32)
+    block = jnp.where(cols < q_ref[t], block, 0.0)
+
+    g = g_ref[...].astype(jnp.float32)              # (1, pb)
+    part_u = jax.lax.dot_general(
+        block, g,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (db, 1)
+    part_sq = jnp.sum(block * block, axis=1, keepdims=True)
+
+    @pl.when(init_ref[t] == 1)
+    def _():
+        u_ref[...] = jnp.zeros_like(u_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    u_ref[...] += part_u
+    sq_ref[...] += part_sq
+
+
+def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, init_ref,
+                        gblk_ref, sblk_ref, s_ref, theta_ref, out_ref, *,
+                        dir_block: int, distribution: str):
+    t = pl.program_id(0)
+    pb = out_ref.shape[1]
+
+    block = rng.generate_block(
+        seed_ref[t],
+        row0_ref[t].astype(jnp.uint32),
+        col0_ref[t].astype(jnp.uint32),
+        (dir_block, pb),
+        distribution,
+    )
+    s = s_ref[...].astype(jnp.float32)              # (1, dir_block)
+    part = jax.lax.dot_general(
+        s, block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (1, pb)
+
+    @pl.when(init_ref[t] == 1)
+    def _():
+        out_ref[...] = theta_ref[...]
+
+    out_ref[...] -= part
+
+
+def _tile_seeds(seg_seeds, tiles_seg):
+    """Per-tile uint32 seeds gathered from the per-segment seed vector."""
+    return jnp.take(seg_seeds, jnp.asarray(tiles_seg), axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layout", "distribution", "interpret"),
+)
+def project_packed(
+    seg_seeds,
+    g_packed,
+    layout: PackedLayout,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+):
+    """One launch: raw projections + squared row norms for ALL segments.
+
+    ``seg_seeds``: (n_segments,) uint32 folded seeds.  ``g_packed``:
+    (q_packed,) f32 packed gradient.  Returns (u, sq), each (d_packed,)
+    f32 in packed coordinate layout (padding slots undefined -- mask with
+    ``layout.coord_valid``).
+    """
+    pb, db = layout.pos_block, layout.dir_block
+    n_tiles = layout.n_proj_tiles
+    g = g_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    seeds = _tile_seeds(seg_seeds, layout.pt_seg)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (0, gb[t])),
+        ],
+        out_specs=[
+            pl.BlockSpec((db, 1), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (ub[t], 0)),
+            pl.BlockSpec((db, 1), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (ub[t], 0)),
+        ],
+    )
+    u, sq = pl.pallas_call(
+        functools.partial(
+            _project_kernel, pos_block=pb, distribution=distribution),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((layout.d_packed, 1), jnp.float32),
+            jax.ShapeDtypeStruct((layout.d_packed, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        seeds,
+        jnp.asarray(layout.pt_row0),
+        jnp.asarray(layout.pt_col0),
+        jnp.asarray(layout.pt_q),
+        jnp.asarray(layout.pt_init),
+        jnp.asarray(layout.pt_gblk),
+        jnp.asarray(layout.pt_ublk),
+        g,
+    )
+    return u[:, 0], sq[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layout", "distribution", "interpret"),
+)
+def reconstruct_apply_packed(
+    seg_seeds,
+    scale_packed,
+    theta_packed,
+    layout: PackedLayout,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+):
+    """One launch: theta' = theta - scale @ P for ALL segments, fused.
+
+    ``scale_packed`` ((d_packed,) f32) must already fold in learning rate
+    and normalization AND be zero on padding slots (multiply by
+    ``layout.coord_valid``) -- padded basis rows are generated and would
+    otherwise contribute phantom directions.  ``theta_packed`` is the
+    (q_packed,) f32 packed parameter buffer; the update never exists in
+    HBM, only the new parameters are written.
+    """
+    pb, db = layout.pos_block, layout.dir_block
+    n_tiles = layout.n_recon_tiles
+    s = scale_packed.astype(jnp.float32).reshape(1, layout.d_packed)
+    theta = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    seeds = _tile_seeds(seg_seeds, layout.rt_seg)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, ini, gb, sb:
+                         (0, sb[t])),
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, ini, gb, sb:
+                         (0, gb[t])),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, ini, gb, sb:
+                               (0, gb[t])),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_apply_kernel, dir_block=db, distribution=distribution),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
+        interpret=interpret,
+    )(
+        seeds,
+        jnp.asarray(layout.rt_row0),
+        jnp.asarray(layout.rt_col0),
+        jnp.asarray(layout.rt_init),
+        jnp.asarray(layout.rt_gblk),
+        jnp.asarray(layout.rt_sblk),
+        s,
+        theta,
+    )
+    return out[0]

@@ -137,3 +137,52 @@ def collective_bytes(hlo: str) -> dict[str, float]:
         visit(entry, 1.0, ())
     totals["_loops"] = loops  # type: ignore[assignment]
     return totals
+
+
+# ---------------------------------------------------------------------------
+# kernel-launch accounting (jaxpr level)
+# ---------------------------------------------------------------------------
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` sites in fn's traced program.
+
+    Counts STATIC launch sites recursively through every nested jaxpr
+    (pjit bodies, scan/while bodies, cond branches, custom_vjp, ...).
+    A pallas_call under a scan would execute once per trip, but the
+    packed-step contract is stronger -- the program contains exactly two
+    launch sites, not inside any loop -- so a static count is the right
+    assertion for the two-launch invariant (see tests/test_packed_step).
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count_pallas_eqns(closed.jaxpr)
+
+
+def _count_pallas_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        n += sum(_count_pallas_eqns(j) for j in _sub_jaxprs(eqn.params))
+    return n
+
+
+def _sub_jaxprs(params) -> Iterator:
+    try:
+        from jax.core import ClosedJaxpr, Jaxpr
+    except ImportError:  # moved in newer jax
+        from jax.extend.core import ClosedJaxpr, Jaxpr  # type: ignore
+
+    def walk(v):
+        if isinstance(v, Jaxpr):
+            yield v
+        elif isinstance(v, ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from walk(x)
+
+    for v in params.values():
+        yield from walk(v)

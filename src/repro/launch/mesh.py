@@ -10,20 +10,42 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` only exists on
+    newer jax; older releases treat every axis as Auto already."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    """shard_map with only ``manual_axes`` manual, remaining mesh axes
+    automatic, with replication checking off -- bridging the renamed
+    kwargs (axis_names/check_vma vs auto/check_rep) across jax versions."""
+    try:
+        from jax import shard_map as sm  # jax >= 0.6
+
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(manual_axes), check_vma=False)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+
+        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e: 16x16 = 256 chips/pod; multi_pod adds a 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist --
     used by tests and examples."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))

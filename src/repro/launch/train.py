@@ -11,7 +11,11 @@ Distribution modes:
                      axis (model axis stays automatic), per-worker
                      projection, coordinate exchange (d or K*d floats),
                      local reconstruction.  No D-dimensional gradient
-                     collective exists in the program.
+                     collective exists in the program.  With the packed
+                     step enabled (--packed on, or --rbd-backend pallas)
+                     the whole sketch+apply is two kernel launches and
+                     the exchange is ONE pmean of the packed coordinate
+                     buffer per step instead of one per compartment.
 * ``sgd``         -- baseline: no RBD, classic data-parallel all-reduce.
 
 Usage (examples; on the CPU container use --fake-devices N):
@@ -45,6 +49,12 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.125)
     ap.add_argument("--rbd-dim", type=int, default=1024)
+    ap.add_argument("--rbd-backend", default="jnp",
+                    choices=["jnp", "pallas"])
+    ap.add_argument("--packed", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="single-launch packed RBD step "
+                         "(auto: on for the pallas backend)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -64,12 +74,14 @@ def main(argv=None):
         cfg, mode=args.mode, rbd_mode=args.rbd_mode, data=args.data,
         model_axis=args.model, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rbd_dim=args.rbd_dim,
+        rbd_backend=args.rbd_backend, packed=args.packed,
         checkpoint_dir=args.checkpoint_dir)
 
 
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  data=1, model_axis=1, steps=10, batch=8, seq=128,
-                 lr=0.125, rbd_dim=1024, checkpoint_dir=None):
+                 lr=0.125, rbd_dim=1024, rbd_backend="jnp",
+                 packed="auto", checkpoint_dir=None):
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -84,7 +96,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     model = get_model(cfg)
 
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"),
-                        total_dim=rbd_dim, mode=rbd_mode)
+                        total_dim=rbd_dim, mode=rbd_mode,
+                        backend=rbd_backend, packed=packed)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,
                       steps=steps, batch_size=batch, seq_len=seq)
 
@@ -120,20 +133,19 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
             # Partial-manual shard_map: manual over 'data' (per-worker
             # grads + coordinate exchange, the paper's Algorithm 1), the
             # 'model' axis stays automatic (XLA tensor parallelism).
-            from jax import shard_map
+            from repro.launch.mesh import shard_map_compat
 
             batch_spec = {"tokens": P("data"), "labels": P("data")}
             repl = jax.tree_util.tree_map(lambda _: P(), state_specs,
                                           is_leaf=lambda x: isinstance(x, P))
-            step_fn = jax.jit(shard_map(
+            step_fn = jax.jit(shard_map_compat(
                 train_step, mesh=mesh,
                 in_specs=(repl, batch_spec),
                 out_specs=(repl,
                            jax.tree_util.tree_map(lambda _: P(), {
                                "ce": 0, "aux": 0, "loss": 0,
                                "update_norm": 0})),
-                axis_names={"data"},
-                check_vma=False,
+                manual_axes=("data",),
             ))
         else:
             step_fn = jax.jit(train_step)

@@ -107,6 +107,44 @@ def apply_updates(params, updates, lr):
         params, updates)
 
 
+# ---------------------------------------------------------------------------
+# fused sketch-and-apply (single-launch packed RBD step)
+# ---------------------------------------------------------------------------
+
+# Optimizers whose update is a pure axpy (u == g), so the RBD sketch and
+# the parameter apply can fuse into core.rbd.rbd_step's two launches with
+# nothing in between.  Momentum/adam keep full-space state and must see
+# the materialized sketch.
+FUSABLE_OPTIMIZERS = ("sgd",)
+
+
+def can_fuse_apply(optimizer: str, weight_decay: float, rbd_cfg) -> bool:
+    """True when the train step may replace sketch -> optimizer -> apply
+    with a fused sketch-and-apply: the packed two-launch rbd_step when
+    packing is enabled, else the per-leaf ``reconstruct_apply`` fallback
+    (one fused launch per compartment on the pallas backend)."""
+    if not rbd_cfg.enabled:
+        return False
+    if optimizer not in FUSABLE_OPTIMIZERS or weight_decay:
+        return False
+    if rbd_cfg.use_packed:
+        # the packed megakernels support every distribution but only the
+        # factor-style normalizations (orthonormal materializes a QR
+        # basis)
+        return rbd_cfg.normalization in ("rsqrt_dim", "exact", "none")
+    # per-leaf fused apply only pays off where the fused kernel exists;
+    # the jnp unfused path stays as-is (XLA fuses the axpy anyway)
+    return rbd_cfg.backend == "pallas"
+
+
+def fused_rbd_apply(transform, params, grads, rbd_state, lr,
+                    axis_name=None, packed=True):
+    """SGD apply fused into the RBD step; returns
+    (new_params, new_rbd_state).  See ``core.rbd.rbd_step``."""
+    return transform.fused_step(params, grads, rbd_state, lr,
+                                axis_name=axis_name, packed=packed)
+
+
 def global_norm(tree) -> jax.Array:
     return jnp.sqrt(sum(
         jnp.sum(jnp.square(x.astype(jnp.float32)))

@@ -83,6 +83,13 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     optimizer = opt.get_optimizer(tcfg.optimizer)
     if transform is None and tcfg.rbd.enabled:
         transform = make_transform(model, tcfg.rbd)
+    # Single-launch packed step: sketch + SGD apply fuse into two kernel
+    # launches (core.rbd.rbd_step).  Only the shared-basis exchange fits
+    # the fused form (independent_bases regenerates K bases per step).
+    fuse = (transform is not None
+            and opt.can_fuse_apply(tcfg.optimizer, tcfg.weight_decay,
+                                   tcfg.rbd)
+            and (axis_name is None or tcfg.rbd.mode == "shared_basis"))
 
     def init_state(key) -> TrainState:
         params = model.init(key)
@@ -104,6 +111,26 @@ def make_train_step(model: Model, tcfg: TrainConfig,
             loss = jax.lax.pmean(loss, axis_name)
 
         rbd_state = state.rbd_state
+        if fuse:
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            params, rbd_state = opt.fused_rbd_apply(
+                transform, state.params, grads, rbd_state,
+                tcfg.learning_rate, axis_name=axis_name,
+                packed=tcfg.rbd.use_packed)
+            # the update never materializes; recover its norm from the
+            # parameter delta for metrics parity with the unfused path
+            # (costs a read of both trees -- gated by log_update_norm)
+            if tcfg.log_update_norm and tcfg.learning_rate:
+                unorm = opt.global_norm(jax.tree_util.tree_map(
+                    lambda p, q: (p.astype(jnp.float32)
+                                  - q.astype(jnp.float32)),
+                    state.params, params)) / tcfg.learning_rate
+            else:
+                unorm = jnp.zeros(())
+            metrics = dict(metrics, loss=loss, update_norm=unorm)
+            return TrainState(params, rbd_state, state.opt_state,
+                              state.step + 1), metrics
         if transform is not None:
             if axis_name is None:
                 updates, rbd_state = transform.update(grads, rbd_state)

@@ -15,13 +15,17 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import functools, json
     import jax, jax.numpy as jnp
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import make_plan, distributed, projector, rng
     from repro.core.rbd import RandomBasesTransform
+    from repro.launch.mesh import _make_mesh, shard_map_compat
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    def shard_map(f, mesh, in_specs, out_specs):
+        return shard_map_compat(f, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs,
+                                manual_axes=mesh.axis_names)
+
+    mesh = _make_mesh((8,), ("data",))
     params = {"w": jnp.ones((64, 32)), "b": jnp.ones((32,))}
     plan = make_plan(params, 64)
     t = RandomBasesTransform(plan, base_seed=3)
@@ -66,6 +70,26 @@ _SCRIPT = textwrap.dedent("""
     out["matches_manual_mean"] = bool(
         jnp.allclose(all_u[0], acc / 8, atol=1e-4))
 
+    # packed single-launch step: shared-basis exchange of ONE packed
+    # coordinate buffer must equal the single-worker fused step on the
+    # mean gradient (projection is linear in g)
+    from repro.core.rbd import rbd_step
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("data"),
+                       out_specs=P())
+    def shared_packed(gv):
+        newp = rbd_step(params, unflat(gv[0]), plan,
+                        t.step_seed(state.step), 0.5, backend="jnp",
+                        axis_name="data")
+        return flat(newp)[None]
+
+    newp_dist = shared_packed(g)[0]
+    newp_single = rbd_step(params, unflat(g.mean(0)), plan,
+                           t.step_seed(state.step), 0.5, backend="jnp")
+    out["packed_shared_equals_single_worker"] = bool(
+        jnp.allclose(newp_dist, flat(newp_single), atol=1e-4))
+
     # comm accounting sanity
     c_sgd = distributed.grad_comm_bytes(plan, 2080, 8, "sgd")
     c_sb = distributed.grad_comm_bytes(plan, 2080, 8, "shared_basis")
@@ -102,3 +126,9 @@ def test_independent_bases_matches_algorithm1(results):
 
 def test_comm_accounting(results):
     assert results["comm_reduction_holds"]
+
+
+def test_packed_shared_basis_equals_single_worker(results):
+    """The fused two-launch step under shard_map: one pmean of the packed
+    coordinate buffer, same update as a single worker on the mean grad."""
+    assert results["packed_shared_equals_single_worker"]

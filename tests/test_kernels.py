@@ -67,6 +67,30 @@ def test_fused_apply_kernel(seed, dtype):
         rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4, atol=1e-2)
 
 
+def test_fused_apply_bf16_rounds_exactly_once(seed):
+    """Pin the dtype contract: bf16 theta is upcast to an f32
+    accumulation buffer and rounded back to bf16 exactly ONCE on output
+    -- bit-identical to computing entirely in f32 and casting at the
+    end (no per-block double rounding)."""
+    # q = one pos block, d = one dir block: kernel and reference then run
+    # the identical dot, so equality is exact, not approximate
+    q, d = 512, 8
+    theta32 = jax.random.normal(jax.random.PRNGKey(9), (q,))
+    theta16 = theta32.astype(jnp.bfloat16)
+    s = jax.random.normal(jax.random.PRNGKey(10), (d,))
+    out16 = ops.reconstruct_apply_flat(seed, s, theta16, 0.1)
+    assert out16.dtype == jnp.bfloat16
+    p = ref.materialize_basis(seed, d, q)
+    part = jax.lax.dot_general(
+        s.astype(jnp.float32)[None], p,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+    expect = (theta16.astype(jnp.float32) - 0.1 * part).astype(
+        jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(out16, np.float32), np.asarray(expect, np.float32))
+
+
 def test_kernel_block_size_invariance(seed):
     """Values must not depend on tiling -- the generation is position-
     keyed, so any (dir_block, pos_block) choice gives identical results."""

@@ -1,0 +1,306 @@
+"""Single-launch packed RBD step: bit-exact kernel-vs-oracle parity,
+packed-vs-per-leaf agreement, the two-launch invariant, and the fused
+per-leaf fallback (tests for core.compartments.PackedLayout,
+kernels.rbd_step and core.rbd.rbd_step)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compartments, make_plan, projector, rng
+from repro.core.rbd import RandomBasesTransform, rbd_step
+
+# Small blocks keep interpret-mode grids manageable; block-size freedom
+# is itself part of the contract (values must not depend on tiling).
+PB, DB = 128, 8
+
+DISTS = ["normal", "uniform", "bernoulli", "rademacher", "sparse"]
+NORMS = ["rsqrt_dim", "exact", "none"]
+
+
+def _params():
+    # ragged on purpose: 73 and 700 do not divide PB, the scalar leaf is
+    # a 1-element compartment, and "layers/k" is a stacked 3-layer leaf
+    return {
+        "w": jnp.ones((64, 32)),
+        "layers": {"k": jnp.ones((3, 40, 10))},
+        "s": jnp.ones(()),
+        "odd": jnp.ones((7, 73)),
+        "long": jnp.ones((700,)),
+    }
+
+
+def _grads(params, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(k, p.shape), params)
+
+
+def _plan(params, norm="rsqrt_dim", dist="normal", granularity="layer"):
+    return make_plan(params, 96, granularity=granularity,
+                     is_stacked=lambda n: n.startswith("layers"),
+                     distribution=dist, normalization=norm)
+
+
+@pytest.fixture(scope="module")
+def seed():
+    return rng.fold_seed(7)
+
+
+# ---------------------------------------------------------------------------
+# layout invariants
+# ---------------------------------------------------------------------------
+
+
+def test_layout_segments_and_padding():
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed(PB, DB)
+    assert layout.n_segments == sum(lp.n_stack for lp in plan.leaves)
+    assert (layout.seg_psize % PB == 0).all()
+    assert (layout.seg_pdim % DB == 0).all()
+    assert layout.q_packed == int(layout.seg_psize.sum())
+    assert layout.d_packed == int(layout.seg_pdim.sum())
+    # every tile's output block belongs to its segment
+    off = layout.seg_coord_off[layout.pt_seg]
+    assert ((layout.pt_ublk * DB >= off)
+            & (layout.pt_ublk * DB < off
+               + layout.seg_pdim[layout.pt_seg])).all()
+    assert int(layout.coord_valid.sum()) == plan.total_dim
+
+
+def test_pack_unpack_roundtrip():
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed(PB, DB)
+    packed = projector.pack_tree(params, plan, layout)
+    assert packed.shape == (layout.q_packed,)
+    back = projector.unpack_tree(packed, plan, layout, params)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bit-exact kernel vs jnp oracle (the megakernel contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", DISTS)
+@pytest.mark.parametrize("norm", NORMS)
+def test_packed_kernel_bitexact_vs_oracle(seed, dist, norm):
+    """Interpret-mode megakernels run the same ops in the same tile order
+    as the jnp scan oracle -- outputs must be IDENTICAL, not just close,
+    across all 5 distributions x 3 normalizations."""
+    params = _params()
+    plan = _plan(params, norm=norm, dist=dist)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+
+    c_p, sq_p = projector.project_packed(
+        grads, plan, seed, backend="pallas", layout=layout,
+        return_norms=True)
+    c_j, sq_j = projector.project_packed(
+        grads, plan, seed, backend="jnp", layout=layout, return_norms=True)
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_j))
+    np.testing.assert_array_equal(np.asarray(sq_p), np.asarray(sq_j))
+
+    new_p = rbd_step(params, grads, plan, seed, 0.25, backend="pallas",
+                     layout=layout)
+    new_j = rbd_step(params, grads, plan, seed, 0.25, backend="jnp",
+                     layout=layout)
+    for a, b in zip(jax.tree_util.tree_leaves(new_p),
+                    jax.tree_util.tree_leaves(new_j)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("granularity", ["global", "even"])
+def test_packed_flattened_plans(seed, granularity):
+    """Flatten plans (one virtual (K, size) leaf) go through the same
+    packed path; 'even' additionally exercises the stacked segment axis
+    with K compartments that do not divide the parameter count."""
+    params = _params()
+    plan = make_plan(params, 48, granularity=granularity, n_compartments=5)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+    new_p = rbd_step(params, grads, plan, seed, 0.5, backend="pallas",
+                     layout=layout)
+    new_j = rbd_step(params, grads, plan, seed, 0.5, backend="jnp",
+                     layout=layout)
+    for a, b in zip(jax.tree_util.tree_leaves(new_p),
+                    jax.tree_util.tree_leaves(new_j)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# packed vs per-leaf path (same math, different accumulation order)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("norm", NORMS)
+def test_packed_matches_per_leaf_path(seed, norm):
+    params = _params()
+    plan = _plan(params, norm=norm)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+
+    coords_packed = projector.project_packed(
+        grads, plan, seed, backend="jnp", layout=layout)
+    coords_leaf = projector.project(grads, plan, seed, backend="jnp")
+    for a, b in zip(projector.unpack_coords(coords_packed, plan, layout),
+                    coords_leaf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+    lr = 0.3
+    fused = rbd_step(params, grads, plan, seed, lr, backend="jnp",
+                     layout=layout)
+    sketch = projector.rbd_gradient(grads, plan, seed, backend="jnp")
+    ref = jax.tree_util.tree_map(lambda p, u: p - lr * u, params, sketch)
+    for a, b in zip(jax.tree_util.tree_leaves(fused),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_packed_block_size_invariance(seed):
+    """Tile-table layout choices must not change values (position-keyed
+    generation): different (pos_block, dir_block) give the same step up
+    to f32 accumulation order."""
+    params = _params()
+    plan = _plan(params)
+    grads = _grads(params)
+    base = rbd_step(params, grads, plan, seed, 0.5, backend="jnp",
+                    layout=plan.packed(128, 8))
+    other = rbd_step(params, grads, plan, seed, 0.5, backend="jnp",
+                     layout=plan.packed(256, 16))
+    for a, b in zip(jax.tree_util.tree_leaves(base),
+                    jax.tree_util.tree_leaves(other)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# seed schedule (redraw-per-step) and dtype contract
+# ---------------------------------------------------------------------------
+
+
+def test_fused_step_redraw_seed_folding():
+    """fused_step folds the step counter exactly like update(): step t
+    uses fold(base_seed, t), so RBD (redraw) draws a fresh basis per step
+    and two consecutive fused steps equal the manual two-step sequence."""
+    params = _params()
+    plan = _plan(params)
+    grads = _grads(params)
+    t = RandomBasesTransform(plan, base_seed=11, redraw=True)
+    state = t.init(params)
+
+    p1, s1 = t.fused_step(params, grads, state, 0.5)
+    p2, s2 = t.fused_step(p1, grads, s1, 0.5)
+    assert int(s2.step) == 2
+
+    m1 = rbd_step(params, grads, plan, rng.fold_seed(11, jnp.uint32(0)),
+                  0.5)
+    m2 = rbd_step(m1, grads, plan, rng.fold_seed(11, jnp.uint32(1)), 0.5)
+    for a, b in zip(jax.tree_util.tree_leaves(p2),
+                    jax.tree_util.tree_leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the two steps genuinely used different bases
+    assert not all(
+        np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)))
+
+
+def test_fpd_fused_step_reuses_basis():
+    params = _params()
+    plan = _plan(params)
+    grads = _grads(params)
+    t = RandomBasesTransform(plan, base_seed=3, redraw=False)
+    state = t.init(params)
+    _, s1 = t.fused_step(params, grads, state, 0.5)
+    seed0 = t.step_seed(state.step)
+    seed1 = t.step_seed(s1.step)
+    assert np.asarray(seed0) == np.asarray(seed1)
+
+
+def test_packed_step_preserves_param_dtype(seed):
+    params = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16), _params())
+    plan = _plan(params)
+    grads = _grads(params)
+    new = rbd_step(params, grads, plan, seed, 0.5, backend="jnp")
+    for a, b in zip(jax.tree_util.tree_leaves(new),
+                    jax.tree_util.tree_leaves(params)):
+        assert a.dtype == b.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# the two-launch invariant
+# ---------------------------------------------------------------------------
+
+
+def test_step_is_exactly_two_pallas_calls(seed):
+    """The acceptance contract: one optimizer step on the pallas backend
+    is exactly two pallas_call launch sites, independent of compartment
+    count."""
+    from repro.launch.hlo_analysis import count_pallas_calls
+
+    params = _params()
+    grads = _grads(params)
+    for granularity in ("layer", "leaf", "even"):
+        plan = make_plan(params, 96, granularity=granularity,
+                         is_stacked=lambda n: n.startswith("layers"),
+                         n_compartments=4)
+        n = count_pallas_calls(
+            lambda p, g: rbd_step(p, g, plan, seed, 0.5,
+                                  backend="pallas"),
+            params, grads)
+        assert n == 2, (granularity, n)
+
+
+def test_full_train_step_two_launches():
+    """End-to-end: model fwd/bwd + fused RBD step traces to exactly two
+    pallas_calls (the model path is pure jnp)."""
+    from repro.configs import get_config
+    from repro.configs.base import RBDConfig, TrainConfig
+    from repro.data import synthetic
+    from repro.launch.hlo_analysis import count_pallas_calls
+    from repro.models import get_model
+    from repro.train import step as steplib
+
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        model=cfg,
+        rbd=RBDConfig(total_dim=256, backend="pallas", packed="auto"),
+        learning_rate=0.5, steps=1, batch_size=2, seq_len=16)
+    init_state, train_step = steplib.make_train_step(model, tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    batch = next(synthetic.lm_batches(0, 2, 16, cfg.vocab))
+    assert count_pallas_calls(train_step, state, batch) == 2
+
+
+# ---------------------------------------------------------------------------
+# per-leaf fused fallback (packing disabled)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_reconstruct_apply_fallback_matches_unfused(seed, backend):
+    params = _params()
+    plan = _plan(params)
+    grads = _grads(params)
+    coords, norms = projector.project(grads, plan, seed, backend=backend,
+                                      return_norms=True)
+    fused = projector.reconstruct_apply(
+        coords, plan, seed, params, 0.5, backend=backend, row_sq=norms)
+    delta = projector.reconstruct(coords, plan, seed, params,
+                                  backend=backend, row_sq=norms)
+    ref = jax.tree_util.tree_map(lambda p, d: p - 0.5 * d, params, delta)
+    for a, b in zip(jax.tree_util.tree_leaves(fused),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

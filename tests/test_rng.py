@@ -4,7 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container may not ship hypothesis: skip ONLY the
+    import types      # property tests, keep the rest of the module live
+
+    st = types.SimpleNamespace(integers=lambda *a, **k: None)
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f
 
 from repro.core import rng
 
