@@ -23,14 +23,16 @@ reporting kernel launches/step (static count), wall-clock samples/s
 The byte model counts KERNEL-STAGE traffic (f32): unfused moves g,
 delta (write+read), theta (read+write) = 20 bytes/param; fused moves
 g, theta (read+write) = 12 bytes/param -- the 8-byte/param delta
-round-trip is what fusion deletes.  Caveat, tracked in ROADMAP: the
-current rbd_step additionally pays pack/unpack STAGING copies
-(~24 bytes/param) because TrainState stores parameters/gradients
-unpacked; those copies are excluded here because they vanish once the
-train state keeps the packed representation across steps (the
-layout is static), which is the intended endgame.  Machine-readable
-results land in ``BENCH_kernel_throughput.json`` at the repo root so
-the perf trajectory is tracked across PRs.
+round-trip is what fusion deletes.  Since the packed-resident
+TrainState (optim.subspace), the params live in the packed buffer
+across steps and the gradient arrives packed through the autodiff
+transpose of the unpack, so the former pack/unpack STAGING copies
+(~24 bytes/param, once excluded from this model as a caveat) are gone
+for real and the modeled 12 bytes/param IS the step's traffic.
+Momentum/adam rows add only their (d,)-sized coordinate-state
+read+write.  Machine-readable results land in
+``BENCH_kernel_throughput.json`` at the repo root so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -171,23 +173,49 @@ def fused_step_benchmark(quick: bool = True):
     launch_overhead_s = 3e-6
     dots_flops = 2 * samples  # 2 FLOPs per generated element, both passes
 
-    for name, launches, hbm in [
-        ("per_leaf_step_v5e_modeled", n_per_leaf, 20.0 * d_total),
-        ("packed_step_v5e_modeled", n_packed, 12.0 * d_total),
-    ]:
+    def modeled_row(name, launches, hbm):
         t_compute = (samples * GEN_OPS_PER_ELEM) / v5e_vpu \
             + dots_flops / v5e_mxu
-        t = max(t_compute, hbm / v5e_bw) + launches * launch_overhead_s
-        rows.append({
+        t_step = max(t_compute, hbm / v5e_bw) + launches * launch_overhead_s
+        return {
             "stage": name,
-            "samples_per_s": samples / t,
-            "wall_ms": t * 1e3,
+            "samples_per_s": samples / t_step,
+            "wall_ms": t_step * 1e3,
             "launches_per_step": launches,
             "hbm_bytes_per_step": hbm,
-        })
+        }
+
+    rows.append(modeled_row("per_leaf_step_v5e_modeled", n_per_leaf,
+                            20.0 * d_total))
+    rows.append(modeled_row("packed_step_v5e_modeled", n_packed,
+                            12.0 * d_total))
     assert n_packed == 2, n_packed
     assert rows[-1]["wall_ms"] < rows[-2]["wall_ms"], \
         "fused step must beat the per-compartment path"
+
+    # coordinate-space stateful optimizers (optim.subspace): the same two
+    # launches for momentum and adam -- the (d,)-shaped state update runs
+    # as pure jnp between the launches and only adds d-sized HBM traffic
+    # (read+write of 1 or 2 state buffers; the adam count scalar is noise)
+    from repro.optim.subspace import SubspaceOptimizer
+
+    layout = plan.packed()
+    state_bytes = {"momentum": 8.0 * layout.d_packed,
+                   "adam": 16.0 * layout.d_packed}
+    for opt_name in ("momentum", "adam"):
+        sub = SubspaceOptimizer(transform=t, optimizer=opt_name,
+                                learning_rate=lr, use_packed=True)
+        stored = sub.prepare_params(params)
+        g_packed = projector.pack_tree(grads, plan, layout)
+        st_rbd = sub.init_rbd_state(params)
+        st_opt = sub.init_opt_state(params)
+        n_launches = count_pallas_calls(
+            lambda p, g: sub.step(p, g, st_rbd, st_opt)[0],
+            stored, g_packed)
+        assert n_launches == 2, (opt_name, n_launches)
+        rows.append(modeled_row(
+            f"packed_step_{opt_name}_v5e_modeled", n_launches,
+            12.0 * d_total + state_bytes[opt_name]))
     return rows
 
 
@@ -209,4 +237,14 @@ def _write_json(rows, path=None):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--smoke", action="store_true",
+                     help="force quick mode (few timing reps) -- what CI "
+                          "runs, independent of the default")
+    grp.add_argument("--full", action="store_true",
+                     help="more timing reps for stable numbers")
+    args = ap.parse_args()
+    run(quick=args.smoke or not args.full)

@@ -162,6 +162,13 @@ class TrainConfig:
     optimizer: str = "sgd"          # paper: plain SGD, no momentum
     learning_rate: float = 0.5
     weight_decay: float = 0.0
+    # optimizer hyperparameters (momentum/adam keep their state in the
+    # d-dimensional coordinate space -- see repro.optim.subspace)
+    momentum_beta: float = 0.9
+    nesterov: bool = False
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
     steps: int = 100
     batch_size: int = 32
     seq_len: int = 128

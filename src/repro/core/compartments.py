@@ -60,6 +60,12 @@ class LeafPlan:
         return self.n_stack * self.dim
 
 
+# Normalizations the packed megakernels support: factor-style scales that
+# fold into the coordinate buffer.  "orthonormal" materializes a QR basis
+# per compartment and must take the per-leaf path.
+PACKABLE_NORMALIZATIONS = ("rsqrt_dim", "exact", "none")
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
     leaves: tuple[LeafPlan, ...]
@@ -77,6 +83,11 @@ class Plan:
     @property
     def reduction_factor(self) -> float:
         return self.total_params / max(self.total_dim, 1)
+
+    @property
+    def packable(self) -> bool:
+        """True when the packed two-launch step supports this plan."""
+        return self.normalization in PACKABLE_NORMALIZATIONS
 
     def packed(self, pos_block: int = 512, dir_block: int = 8) -> "PackedLayout":
         """Static packed layout for the single-launch step (cached)."""
@@ -321,10 +332,20 @@ class PackedLayout:
     rt_gblk: np.ndarray
     rt_sblk: np.ndarray
     rt_init: np.ndarray
+    rt_q: np.ndarray          # valid positions (column masking: padding
+                              # slots of a packed-RESIDENT theta stay
+                              # exactly zero in-stream, no extra pass)
     # coordinate-slot validity (d_packed,): 0.0 on padding, 1.0 on live slots
     coord_valid: np.ndarray
     # rsqrt_dim normalization factors per slot (0 on padding)
     coord_inv_sqrt_q: np.ndarray
+    # parameter-slot validity (q_packed,): 0.0 on padding, 1.0 on live
+    # slots.  The reconstruct-apply megakernel streams whole pos_block
+    # tiles, so position-padding slots receive phantom deltas; a
+    # packed-RESIDENT parameter buffer (TrainState keeps the packed
+    # representation across steps) masks the output with this so padding
+    # stays exactly zero instead of accumulating a random walk.
+    param_valid: np.ndarray
 
     @property
     def n_proj_tiles(self) -> int:
@@ -379,10 +400,10 @@ def packed_layout(plan: Plan, pos_block: int = 512,
                     s, di * dir_block, pj * pos_block,
                     (seg_param_off[s] + pj * pos_block) // pos_block,
                     (seg_coord_off[s] + di * dir_block) // dir_block,
-                    int(di == 0),
+                    int(di == 0), seg_size[s],
                 ))
     pt = np.asarray(pt, np.int64).reshape(-1, 7)
-    rt = np.asarray(rt, np.int64).reshape(-1, 6)
+    rt = np.asarray(rt, np.int64).reshape(-1, 7)
 
     slot = np.arange(d_packed, dtype=np.int64)
     seg_of_slot = np.searchsorted(seg_coord_off, slot, side="right") - 1
@@ -390,6 +411,11 @@ def packed_layout(plan: Plan, pos_block: int = 512,
     coord_valid = (within < seg_dim[seg_of_slot]).astype(np.float32)
     coord_inv_sqrt_q = coord_valid / np.sqrt(
         seg_size[seg_of_slot].astype(np.float64)).astype(np.float32)
+
+    pslot = np.arange(q_packed, dtype=np.int64)
+    pseg = np.searchsorted(seg_param_off, pslot, side="right") - 1
+    param_valid = ((pslot - seg_param_off[pseg])
+                   < seg_size[pseg]).astype(np.float32)
 
     return PackedLayout(
         pos_block=pos_block,
@@ -418,6 +444,8 @@ def packed_layout(plan: Plan, pos_block: int = 512,
         rt_gblk=rt[:, 3].astype(np.int32),
         rt_sblk=rt[:, 4].astype(np.int32),
         rt_init=rt[:, 5].astype(np.int32),
+        rt_q=rt[:, 6].astype(np.int32),
         coord_valid=coord_valid,
         coord_inv_sqrt_q=coord_inv_sqrt_q,
+        param_valid=param_valid,
     )

@@ -51,6 +51,30 @@ def worker_seed(transform: RandomBasesTransform, state: RBDState, axis_name):
     return rng.fold_seed(base, k.astype(jnp.uint32) + jnp.uint32(1))
 
 
+def shared_basis_coords(
+    transform: RandomBasesTransform,
+    local_grads: Any,
+    state: RBDState,
+    axis_name,
+):
+    """The shared-basis exchange primitive: project the local gradient
+    shard, psum-average the d-dimensional coordinates.  Returns
+    (coords, row_sq) in the per-leaf ``projector.project`` convention.
+    ``repro.optim.subspace.SubspaceOptimizer`` runs its coordinate-space
+    optimizer on exactly these post-exchange coordinates (the state
+    update is deterministic, so worker states stay replicated)."""
+    from repro.core import projector
+
+    seed = transform.step_seed(state.step)
+    coords, norms = projector.project(
+        local_grads, transform.plan, seed, backend=transform.backend,
+        return_norms=True)
+    coords = [
+        jax.lax.pmean(c, axis_name=axis_name) for c in coords
+    ]
+    return coords, norms
+
+
 def shared_basis_update(
     transform: RandomBasesTransform,
     local_grads: Any,
@@ -58,12 +82,18 @@ def shared_basis_update(
     axis_name,
 ):
     """All workers, one basis: psum-average d-dim coordinates, reconstruct
-    locally.  Returns (update_pytree, new_state)."""
-    coords = transform.project(local_grads, state)
-    coords = [
-        jax.lax.pmean(c, axis_name=axis_name) for c in coords
-    ]
-    update = transform.reconstruct(coords, state, local_grads)
+    locally.  Returns (update_pytree, new_state).  Used by the full-space
+    strategy of ``SubspaceOptimizer`` (e.g. under weight decay); the
+    coordinate-space strategies call :func:`shared_basis_coords` and keep
+    the optimizer between exchange and reconstruction."""
+    from repro.core import projector
+
+    coords, norms = shared_basis_coords(transform, local_grads, state,
+                                        axis_name)
+    seed = transform.step_seed(state.step)
+    update = projector.reconstruct(
+        coords, transform.plan, seed, local_grads,
+        backend=transform.backend, row_sq=norms)
     return update, RBDState(step=state.step + 1)
 
 

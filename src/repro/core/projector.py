@@ -601,13 +601,19 @@ def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
         jnp.take(seg_seeds, jnp.asarray(layout.rt_seg), axis=0),
         jnp.asarray(layout.rt_row0),
         jnp.asarray(layout.rt_col0),
+        jnp.asarray(layout.rt_q),
         jnp.asarray(layout.rt_gblk),
         jnp.asarray(layout.rt_sblk),
     )
 
     def body(theta, x):
-        seed, row0, col0, gb, sb = x
+        seed, row0, col0, q, gb, sb = x
         block = rng.generate_block(seed, row0, col0, (db, pb), distribution)
+        # mask positions past the segment's true size: a packed-RESIDENT
+        # theta keeps its padding slots exactly zero in-stream
+        cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
+            + col0.astype(jnp.int32)
+        block = jnp.where(cols < q, block, 0.0)
         stile = jax.lax.dynamic_slice(s, (0, sb * db), (1, db))
         part = jax.lax.dot_general(
             stile, block,
@@ -623,7 +629,8 @@ def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
 
 
 def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
-                   layout=None, return_norms: bool = False):
+                   layout=None, return_norms: bool = False,
+                   prepacked: bool = False):
     """Packed-path projection: normalized coordinates for ALL compartments
     in one (d_packed,) buffer -- ONE kernel launch on the pallas backend,
     one scan on the jnp backend.
@@ -631,10 +638,14 @@ def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
     The packed coordinate buffer (padding slots zeroed) is the single
     per-step exchange quantity in sharedseed training: one pmean over it
     replaces one collective per compartment.
+
+    ``prepacked=True`` takes ``grads`` as an already-packed (q_packed,)
+    buffer (packed-resident TrainState) and skips the staging copy.
     """
     layout = layout if layout is not None else plan.packed()
     seeds = segment_seeds(plan, seed)
-    g_packed = pack_tree(grads, plan, layout)
+    g_packed = (grads.astype(jnp.float32) if prepacked
+                else pack_tree(grads, plan, layout))
     u, sq = _get_backend(backend).project_packed(
         seeds, g_packed, layout, plan.distribution)
     coords = u * _packed_norm_factor(plan, layout, sq)
@@ -645,13 +656,20 @@ def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
 
 def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
                              eta, *, backend: str = "jnp", row_sq=None,
-                             layout=None):
+                             layout=None, prepacked: bool = False):
     """Fused packed update: theta' = theta - eta * (c_hat @ P), applied to
     the whole parameter pytree in ONE kernel launch.  The reconstructed
     delta never exists in HBM.  ``row_sq`` (from
     ``project_packed(..., return_norms=True)``) is required only for
     'exact' normalization without a colocated projection; when None it is
     regenerated with a zero-gradient projection pass.
+
+    ``prepacked=True`` takes ``params`` as the resident packed (q_packed,)
+    buffer and returns the updated packed buffer -- no staging pack or
+    unpack copies.  Position-padding slots keep their input value (zero
+    for a buffer packed by :func:`pack_tree`): the kernels and the
+    oracle mask generated columns past each segment's true size
+    in-stream (``rt_q``), so no extra masking pass exists.
     """
     layout = layout if layout is not None else plan.packed()
     seeds = segment_seeds(plan, seed)
@@ -664,9 +682,12 @@ def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
     # contribute to the applied update
     factor = _packed_norm_factor(plan, layout, row_sq)
     scale = coords_packed * factor * jnp.float32(eta)
-    theta = pack_tree(params, plan, layout)
+    theta = (params.astype(jnp.float32) if prepacked
+             else pack_tree(params, plan, layout))
     out = be.reconstruct_apply_packed(
         seeds, scale, theta, layout, plan.distribution)
+    if prepacked:
+        return out
     return unpack_tree(out, plan, layout, params)
 
 

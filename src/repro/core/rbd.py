@@ -14,6 +14,13 @@ c_{t+1} = c_t - eta P^T g  implies  theta_{t+1} = theta_t - eta P P^T g.
 
 This identity (redraw toggles RBD vs FPD) is the cleanest expression of the
 paper's central claim and is property-tested in tests/test_rbd_math.py.
+
+NOTE: training code should go through
+``repro.optim.subspace.SubspaceOptimizer``, which owns the full
+sketch -> coordinate-space optimizer -> apply chain (including
+momentum/adam with (d,)-shaped state).  The ``update``/``fused_step``
+entry points below remain as thin compatibility shims for existing
+examples, benchmarks and tests.
 """
 
 from __future__ import annotations
@@ -82,12 +89,14 @@ class RandomBasesTransform:
                    axis_name=None, packed: bool = True):
         """Fused sketch-and-apply: returns (new_params, new_state).
 
-        Replaces update() + the caller's SGD apply with the two-launch
-        packed :func:`rbd_step` (``packed=True``) or the per-leaf
-        ``projector.reconstruct_apply`` fallback (``packed=False`` --
-        one fused launch per compartment, still no delta in HBM).  Only
-        valid when nothing (momentum, weight decay, clipping) sits
-        between the sketch and the apply.
+        Deprecated shim (SGD only): ``optim.subspace.SubspaceOptimizer``
+        runs the same two launches with a coordinate-space optimizer
+        (sgd/momentum/adam) in between.  Replaces update() + the
+        caller's SGD apply with the two-launch packed :func:`rbd_step`
+        (``packed=True``) or the per-leaf ``projector.reconstruct_apply``
+        fallback (``packed=False`` -- one fused launch per compartment,
+        still no delta in HBM).  Only valid when nothing (weight decay,
+        clipping) sits between the sketch and the apply.
         """
         seed = self.step_seed(state.step)
         if packed:

@@ -87,7 +87,7 @@ def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
     sq_ref[...] += part_sq
 
 
-def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, init_ref,
+def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
                         gblk_ref, sblk_ref, s_ref, theta_ref, out_ref, *,
                         dir_block: int, distribution: str):
     t = pl.program_id(0)
@@ -100,6 +100,13 @@ def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, init_ref,
         (dir_block, pb),
         distribution,
     )
+    # mask positions past the segment's true size so padding slots of a
+    # packed-RESIDENT theta keep their (zero) value in-stream -- no
+    # separate masking pass over the parameter buffer exists
+    cols = jax.lax.broadcasted_iota(jnp.int32, (dir_block, pb), 1) \
+        + col0_ref[t].astype(jnp.int32)
+    block = jnp.where(cols < q_ref[t], block, 0.0)
+
     s = s_ref[...].astype(jnp.float32)              # (1, dir_block)
     part = jax.lax.dot_general(
         s, block,
@@ -208,15 +215,15 @@ def reconstruct_apply_packed(
     seeds = _tile_seeds(seg_seeds, layout.rt_seg)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=7,
         grid=(n_tiles,),
         in_specs=[
-            pl.BlockSpec((1, db), lambda t, se, r0, c0, ini, gb, sb:
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, q, ini, gb, sb:
                          (0, sb[t])),
-            pl.BlockSpec((1, pb), lambda t, se, r0, c0, ini, gb, sb:
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
                          (0, gb[t])),
         ],
-        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, ini, gb, sb:
+        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
                                (0, gb[t])),
     )
     out = pl.pallas_call(
@@ -229,6 +236,7 @@ def reconstruct_apply_packed(
         seeds,
         jnp.asarray(layout.rt_row0),
         jnp.asarray(layout.rt_col0),
+        jnp.asarray(layout.rt_q),
         jnp.asarray(layout.rt_init),
         jnp.asarray(layout.rt_gblk),
         jnp.asarray(layout.rt_sblk),

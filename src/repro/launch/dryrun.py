@@ -28,7 +28,6 @@ import time  # noqa: E402
 from typing import Any  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
 from repro.configs.base import InputShape, RBDConfig, TrainConfig  # noqa: E402
@@ -69,18 +68,6 @@ def model_flops(cfg, shape: InputShape) -> float:
 # --------------------------------------------------------------------------
 
 
-def _state_shape(model, transform, params_shape):
-    return jax.eval_shape(
-        lambda p: train_step_lib.TrainState(
-            params=p,
-            rbd_state=(transform.init(p) if transform else ()),
-            opt_state=(),
-            step=jnp.zeros((), jnp.int32),
-        ),
-        params_shape,
-    )
-
-
 def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
@@ -89,39 +76,55 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
     are projected locally and only d-dimensional coordinates cross the
     wire -- paper Algorithm 1.  The D-dimensional gradient all-reduce of
     the pjit modes does not exist in the lowered program.
+
+    Prints the SubspaceOptimizer ``plan_execution()`` reason code so the
+    dry run never silently takes an unexpected (e.g. unfused) path.
     """
     cfg = model.cfg
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"))
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
     transform = train_step_lib.make_transform(model, rbd_cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    state_shape = _state_shape(model, transform, params_shape)
     batch_shape = model.batch_specs(shape)
 
     if mode == "sharedseed":
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import shard_map_compat
 
         layout = rules.layout_policy(params_shape, cfg)
         baxes = rules.batch_axes(mesh, layout)
-        _, inner = train_step_lib.make_train_step(
-            model, tcfg, transform, axis_name=tuple(baxes))
+        init_fn, inner, sub_opt = train_step_lib.make_train_step(
+            model, tcfg, transform, axis_name=tuple(baxes),
+            return_optimizer=True)
+        _print_update_path(sub_opt)
+        state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         repl_state = jax.tree_util.tree_map(lambda _: P(), state_shape)
         batch_spec = jax.tree_util.tree_map(lambda _: P(baxes),
                                             batch_shape)
         metrics_spec = {k: P() for k in
                         ("ce", "aux", "loss", "update_norm")}
-        step_fn = shard_map(
+        step_fn = shard_map_compat(
             inner, mesh=mesh,
             in_specs=(repl_state, batch_spec),
             out_specs=(repl_state, metrics_spec),
-            axis_names=set(baxes),
-            check_vma=False,
+            manual_axes=tuple(baxes),
         )
         return step_fn, (state_shape, batch_shape)
 
-    _, step_fn = train_step_lib.make_train_step(model, tcfg, transform)
+    # pjit modes shard params over the production mesh's model axis
+    init_fn, step_fn, sub_opt = train_step_lib.make_train_step(
+        model, tcfg, transform, model_sharded=True,
+        return_optimizer=True)
+    _print_update_path(sub_opt)
+    state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     return step_fn, (state_shape, batch_shape)
+
+
+def _print_update_path(sub_opt):
+    ep = sub_opt.plan_execution()
+    fused = "fused" if ep.fused else "UNFUSED"
+    print(f"      update path [{fused}]: {ep.strategy} -- {ep.reason}")
 
 
 def build_prefill_inputs(model, shape: InputShape):
@@ -232,6 +235,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
 
     coll = collective_bytes(hlo)

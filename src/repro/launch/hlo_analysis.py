@@ -169,6 +169,40 @@ def _count_pallas_eqns(jaxpr) -> int:
     return n
 
 
+_COLLECTIVE_PRIMITIVES = ("psum", "pmean", "pmax", "pmin", "all_gather",
+                          "all_to_all", "ppermute", "reduce_scatter")
+
+
+def collective_sites(fn, *args, **kwargs) -> list[tuple[str, int]]:
+    """(primitive_name, payload_elements) for every cross-worker
+    collective site in fn's traced program (recursing through nested
+    jaxprs, same discipline as :func:`count_pallas_calls`).
+
+    The sharedseed communication contract is asserted on this: one
+    optimizer step must contain exactly ONE non-scalar collective -- the
+    pmean of the packed (d,) coordinate buffer -- for sgd, momentum and
+    adam alike, and no D-sized gradient all-reduce.
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    sites: list[tuple[str, int]] = []
+    _collect_collectives(closed.jaxpr, sites)
+    return sites
+
+
+def _collect_collectives(jaxpr, sites) -> None:
+    import numpy as np
+
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _COLLECTIVE_PRIMITIVES:
+            n = int(sum(np.prod(v.aval.shape, dtype=np.int64)
+                        if v.aval.shape else 1 for v in eqn.invars))
+            sites.append((eqn.primitive.name, n))
+        for j in _sub_jaxprs(eqn.params):
+            _collect_collectives(j, sites)
+
+
 def _sub_jaxprs(params) -> Iterator:
     try:
         from jax.core import ClosedJaxpr, Jaxpr

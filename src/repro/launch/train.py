@@ -48,6 +48,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.125)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adam"],
+                    help="coordinate-space optimizer; momentum/adam keep "
+                         "their state on the packed (d,) buffer and still "
+                         "run as two launches per step")
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--momentum-beta", type=float, default=0.9)
+    ap.add_argument("--nesterov", action="store_true")
+    ap.add_argument("--adam-b1", type=float, default=0.9)
+    ap.add_argument("--adam-b2", type=float, default=0.999)
+    ap.add_argument("--adam-eps", type=float, default=1e-8)
     ap.add_argument("--rbd-dim", type=int, default=1024)
     ap.add_argument("--rbd-backend", default="jnp",
                     choices=["jnp", "pallas"])
@@ -75,15 +86,20 @@ def main(argv=None):
         model_axis=args.model, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rbd_dim=args.rbd_dim,
         rbd_backend=args.rbd_backend, packed=args.packed,
+        optimizer=args.optimizer, weight_decay=args.weight_decay,
+        momentum_beta=args.momentum_beta, nesterov=args.nesterov,
+        adam_b1=args.adam_b1, adam_b2=args.adam_b2,
+        adam_eps=args.adam_eps,
         checkpoint_dir=args.checkpoint_dir)
 
 
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  data=1, model_axis=1, steps=10, batch=8, seq=128,
                  lr=0.125, rbd_dim=1024, rbd_backend="jnp",
-                 packed="auto", checkpoint_dir=None):
+                 packed="auto", optimizer="sgd", weight_decay=0.0,
+                 momentum_beta=0.9, nesterov=False, adam_b1=0.9,
+                 adam_b2=0.999, adam_eps=1e-8, checkpoint_dir=None):
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.base import RBDConfig, TrainConfig
@@ -99,7 +115,10 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                         total_dim=rbd_dim, mode=rbd_mode,
                         backend=rbd_backend, packed=packed)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,
-                      steps=steps, batch_size=batch, seq_len=seq)
+                      steps=steps, batch_size=batch, seq_len=seq,
+                      optimizer=optimizer, weight_decay=weight_decay,
+                      momentum_beta=momentum_beta, nesterov=nesterov,
+                      adam_b1=adam_b1, adam_b2=adam_b2, adam_eps=adam_eps)
 
     mesh = make_host_mesh(data, model_axis)
     transform = steplib.make_transform(model, rbd_cfg)
@@ -108,16 +127,45 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
         axis_name = "data"
     else:
         axis_name = None
-    init_state, train_step = steplib.make_train_step(
-        model, tcfg, transform, axis_name=axis_name)
+    # pjit shards params over the model axis; the packed-resident buffer
+    # would silently replicate them, so declare it and let plan_execution
+    # fall back with a reason code
+    model_sharded = (mode == "pjit" or model_axis > 1)
+    init_state, train_step, sub_opt = steplib.make_train_step(
+        model, tcfg, transform, axis_name=axis_name,
+        model_sharded=model_sharded, return_optimizer=True)
+    eplan = sub_opt.plan_execution()
+    print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
 
-    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(tcfg.seed))
-    pspecs = rules.param_specs(params_shape, mesh, cfg)
+    # full state shape (params may be the packed buffer) drives the specs
+    state_shape = jax.eval_shape(init_state, jax.random.PRNGKey(tcfg.seed))
+    if eplan.packed_resident:
+        pspecs = P()   # one replicated packed buffer (sharedseed default)
+    else:
+        pspecs = rules.param_specs(state_shape.params, mesh, cfg)
+    if eplan.coord_space:
+        # coordinate-space state is (d,)-sized -- replicate it
+        opt_specs = jax.tree_util.tree_map(lambda _: P(),
+                                           state_shape.opt_state)
+    else:
+        # full-space optimizer states are built with
+        # tree_map(zeros_like, params): any subtree that mirrors the
+        # param tree (momentum's m, adam's mu/nu) shards like the
+        # params; everything else (counts, ()) replicates
+        params_treedef = jax.tree_util.tree_structure(state_shape.params)
+
+        def _mirrors_params(sub):
+            return (jax.tree_util.tree_structure(sub) == params_treedef)
+
+        opt_specs = jax.tree_util.tree_map(
+            lambda sub: pspecs if _mirrors_params(sub)
+            else jax.tree_util.tree_map(lambda _: P(), sub),
+            state_shape.opt_state, is_leaf=_mirrors_params)
     state_specs = steplib.TrainState(
         params=pspecs,
-        rbd_state=jax.tree_util.tree_map(lambda _: P(), jax.eval_shape(
-            lambda: transform.init(params_shape) if transform else ())),
-        opt_state=(),
+        rbd_state=jax.tree_util.tree_map(lambda _: P(),
+                                         state_shape.rbd_state),
+        opt_state=opt_specs,
         step=P(),
     )
 
@@ -161,7 +209,10 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     if checkpoint_dir:
         from repro.checkpoint import io as ckpt
 
-        ckpt.save(checkpoint_dir, state, steps)
+        # checkpoints always store the params PYTREE (stable format,
+        # independent of the packed-resident execution strategy)
+        ckpt.save(checkpoint_dir, state._replace(
+            params=sub_opt.materialize_params(state.params)), steps)
         print("checkpoint saved to", checkpoint_dir)
     return state
 

@@ -1,0 +1,16 @@
+"""Optimizers: coordinate-space subspace optimizer (the public update
+API) plus the optax-style gradient-transform substrate."""
+
+from repro.optim import transforms
+from repro.optim.subspace import (
+    ExecutionPlan,
+    SubspaceOptimizer,
+    plan_from_flags,
+)
+
+__all__ = [
+    "ExecutionPlan",
+    "SubspaceOptimizer",
+    "plan_from_flags",
+    "transforms",
+]

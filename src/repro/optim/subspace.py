@@ -1,0 +1,373 @@
+"""Coordinate-space subspace optimizer: ONE abstraction behind every
+update path.
+
+The paper's identity (section 4.5: the subspace update is fully
+determined by the d-dimensional coordinates, and basis switching is
+principled) means optimizer state belongs in COORDINATE space, not
+parameter space.  Krummenacher et al. (*Scalable Adaptive Stochastic
+Optimization Using Random Projections*) make the same move for adaptive
+methods.  :class:`SubspaceOptimizer` therefore owns the whole chain
+
+    backprop -> sketch (project) -> [pmean of the (d,) coordinates]
+             -> coordinate-space optimizer (sgd | momentum | adam,
+                state shaped like the packed coordinate buffer)
+             -> reconstruct-and-apply
+
+and is the only way ``train/step.py``, ``launch/train.py`` and
+``core/distributed.py`` perform an update.  Because momentum/adam state
+is d-dimensional, the two-launch packed step
+(``core.rbd.rbd_step``-style: launch 1 projects, pure-jnp state update
+on the (d,) buffer between launches, launch 2 reconstruct-applies)
+covers ALL three optimizers -- the 2-``pallas_call`` invariant and the
+one-pmean-per-step sharedseed exchange are no longer SGD-only.
+
+Execution strategy is a single static decision
+(:meth:`SubspaceOptimizer.plan_execution`, reason-coded), replacing the
+``can_fuse_apply`` heuristics that used to be duplicated across
+``optim/transforms.py`` and ``train/step.py``:
+
+* ``fused_packed``   -- packed two-launch step; TrainState keeps params
+                        PACKED across steps (pack once at init, unpack
+                        only for ``model.forward``; gradients arrive
+                        packed for free because the autodiff transpose
+                        of the unpack IS the pack).
+* ``fused_per_leaf`` -- per-leaf fused reconstruct-apply (packing off,
+                        pallas backend).
+* ``coord_unfused``  -- project -> coord optimizer -> reconstruct ->
+                        apply as separate XLA-fused stages (jnp backend,
+                        or orthonormal normalization).  State is still
+                        coordinate-space.
+* ``full_space``     -- classic full-space optimizer state: RBD
+                        disabled, weight decay (couples updates to
+                        full-space params), or independent_bases mode.
+
+FPD equivalence (property-tested): with a FIXED basis, coordinate-space
+momentum and full-space momentum on the sketched gradient are
+mathematically identical (linearity of reconstruction), so the redesign
+is a strict generalization, not a new algorithm, wherever the basis is
+fixed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projector
+from repro.core.compartments import PACKABLE_NORMALIZATIONS
+from repro.core.rbd import RandomBasesTransform, RBDState
+from repro.optim import transforms as opt
+
+
+class ExecutionPlan(NamedTuple):
+    """Static decision of how one optimizer step executes, with a
+    structured reason code (surfaced by ``launch/dryrun.py``)."""
+
+    strategy: str          # fused_packed | fused_per_leaf | coord_unfused
+                           # | full_space
+    packed_resident: bool  # TrainState stores params packed across steps
+    reason: str            # human-readable decision trail
+
+    @property
+    def fused(self) -> bool:
+        return self.strategy in ("fused_packed", "fused_per_leaf")
+
+    @property
+    def coord_space(self) -> bool:
+        """Optimizer state lives in the d-dimensional coordinate space."""
+        return self.strategy != "full_space"
+
+
+def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
+                    rbd_enabled: bool = True, use_packed: bool = False,
+                    normalization: str = "rsqrt_dim", backend: str = "jnp",
+                    mode: str = "shared_basis", axis_name=None,
+                    model_sharded: bool = False) -> ExecutionPlan:
+    """The one fuse/state-placement decision point (pure function of the
+    config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
+
+    ``model_sharded``: the caller shards parameters over a model axis --
+    the packed-resident buffer is one array and would silently replicate
+    them, so packing falls back to the per-leaf paths with a reason code.
+    """
+    del optimizer  # all optimizers have coordinate-space state now
+    if not rbd_enabled:
+        return ExecutionPlan(
+            "full_space", False,
+            "rbd disabled -> full-space optimizer on raw gradients")
+    if axis_name is not None and mode == "independent_bases":
+        return ExecutionPlan(
+            "full_space", False,
+            "independent_bases exchange -> K per-worker bases, "
+            "full-space optimizer state")
+    if weight_decay:
+        return ExecutionPlan(
+            "full_space", False,
+            "weight_decay couples updates to full-space params -> "
+            "unfused full-space path")
+    if normalization not in PACKABLE_NORMALIZATIONS:
+        return ExecutionPlan(
+            "coord_unfused", False,
+            f"{normalization} normalization -> unfused (materializes a "
+            "QR basis per compartment); coordinate-space state")
+    if use_packed and model_sharded:
+        if backend == "pallas":
+            return ExecutionPlan(
+                "fused_per_leaf", False,
+                "model-axis param sharding is incompatible with the "
+                "packed-resident buffer -> per-leaf fused apply")
+        return ExecutionPlan(
+            "coord_unfused", False,
+            "model-axis param sharding is incompatible with the "
+            "packed-resident buffer -> per-leaf XLA-fused stages")
+    if use_packed:
+        return ExecutionPlan(
+            "fused_packed", True,
+            "packed two-launch step: project -> (d,)-state coordinate "
+            "optimizer -> reconstruct-apply; packed-resident TrainState")
+    if backend == "pallas":
+        return ExecutionPlan(
+            "fused_per_leaf", False,
+            "packing disabled -> per-leaf fused reconstruct-apply; "
+            "coordinate-space state")
+    return ExecutionPlan(
+        "coord_unfused", False,
+        "jnp backend unpacked -> per-leaf XLA-fused stages (no kernel "
+        "launches); coordinate-space state")
+
+
+class _Aux(NamedTuple):
+    update_norm: jax.Array
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SubspaceOptimizer:
+    """Optax-style ``init`` / ``step`` over the full sketch->opt->apply
+    chain.
+
+    ``params``/``grads`` flow through :meth:`step` in the STORED
+    representation: the packed (q_packed,) f32 buffer when
+    ``plan_execution().packed_resident`` (use :meth:`prepare_params` /
+    :meth:`materialize_params` at the boundary), the plain pytree
+    otherwise.  The packed-resident master copy is f32 -- bf16 params
+    get a float32 master for free (the per-step bf16 round-trip of the
+    staging copies disappears along with the copies themselves).
+    """
+
+    transform: Optional[RandomBasesTransform] = None
+    optimizer: str = "sgd"
+    learning_rate: float = 0.01
+    weight_decay: float = 0.0
+    momentum_beta: float = 0.9
+    nesterov: bool = False
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    mode: str = "shared_basis"        # shared_basis | independent_bases
+    use_packed: bool = False
+    axis_name: Any = None             # mesh axis (or tuple) for sharedseed
+    model_sharded: bool = False       # params sharded over a model axis
+    log_update_norm: bool = True
+    params_template: Any = None       # pytree of shapes/dtypes; required
+                                      # for the packed-resident strategy
+
+    @classmethod
+    def from_config(cls, tcfg, transform=None, axis_name=None,
+                    model_sharded=False,
+                    params_template=None) -> "SubspaceOptimizer":
+        """Build from a ``TrainConfig`` (the transform comes from
+        ``train.step.make_transform`` to avoid a circular import)."""
+        return cls(
+            transform=transform,
+            optimizer=tcfg.optimizer,
+            learning_rate=tcfg.learning_rate,
+            weight_decay=tcfg.weight_decay,
+            momentum_beta=tcfg.momentum_beta,
+            nesterov=tcfg.nesterov,
+            adam_b1=tcfg.adam_b1,
+            adam_b2=tcfg.adam_b2,
+            adam_eps=tcfg.adam_eps,
+            mode=tcfg.rbd.mode,
+            use_packed=tcfg.rbd.use_packed,
+            axis_name=axis_name,
+            model_sharded=model_sharded,
+            log_update_norm=tcfg.log_update_norm,
+            params_template=params_template,
+        )
+
+    # -- static planning ----------------------------------------------------
+
+    def plan_execution(self) -> ExecutionPlan:
+        t = self.transform
+        return plan_from_flags(
+            optimizer=self.optimizer,
+            weight_decay=self.weight_decay,
+            rbd_enabled=t is not None,
+            use_packed=self.use_packed,
+            normalization=(t.plan.normalization if t else "rsqrt_dim"),
+            backend=(t.backend if t else "jnp"),
+            mode=self.mode,
+            axis_name=self.axis_name,
+            model_sharded=self.model_sharded,
+        )
+
+    def _optimizer(self) -> opt.Transform:
+        return opt.get_optimizer(
+            self.optimizer, momentum_beta=self.momentum_beta,
+            nesterov=self.nesterov, adam_b1=self.adam_b1,
+            adam_b2=self.adam_b2, adam_eps=self.adam_eps)
+
+    # -- state --------------------------------------------------------------
+
+    def init_rbd_state(self, params):
+        return self.transform.init(params) if self.transform else ()
+
+    def init_opt_state(self, params):
+        """Optimizer state: shaped like the coordinate buffer for the
+        coordinate-space strategies ((d_packed,) on the packed path),
+        like ``params`` for the full-space path.  SGD is stateless
+        everywhere."""
+        eplan = self.plan_execution()
+        o = self._optimizer()
+        if not eplan.coord_space:
+            return o.init(params)
+        return o.init(self._coord_template())
+
+    def _coord_template(self):
+        plan = self.transform.plan
+        if self.plan_execution().strategy == "fused_packed":
+            return jnp.zeros((plan.packed().d_packed,), jnp.float32)
+        return [jnp.zeros((lp.n_stack, lp.dim), jnp.float32)
+                for lp in plan.leaves]
+
+    # -- stored-representation boundary -------------------------------------
+
+    def prepare_params(self, params):
+        """Full pytree -> stored representation (pack once, at init)."""
+        if not self.plan_execution().packed_resident:
+            return params
+        plan = self.transform.plan
+        return projector.pack_tree(params, plan, plan.packed())
+
+    def materialize_params(self, stored):
+        """Stored representation -> full pytree (for model.forward, eval,
+        checkpoint export).  Identity for non-resident strategies."""
+        if not self.plan_execution().packed_resident:
+            return stored
+        if self.params_template is None:
+            raise ValueError(
+                "packed-resident SubspaceOptimizer needs params_template "
+                "(pytree of shapes/dtypes) to materialize parameters")
+        plan = self.transform.plan
+        return projector.unpack_tree(stored, plan, plan.packed(),
+                                     self.params_template)
+
+    # -- the update ---------------------------------------------------------
+
+    def step(self, params, grads, rbd_state, opt_state):
+        """One optimizer step.  Returns
+        ``(new_params, new_rbd_state, new_opt_state, aux)`` with
+        ``aux.update_norm`` the full-space update norm (zeros when
+        ``log_update_norm`` is off).  ``params``/``grads`` are in the
+        stored representation."""
+        strategy = self.plan_execution().strategy
+        if strategy == "full_space":
+            return self._full_space_step(params, grads, rbd_state,
+                                         opt_state)
+        if strategy == "fused_packed":
+            return self._packed_step(params, grads, rbd_state, opt_state)
+        return self._per_leaf_step(params, grads, rbd_state, opt_state,
+                                   fused=(strategy == "fused_per_leaf"))
+
+    def _packed_step(self, params, grads, rbd_state, opt_state):
+        """Two launches: project || (d,)-state optimizer || reconstruct-
+        apply.  With ``axis_name`` set, ONE pmean of the packed (d,)
+        coordinate buffer is the entire per-step exchange -- for sgd,
+        momentum AND adam (the state update is deterministic on the
+        post-pmean coordinates, so worker states stay replicated)."""
+        t = self.transform
+        plan = t.plan
+        layout = plan.packed()
+        seed = t.step_seed(rbd_state.step)
+        coords, sq = projector.project_packed(
+            grads, plan, seed, backend=t.backend, layout=layout,
+            return_norms=True, prepacked=True)
+        if self.axis_name is not None:
+            coords = jax.lax.pmean(coords, axis_name=self.axis_name)
+        coords, opt_state = self._optimizer().update(coords, opt_state)
+        new_params = projector.reconstruct_apply_packed(
+            coords, plan, seed, params, self.learning_rate,
+            backend=t.backend, row_sq=sq, layout=layout, prepacked=True)
+        return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
+                self._delta_aux(params, new_params))
+
+    def _per_leaf_step(self, params, grads, rbd_state, opt_state, *,
+                       fused: bool):
+        t = self.transform
+        seed = t.step_seed(rbd_state.step)
+        if self.axis_name is not None:
+            from repro.core import distributed
+
+            coords, norms = distributed.shared_basis_coords(
+                t, grads, rbd_state, self.axis_name)
+        else:
+            coords, norms = projector.project(
+                grads, t.plan, seed, backend=t.backend, return_norms=True)
+        coords, opt_state = self._optimizer().update(coords, opt_state)
+        new_rbd = RBDState(step=rbd_state.step + 1)
+        if fused:
+            new_params = projector.reconstruct_apply(
+                coords, t.plan, seed, params, self.learning_rate,
+                backend=t.backend, row_sq=norms)
+            return (new_params, new_rbd, opt_state,
+                    self._delta_aux(params, new_params))
+        updates = projector.reconstruct(coords, t.plan, seed, params,
+                                        backend=t.backend, row_sq=norms)
+        new_params = opt.apply_updates(params, updates, self.learning_rate)
+        return new_params, new_rbd, opt_state, self._norm_aux(updates)
+
+    def _full_space_step(self, params, grads, rbd_state, opt_state):
+        t = self.transform
+        if t is None:
+            if self.axis_name is not None:
+                # SGD baseline under manual data parallelism: the classic
+                # D-dimensional gradient all-reduce the paper eliminates.
+                grads = jax.lax.pmean(grads, self.axis_name)
+            updates, new_rbd = grads, rbd_state
+        elif self.axis_name is None:
+            updates, new_rbd = t.update(grads, rbd_state)
+        else:
+            from repro.core import distributed
+
+            fn = (distributed.shared_basis_update
+                  if self.mode == "shared_basis"
+                  else distributed.independent_bases_update)
+            updates, new_rbd = fn(t, grads, rbd_state, self.axis_name)
+        if self.weight_decay:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u + self.weight_decay * p, updates, params)
+        updates, opt_state = self._optimizer().update(updates, opt_state,
+                                                      params)
+        new_params = opt.apply_updates(params, updates, self.learning_rate)
+        return new_params, new_rbd, opt_state, self._norm_aux(updates)
+
+    # -- metrics ------------------------------------------------------------
+
+    def _norm_aux(self, updates) -> _Aux:
+        if not self.log_update_norm:
+            return _Aux(jnp.zeros(()))
+        return _Aux(opt.global_norm(updates))
+
+    def _delta_aux(self, old, new) -> _Aux:
+        """The fused paths never materialize the update; recover its norm
+        from the parameter delta (costs a read of both trees, gated by
+        ``log_update_norm``)."""
+        if not (self.log_update_norm and self.learning_rate):
+            return _Aux(jnp.zeros(()))
+        diff = jax.tree_util.tree_map(
+            lambda p, q: p.astype(jnp.float32) - q.astype(jnp.float32),
+            old, new)
+        return _Aux(opt.global_norm(diff) / self.learning_rate)

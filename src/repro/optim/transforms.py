@@ -42,11 +42,17 @@ def momentum(beta: float = 0.9, nesterov: bool = False) -> Transform:
     return Transform(init, update)
 
 
+class AdamState(NamedTuple):
+    # module-level so that states from independent adam() instances are
+    # the same pytree node type (e.g. an eval_shape'd spec template vs
+    # the live state)
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
 def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Transform:
-    class State(NamedTuple):
-        mu: Any
-        nu: Any
-        count: jax.Array
+    State = AdamState
 
     def init(params):
         z = jax.tree_util.tree_map(jnp.zeros_like, params)
@@ -97,13 +103,27 @@ def chain(*transforms: Transform) -> Transform:
     return Transform(init, update)
 
 
-def get_optimizer(name: str) -> Transform:
-    return {"sgd": sgd(), "momentum": momentum(), "adam": adam()}[name]
+def get_optimizer(name: str, *, momentum_beta: float = 0.9,
+                  nesterov: bool = False, adam_b1: float = 0.9,
+                  adam_b2: float = 0.999, adam_eps: float = 1e-8) -> Transform:
+    """Optimizer by name with explicit hyperparameters (the TrainConfig
+    fields of the same names plumb through here)."""
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(momentum_beta, nesterov)
+    if name == "adam":
+        return adam(adam_b1, adam_b2, adam_eps)
+    raise KeyError(f"unknown optimizer {name!r}")
 
 
 def apply_updates(params, updates, lr):
+    # subtract in f32 and round ONCE into the parameter dtype: casting the
+    # update to p.dtype first would lose the f32 accumulate for bf16
+    # params (the packed kernels pin the same round-through-f32 contract)
     return jax.tree_util.tree_map(
-        lambda p, u: (p - lr * u.astype(p.dtype)).astype(p.dtype),
+        lambda p, u: (p.astype(jnp.float32)
+                      - lr * u.astype(jnp.float32)).astype(p.dtype),
         params, updates)
 
 
@@ -111,35 +131,31 @@ def apply_updates(params, updates, lr):
 # fused sketch-and-apply (single-launch packed RBD step)
 # ---------------------------------------------------------------------------
 
-# Optimizers whose update is a pure axpy (u == g), so the RBD sketch and
-# the parameter apply can fuse into core.rbd.rbd_step's two launches with
-# nothing in between.  Momentum/adam keep full-space state and must see
-# the materialized sketch.
-FUSABLE_OPTIMIZERS = ("sgd",)
+# Optimizers whose state lives in the d-dimensional coordinate space
+# (repro.optim.subspace), so the sketch and the parameter apply fuse into
+# core.rbd.rbd_step's two launches with only a (d,)-sized pure-jnp state
+# update in between.  Since the coordinate-space redesign this is all of
+# them; the tuple remains for backwards compatibility.
+FUSABLE_OPTIMIZERS = ("sgd", "momentum", "adam")
 
 
 def can_fuse_apply(optimizer: str, weight_decay: float, rbd_cfg) -> bool:
-    """True when the train step may replace sketch -> optimizer -> apply
-    with a fused sketch-and-apply: the packed two-launch rbd_step when
-    packing is enabled, else the per-leaf ``reconstruct_apply`` fallback
-    (one fused launch per compartment on the pallas backend)."""
-    if not rbd_cfg.enabled:
-        return False
-    if optimizer not in FUSABLE_OPTIMIZERS or weight_decay:
-        return False
-    if rbd_cfg.use_packed:
-        # the packed megakernels support every distribution but only the
-        # factor-style normalizations (orthonormal materializes a QR
-        # basis)
-        return rbd_cfg.normalization in ("rsqrt_dim", "exact", "none")
-    # per-leaf fused apply only pays off where the fused kernel exists;
-    # the jnp unfused path stays as-is (XLA fuses the axpy anyway)
-    return rbd_cfg.backend == "pallas"
+    """Deprecated shim: the fuse decision (with a structured reason code)
+    now lives in ``repro.optim.subspace.plan_from_flags`` /
+    ``SubspaceOptimizer.plan_execution``."""
+    from repro.optim import subspace
+
+    return subspace.plan_from_flags(
+        optimizer=optimizer, weight_decay=weight_decay,
+        rbd_enabled=rbd_cfg.enabled, use_packed=rbd_cfg.use_packed,
+        normalization=rbd_cfg.normalization, backend=rbd_cfg.backend,
+    ).fused
 
 
 def fused_rbd_apply(transform, params, grads, rbd_state, lr,
                     axis_name=None, packed=True):
-    """SGD apply fused into the RBD step; returns
+    """Deprecated shim (SGD-only fused apply); prefer
+    ``repro.optim.subspace.SubspaceOptimizer.step``.  Returns
     (new_params, new_rbd_state).  See ``core.rbd.rbd_step``."""
     return transform.fused_step(params, grads, rbd_state, lr,
                                 axis_name=axis_name, packed=packed)

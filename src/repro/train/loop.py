@@ -27,7 +27,8 @@ def train(
 ):
     """Simple single-process loop (examples / paper-repro experiments).
     The multi-pod path lives in repro.launch.train."""
-    init_state, train_step = make_train_step(model, tcfg)
+    init_state, train_step, sub_opt = make_train_step(
+        model, tcfg, return_optimizer=True)
     state = init_state(jax.random.PRNGKey(tcfg.seed))
     train_step = jax.jit(train_step)
 
@@ -43,7 +44,13 @@ def train(
             print(f"step {step:5d} loss {m['loss']:.4f} "
                   f"wall {m['wall']:.1f}s")
         if eval_fn and eval_every and step % eval_every == eval_every - 1:
-            acc = eval_fn(state.params)
+            # packed-resident states store params as one packed buffer;
+            # materialize the pytree view for evaluation
+            acc = eval_fn(sub_opt.materialize_params(state.params))
+            # attach to this step's record, or open one (eval steps need
+            # not coincide with log steps, and verbose may be off)
+            if not history or history[-1].get("step") != step:
+                history.append({"step": step})
             history[-1]["eval"] = float(acc)
             if verbose:
                 print(f"  eval: {float(acc):.4f}")
@@ -51,5 +58,8 @@ def train(
                 and step % checkpoint_every == checkpoint_every - 1):
             from repro.checkpoint import io as ckpt
 
-            ckpt.save(checkpoint_dir, state, step)
+            # checkpoints always store the params PYTREE (stable format,
+            # independent of the packed-resident execution strategy)
+            ckpt.save(checkpoint_dir, state._replace(
+                params=sub_opt.materialize_params(state.params)), step)
     return state, history

@@ -2,15 +2,24 @@
 
 ``make_train_step`` builds the single-program step used both by the
 single-host examples and (wrapped in pjit / shard_map by
-``repro.launch.train``) by the production launcher.  The RBD transform
-is a drop-in stage of the update chain; disabling it yields the SGD
-baseline the paper compares against.
+``repro.launch.train``) by the production launcher.  The whole update
+chain -- sketch, coordinate-space optimizer, apply -- is owned by ONE
+abstraction, :class:`repro.optim.subspace.SubspaceOptimizer`; this
+module only computes the loss/gradient and threads state.  Disabling
+RBD yields the SGD baseline the paper compares against.
+
+When the execution plan is the packed two-launch step,
+``TrainState.params`` holds the PACKED (q_packed,) f32 buffer across
+steps: packing happens once at init, the step unpacks only to feed
+``model.forward``, and the gradient arrives packed for free (the
+autodiff transpose of the unpack is the pack).  The per-step staging
+copies the kernel byte model excludes are gone for real.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,13 +27,14 @@ import jax.numpy as jnp
 from repro.configs.base import RBDConfig, TrainConfig
 from repro.core import compartments, rbd as rbd_lib
 from repro.models.registry import Model
-from repro.optim import transforms as opt
+from repro.optim import subspace
 
 
 class TrainState(NamedTuple):
-    params: Any
+    params: Any             # pytree, or the packed (q_packed,) buffer
+                            # when the execution plan is packed-resident
     rbd_state: Any          # RBDState or ()
-    opt_state: Any
+    opt_state: Any          # coordinate-space ((d,)-shaped) or full-space
     step: jax.Array
 
 
@@ -61,7 +71,31 @@ def make_transform(model: Model, rbd_cfg: RBDConfig, params_shape=None):
     )
 
 
-def make_loss_fn(model: Model, aux_coef: float = 0.01) -> Callable:
+def make_subspace_optimizer(
+        model: Model, tcfg: TrainConfig,
+        transform: Optional[rbd_lib.RandomBasesTransform] = None,
+        axis_name=None, *,
+        model_sharded: bool = False) -> subspace.SubspaceOptimizer:
+    """The one update-path object for a (model, TrainConfig) pair.
+
+    ``model_sharded``: the caller shards params over a model axis --
+    rules out the packed-resident strategy (see ``plan_from_flags``).
+    """
+    if transform is None and tcfg.rbd.enabled:
+        transform = make_transform(model, tcfg.rbd)
+    sub_opt = subspace.SubspaceOptimizer.from_config(
+        tcfg, transform=transform, axis_name=axis_name,
+        model_sharded=model_sharded)
+    if sub_opt.plan_execution().packed_resident:
+        # only the packed-resident strategy materializes params from the
+        # packed buffer, so only it pays the model.init shape trace
+        sub_opt = dataclasses.replace(
+            sub_opt, params_template=jax.eval_shape(
+                model.init, jax.random.PRNGKey(tcfg.seed)))
+    return sub_opt
+
+
+def make_loss_fn(model: Model, aux_coef: float = 0.01):
     def loss_fn(params, batch):
         logits, aux = model.forward(params, batch)
         ce = softmax_cross_entropy(logits, batch["labels"])
@@ -72,91 +106,49 @@ def make_loss_fn(model: Model, aux_coef: float = 0.01) -> Callable:
 
 def make_train_step(model: Model, tcfg: TrainConfig,
                     transform: Optional[rbd_lib.RandomBasesTransform] = None,
-                    axis_name: Optional[str] = None):
-    """Returns (init_state_fn, train_step_fn).
+                    axis_name: Optional[str] = None, *,
+                    model_sharded: bool = False,
+                    return_optimizer: bool = False):
+    """Returns (init_state_fn, train_step_fn) -- plus the
+    :class:`SubspaceOptimizer` when ``return_optimizer`` is set (the
+    loop/launcher use it to materialize packed-resident params for eval,
+    checkpointing and sharding specs).
 
     ``axis_name``: if set, the step runs inside shard_map over that axis
     and uses the paper's shared-seed exchange (``tcfg.rbd.mode``) instead
     of relying on an implicit D-dimensional gradient all-reduce.
+    ``model_sharded``: declare that params are sharded over a model axis
+    (disables the packed-resident strategy with a reason code).
     """
     loss_fn = make_loss_fn(model, model.cfg.router_aux_coef)
-    optimizer = opt.get_optimizer(tcfg.optimizer)
-    if transform is None and tcfg.rbd.enabled:
-        transform = make_transform(model, tcfg.rbd)
-    # Single-launch packed step: sketch + SGD apply fuse into two kernel
-    # launches (core.rbd.rbd_step).  Only the shared-basis exchange fits
-    # the fused form (independent_bases regenerates K bases per step).
-    fuse = (transform is not None
-            and opt.can_fuse_apply(tcfg.optimizer, tcfg.weight_decay,
-                                   tcfg.rbd)
-            and (axis_name is None or tcfg.rbd.mode == "shared_basis"))
+    sub_opt = make_subspace_optimizer(model, tcfg, transform, axis_name,
+                                      model_sharded=model_sharded)
 
     def init_state(key) -> TrainState:
         params = model.init(key)
         return TrainState(
-            params=params,
-            rbd_state=(transform.init(params) if transform else ()),
-            opt_state=optimizer.init(params),
+            params=sub_opt.prepare_params(params),
+            rbd_state=sub_opt.init_rbd_state(params),
+            opt_state=sub_opt.init_opt_state(params),
             step=jnp.zeros((), jnp.int32),
         )
 
     def train_step(state: TrainState, batch):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            state.params, batch)
+        def loss_on_stored(stored, b):
+            return loss_fn(sub_opt.materialize_params(stored), b)
 
-        if axis_name is not None and transform is None:
-            # SGD baseline under manual data parallelism: the classic
-            # D-dimensional gradient all-reduce the paper eliminates.
-            grads = jax.lax.pmean(grads, axis_name)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_on_stored, has_aux=True)(state.params, batch)
+
+        if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
 
-        rbd_state = state.rbd_state
-        if fuse:
-            if axis_name is not None:
-                loss = jax.lax.pmean(loss, axis_name)
-            params, rbd_state = opt.fused_rbd_apply(
-                transform, state.params, grads, rbd_state,
-                tcfg.learning_rate, axis_name=axis_name,
-                packed=tcfg.rbd.use_packed)
-            # the update never materializes; recover its norm from the
-            # parameter delta for metrics parity with the unfused path
-            # (costs a read of both trees -- gated by log_update_norm)
-            if tcfg.log_update_norm and tcfg.learning_rate:
-                unorm = opt.global_norm(jax.tree_util.tree_map(
-                    lambda p, q: (p.astype(jnp.float32)
-                                  - q.astype(jnp.float32)),
-                    state.params, params)) / tcfg.learning_rate
-            else:
-                unorm = jnp.zeros(())
-            metrics = dict(metrics, loss=loss, update_norm=unorm)
-            return TrainState(params, rbd_state, state.opt_state,
-                              state.step + 1), metrics
-        if transform is not None:
-            if axis_name is None:
-                updates, rbd_state = transform.update(grads, rbd_state)
-            else:
-                from repro.core import distributed
+        params, rbd_state, opt_state, aux = sub_opt.step(
+            state.params, grads, state.rbd_state, state.opt_state)
+        metrics = dict(metrics, loss=loss, update_norm=aux.update_norm)
+        return TrainState(params, rbd_state, opt_state,
+                          state.step + 1), metrics
 
-                loss = jax.lax.pmean(loss, axis_name)
-                fn = (distributed.shared_basis_update
-                      if tcfg.rbd.mode == "shared_basis"
-                      else distributed.independent_bases_update)
-                updates, rbd_state = fn(transform, grads, rbd_state,
-                                        axis_name)
-        else:
-            updates = grads
-
-        if tcfg.weight_decay:
-            updates = jax.tree_util.tree_map(
-                lambda u, p: u + tcfg.weight_decay * p, updates,
-                state.params)
-        updates, opt_state = optimizer.update(updates, state.opt_state,
-                                              state.params)
-        params = opt.apply_updates(state.params, updates,
-                                   tcfg.learning_rate)
-        metrics = dict(metrics, loss=loss,
-                       update_norm=opt.global_norm(updates))
-        return TrainState(params, rbd_state, opt_state, state.step + 1), \
-            metrics
-
+    if return_optimizer:
+        return init_state, train_step, sub_opt
     return init_state, train_step

@@ -90,6 +90,42 @@ _SCRIPT = textwrap.dedent("""
     out["packed_shared_equals_single_worker"] = bool(
         jnp.allclose(newp_dist, flat(newp_single), atol=1e-4))
 
+    # coordinate-space momentum under the packed sharedseed exchange:
+    # pmean happens BEFORE the (d,)-state update, so every worker holds
+    # the same state and the distributed step equals the single-worker
+    # step on the mean gradient, step after step
+    from repro.optim.subspace import SubspaceOptimizer
+
+    def momentum_sub(axis):
+        return SubspaceOptimizer(
+            transform=RandomBasesTransform(plan, base_seed=3),
+            optimizer="momentum", learning_rate=0.5, use_packed=True,
+            axis_name=axis, params_template=params)
+
+    def run_two_steps(sub, grad_fn):
+        stored = sub.prepare_params(params)
+        st_r = sub.init_rbd_state(params)
+        st_o = sub.init_opt_state(params)
+        for i in range(2):
+            gp = projector.pack_tree(grad_fn(i), plan,
+                                     plan.packed())
+            stored, st_r, st_o, _ = sub.step(stored, gp, st_r, st_o)
+        return stored
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("data"),
+                       out_specs=P())
+    def momentum_dist(gv):
+        out_p = run_two_steps(momentum_sub("data"),
+                              lambda i: unflat(gv[0] * (1.0 + i)))
+        return out_p[None]
+
+    mom_dist = momentum_dist(g)[0]
+    mom_single = run_two_steps(momentum_sub(None),
+                               lambda i: unflat(g.mean(0) * (1.0 + i)))
+    out["momentum_packed_shared_equals_single_worker"] = bool(
+        jnp.allclose(mom_dist, mom_single, atol=1e-4))
+
     # comm accounting sanity
     c_sgd = distributed.grad_comm_bytes(plan, 2080, 8, "sgd")
     c_sb = distributed.grad_comm_bytes(plan, 2080, 8, "shared_basis")
@@ -132,3 +168,11 @@ def test_packed_shared_basis_equals_single_worker(results):
     """The fused two-launch step under shard_map: one pmean of the packed
     coordinate buffer, same update as a single worker on the mean grad."""
     assert results["packed_shared_equals_single_worker"]
+
+
+def test_momentum_packed_shared_equals_single_worker(results):
+    """Coordinate-space momentum distributes identically: the (d,) state
+    update runs on post-pmean coordinates, so worker states stay
+    replicated and two distributed steps equal two single-worker steps
+    on the mean gradient."""
+    assert results["momentum_packed_shared_equals_single_worker"]

@@ -1,0 +1,401 @@
+"""Coordinate-space SubspaceOptimizer (optim/subspace.py): execution
+planning with reason codes, fused-vs-unfused parity for momentum/adam on
+both backends, coordinate-vs-full-space momentum equivalence under FPD,
+the 2-launch + one-pmean invariants for ALL optimizers, the
+packed-resident TrainState, and the apply_updates rounding contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container may not ship hypothesis: skip ONLY the
+    import types      # property tests, keep the rest of the module live
+
+    st = types.SimpleNamespace(
+        floats=lambda *a, **k: None,
+        booleans=lambda *a, **k: None,
+    )
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro.configs.base import RBDConfig
+from repro.core import make_plan, projector, rng
+from repro.core.rbd import RandomBasesTransform, rbd_step
+from repro.optim import transforms as opt
+from repro.optim.subspace import SubspaceOptimizer, plan_from_flags
+
+
+def _params():
+    # ragged on purpose (same fixture family as test_packed_step): sizes
+    # that do not divide the block sizes, a scalar leaf, a stacked leaf
+    return {
+        "w": jnp.ones((64, 32)),
+        "layers": {"k": jnp.ones((3, 40, 10))},
+        "s": jnp.ones(()),
+        "odd": jnp.ones((7, 73)),
+        "long": jnp.ones((700,)),
+    }
+
+
+def _grads(params, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(k, p.shape), params)
+
+
+def _plan(params, norm="rsqrt_dim", dist="normal"):
+    return make_plan(params, 96, granularity="layer",
+                     is_stacked=lambda n: n.startswith("layers"),
+                     distribution=dist, normalization=norm)
+
+
+def _sub(transform, optimizer="sgd", lr=0.3, **kw):
+    return SubspaceOptimizer(transform=transform, optimizer=optimizer,
+                             learning_rate=lr, **kw)
+
+
+def _run_fused(sub, params, grad_seq):
+    """Drive the packed fused path: pack once, step over grad_seq,
+    materialize at the end (the packed-resident discipline)."""
+    plan = sub.transform.plan
+    layout = plan.packed()
+    stored = sub.prepare_params(params)
+    rbd_state = sub.init_rbd_state(params)
+    opt_state = sub.init_opt_state(params)
+    for g in grad_seq:
+        gp = projector.pack_tree(g, plan, layout)
+        stored, rbd_state, opt_state, _ = sub.step(
+            stored, gp, rbd_state, opt_state)
+    return stored
+
+
+# ---------------------------------------------------------------------------
+# one decision point, structured reason codes
+# ---------------------------------------------------------------------------
+
+
+def test_plan_execution_reason_codes():
+    cases = [
+        (dict(rbd_enabled=False), "full_space", "rbd disabled"),
+        (dict(weight_decay=0.1), "full_space", "weight_decay"),
+        (dict(mode="independent_bases", axis_name="data"), "full_space",
+         "independent_bases"),
+        (dict(normalization="orthonormal", use_packed=True),
+         "coord_unfused", "orthonormal"),
+        (dict(use_packed=True), "fused_packed", "two-launch"),
+        (dict(backend="pallas"), "fused_per_leaf", "per-leaf"),
+        (dict(), "coord_unfused", "jnp backend"),
+    ]
+    for flags, strategy, marker in cases:
+        ep = plan_from_flags(**flags)
+        assert ep.strategy == strategy, (flags, ep)
+        assert marker in ep.reason, (flags, ep.reason)
+    assert plan_from_flags(use_packed=True).packed_resident
+    assert not plan_from_flags().packed_resident
+
+
+def test_can_fuse_apply_shim_covers_stateful_optimizers():
+    """The deprecated entry point now reports momentum/adam as fusable
+    (coordinate-space state) and still rejects the ineligible configs."""
+    packed = RBDConfig(backend="pallas")
+    assert opt.can_fuse_apply("momentum", 0.0, packed)
+    assert opt.can_fuse_apply("adam", 0.0, packed)
+    assert not opt.can_fuse_apply("sgd", 0.1, packed)          # wd
+    assert not opt.can_fuse_apply(
+        "sgd", 0.0, RBDConfig(backend="pallas",
+                              normalization="orthonormal"))
+    assert not opt.can_fuse_apply("sgd", 0.0, RBDConfig(enabled=False))
+
+
+# ---------------------------------------------------------------------------
+# fused vs unfused parity for the stateful optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("optimizer", ["momentum", "adam"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_matches_unfused_reference(optimizer, backend):
+    """The packed two-launch step with a coordinate-space optimizer in
+    between equals the unfused per-leaf reference (project -> optimizer
+    on per-leaf coordinates -> reconstruct -> apply), across both
+    backends, over several steps of state accumulation."""
+    params = _params()
+    plan = _plan(params)
+    t = RandomBasesTransform(plan, base_seed=3, redraw=True,
+                             backend=backend)
+    sub = _sub(t, optimizer, use_packed=True, params_template=params)
+    grad_seq = [jax.tree_util.tree_map(lambda x: x * (1.0 + 0.2 * i),
+                                       _grads(params))
+                for i in range(3)]
+    fused = sub.materialize_params(_run_fused(sub, params, grad_seq))
+
+    # unfused per-leaf reference: same coordinate-space optimizer math,
+    # per-leaf projection/reconstruction, jnp backend
+    coord_opt = opt.get_optimizer(optimizer)
+    ost = coord_opt.init([jnp.zeros((lp.n_stack, lp.dim), jnp.float32)
+                          for lp in plan.leaves])
+    p = params
+    for i, g in enumerate(grad_seq):
+        seed = rng.fold_seed(3, jnp.uint32(i))
+        coords, norms = projector.project(g, plan, seed, backend="jnp",
+                                          return_norms=True)
+        coords, ost = coord_opt.update(coords, ost)
+        delta = projector.reconstruct(coords, plan, seed, p,
+                                      backend="jnp", row_sq=norms)
+        p = opt.apply_updates(p, delta, sub.learning_rate)
+    for a, b in zip(jax.tree_util.tree_leaves(fused),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_fused_kernel_bitexact_vs_oracle(optimizer):
+    """Interpret-mode megakernels + coordinate-space optimizer are
+    bit-exact against the packed jnp oracle for every optimizer (the
+    optimizer state update between launches is the same pure jnp)."""
+    params = _params()
+    plan = _plan(params)
+    grad_seq = [_grads(params, key=k) for k in range(2)]
+    outs = {}
+    for backend in ("pallas", "jnp"):
+        t = RandomBasesTransform(plan, base_seed=7, redraw=True,
+                                 backend=backend)
+        sub = _sub(t, optimizer, use_packed=True, params_template=params)
+        outs[backend] = _run_fused(sub, params, grad_seq)
+    np.testing.assert_array_equal(np.asarray(outs["pallas"]),
+                                  np.asarray(outs["jnp"]))
+
+
+@pytest.mark.parametrize("optimizer", ["momentum", "adam"])
+def test_per_leaf_fused_matches_coord_unfused(optimizer):
+    """The per-leaf fused fallback (packing off, pallas backend) runs the
+    same coordinate-space optimizer as the unfused jnp path."""
+    params = _params()
+    plan = _plan(params)
+    g = _grads(params)
+    outs = {}
+    for backend, use_packed in (("pallas", False), ("jnp", False)):
+        t = RandomBasesTransform(plan, 3, backend=backend)
+        sub = _sub(t, optimizer, use_packed=use_packed,
+                   params_template=params)
+        want = "fused_per_leaf" if backend == "pallas" else "coord_unfused"
+        assert sub.plan_execution().strategy == want
+        st_r, st_o = sub.init_rbd_state(params), sub.init_opt_state(params)
+        p = params
+        for _ in range(2):
+            p, st_r, st_o, _ = sub.step(p, g, st_r, st_o)
+        outs[backend] = p
+    for a, b in zip(jax.tree_util.tree_leaves(outs["pallas"]),
+                    jax.tree_util.tree_leaves(outs["jnp"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# FPD: coordinate-space momentum == full-space momentum (paper 4.5)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("beta,nesterov",
+                         [(0.9, False), (0.9, True), (0.5, False)])
+def test_fpd_coordinate_momentum_equals_full_space_cases(beta, nesterov):
+    """Fixed-sample version of the property below (runs even without
+    hypothesis -- this is an acceptance-critical identity)."""
+    _check_fpd_momentum_equivalence(beta, nesterov)
+
+
+@given(beta=st.floats(0.0, 0.95), nesterov=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_fpd_coordinate_momentum_equals_full_space(beta, nesterov):
+    """With a FIXED basis (FPD), momentum on the d coordinates and
+    momentum on the reconstructed full-space sketch are mathematically
+    identical (reconstruction is linear) -- the property that makes the
+    coordinate-space redesign a strict generalization."""
+    _check_fpd_momentum_equivalence(beta, nesterov)
+
+
+def _check_fpd_momentum_equivalence(beta, nesterov):
+    params = _params()
+    plan = _plan(params)
+    t = RandomBasesTransform(plan, base_seed=5, redraw=False,
+                             backend="jnp")
+    lr = 0.4
+    sub = _sub(t, "momentum", lr=lr, use_packed=True,
+               momentum_beta=beta, nesterov=nesterov,
+               params_template=params)
+    grad_seq = [_grads(params, key=k) for k in range(4)]
+    coord_p = sub.materialize_params(_run_fused(sub, params, grad_seq))
+
+    # full-space reference: momentum over the materialized sketch
+    full_opt = opt.momentum(beta, nesterov)
+    m = full_opt.init(params)
+    p = params
+    seed = rng.fold_seed(5, jnp.uint32(0))  # FPD: basis fixed at step 0
+    for g in grad_seq:
+        sketch = projector.rbd_gradient(g, plan, seed, backend="jnp")
+        upd, m = full_opt.update(sketch, m)
+        p = opt.apply_updates(p, upd, lr)
+    for a, b in zip(jax.tree_util.tree_leaves(coord_p),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# acceptance invariants: 2 launches and one (d,) pmean for ALL optimizers
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm_setup(optimizer, backend="pallas"):
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig
+    from repro.data import synthetic
+    from repro.models import get_model
+
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        model=cfg, optimizer=optimizer,
+        rbd=RBDConfig(total_dim=256, backend=backend, packed="on"),
+        learning_rate=0.5, steps=1, batch_size=2, seq_len=16)
+    batch = next(synthetic.lm_batches(0, 2, 16, cfg.vocab))
+    return model, tcfg, batch
+
+
+@pytest.mark.parametrize("optimizer", ["momentum", "adam"])
+def test_full_train_step_two_launches_stateful(optimizer):
+    """End-to-end acceptance: model fwd/bwd + fused RBD step with
+    coordinate-space momentum/adam still traces to exactly two
+    pallas_calls (the (d,)-state update between launches is pure jnp)."""
+    from repro.launch.hlo_analysis import count_pallas_calls
+    from repro.train import step as steplib
+
+    model, tcfg, batch = _tiny_lm_setup(optimizer)
+    init_state, train_step = steplib.make_train_step(model, tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    assert count_pallas_calls(train_step, state, batch) == 2
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_sharedseed_one_packed_pmean(optimizer):
+    """The communication contract for all three optimizers: one shard_map
+    train step contains exactly ONE non-scalar collective -- the pmean of
+    the packed (d_packed,) coordinate buffer -- and in particular no
+    D-sized gradient all-reduce."""
+    from repro.launch.hlo_analysis import collective_sites
+    from repro.launch.mesh import _make_mesh, shard_map_compat
+    from repro.train import step as steplib
+    from jax.sharding import PartitionSpec as P
+
+    model, tcfg, batch = _tiny_lm_setup(optimizer, backend="jnp")
+    init_state, train_step, sub = steplib.make_train_step(
+        model, tcfg, axis_name="data", return_optimizer=True)
+    assert sub.plan_execution().strategy == "fused_packed"
+    d_packed = sub.transform.plan.packed().d_packed
+    n_params = sub.transform.plan.total_params
+    state = init_state(jax.random.PRNGKey(0))
+
+    mesh = _make_mesh((1,), ("data",))
+    repl = jax.tree_util.tree_map(lambda _: P(), state)
+    fn = shard_map_compat(
+        train_step, mesh=mesh,
+        in_specs=(repl, {"tokens": P("data"), "labels": P("data")}),
+        out_specs=(repl, {"ce": P(), "aux": P(), "loss": P(),
+                          "update_norm": P()}),
+        manual_axes=("data",))
+    sites = collective_sites(fn, state, batch)
+    big = [s for s in sites if s[1] > 1]
+    assert big, ("no non-scalar collective found -- the coordinate "
+                 "pmean is missing", sites)
+    assert big == [(big[0][0], d_packed)], (sites, d_packed)
+    assert all(n != n_params for _, n in sites), sites
+
+
+# ---------------------------------------------------------------------------
+# packed-resident TrainState
+# ---------------------------------------------------------------------------
+
+
+def test_packed_resident_state_matches_legacy_step():
+    """TrainState stores the packed buffer across steps; training is
+    bit-identical (f32 params) to the legacy unpack/repack-every-step
+    sequence, and padding slots stay exactly zero."""
+    from repro.train import step as steplib
+
+    model, tcfg, batch = _tiny_lm_setup("sgd", backend="jnp")
+
+    init_state, train_step, sub = steplib.make_train_step(
+        model, tcfg, return_optimizer=True)
+    ep = sub.plan_execution()
+    assert ep.packed_resident
+    layout = sub.transform.plan.packed()
+    state = init_state(jax.random.PRNGKey(0))
+    assert state.params.shape == (layout.q_packed,)
+    step = jax.jit(train_step)
+    for _ in range(2):
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # padding slots never accumulate phantom deltas
+    pad = np.asarray(state.params) * (1.0 - layout.param_valid)
+    np.testing.assert_array_equal(pad, np.zeros_like(pad))
+
+    # legacy reference: full-pytree state, pack/unpack inside each step
+    plan = sub.transform.plan
+    loss_fn = steplib.make_loss_fn(model, model.cfg.router_aux_coef)
+    p = model.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def legacy_step(p, i):
+        _, grads = jax.value_and_grad(
+            lambda q: loss_fn(q, batch)[0])(p)
+        seed = rng.fold_seed(tcfg.rbd.base_seed, i)
+        return rbd_step(p, grads, plan, seed, tcfg.learning_rate,
+                        backend="jnp")
+
+    for i in range(2):
+        p = legacy_step(p, jnp.uint32(i))
+    got = sub.materialize_params(state.params)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_materialize_roundtrip():
+    params = _params()
+    plan = _plan(params)
+    t = RandomBasesTransform(plan, 0, backend="jnp")
+    sub = _sub(t, use_packed=True, params_template=params)
+    stored = sub.prepare_params(params)
+    back = sub.materialize_params(stored)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# apply_updates rounding contract (bf16 params accumulate in f32)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_updates_single_rounding_bf16():
+    """The subtraction happens in f32 with ONE final cast: bf16 params
+    must match the f32 reference bit-for-bit (the old cast-update-first
+    formula double-rounds and drifts)."""
+    k = jax.random.PRNGKey(2)
+    p = jax.random.normal(k, (4096,)).astype(jnp.bfloat16)
+    u = jax.random.normal(jax.random.fold_in(k, 1), (4096,)) * 1e-3
+    lr = 0.37
+    got = opt.apply_updates({"p": p}, {"p": u}, lr)["p"]
+    ref = (p.astype(jnp.float32) - lr * u).astype(jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got.view(jnp.uint16)),
+                                  np.asarray(ref.view(jnp.uint16)))
