@@ -42,6 +42,21 @@ class RunResult:
 IMG_CNN = (20, 20, 1)      # paper CNN needs >=18px after 2 pools
 
 
+def sketch(transform: RandomBasesTransform, grads, state):
+    """The RBD/FPD gradient sketch, (sketch, new_state) -- the benchmarks
+    compare transform-level sketches directly (RBD vs FPD vs NES), so
+    they use the projector primitives rather than the deprecated
+    ``RandomBasesTransform.update`` shim (training code goes through
+    ``repro.optim.subspace.SubspaceOptimizer``)."""
+    from repro.core import projector
+    from repro.core.rbd import RBDState
+
+    seed = transform.step_seed(state.step)
+    u = projector.rbd_gradient(grads, transform.plan, seed,
+                               backend=transform.backend)
+    return u, RBDState(step=state.step + 1)
+
+
 def setup(model_name: str = "fc", img=None, seed: int = 0):
     if img is None:
         img = IMG_CNN if model_name == "cnn" else IMG
@@ -94,7 +109,7 @@ def train(
         loss, g = jax.value_and_grad(loss_fn)(p, x, y)
         corr = jnp.zeros(())
         if transform is not None:
-            u, st = transform.update(g, st)
+            u, st = sketch(transform, g, st)
             if measure_corr:
                 gf = jnp.concatenate(
                     [a.ravel() for a in jax.tree_util.tree_leaves(g)])

@@ -22,7 +22,7 @@ def _train_phase(params, loss_fn, transform, lr, steps, seed):
     def step(p, st, x, y):
         loss, g = jax.value_and_grad(loss_fn)(p, x, y)
         if transform is not None:
-            g, st = transform.update(g, st)
+            g, st = common.sketch(transform, g, st)
         return jax.tree_util.tree_map(lambda a, u: a - lr * u, p, g), st, loss
 
     data = synthetic.mixture_dataset(seed, common.BATCH, shape=common.IMG,

@@ -10,10 +10,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import make_plan, projector, rng
+from repro.core import make_plan
 from repro.core.rbd import RandomBasesTransform
 from repro.data import synthetic
 from repro.models import vision
+from repro.optim.subspace import SubspaceOptimizer
 
 
 def main():
@@ -27,7 +28,12 @@ def main():
 
     plan = make_plan(params, d_total, granularity="global",
                      normalization="exact")
-    rbd = RandomBasesTransform(plan, base_seed=0, redraw=True)
+    lr = 2.0  # paper table 4: RBD lr = 2^1 for FC-MNIST
+    # the one update-path abstraction: sketch -> coordinate-space
+    # optimizer (sgd here; momentum/adam keep (d,)-shaped state) -> apply
+    sub = SubspaceOptimizer(
+        transform=RandomBasesTransform(plan, base_seed=0, redraw=True),
+        learning_rate=lr)
 
     def loss_fn(p, x, y):
         logits = apply(p, x)
@@ -35,11 +41,11 @@ def main():
         return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
 
     @jax.jit
-    def train_step(p, state, x, y, lr):
+    def train_step(p, rbd_state, opt_state, x, y):
         loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
-        sketch, state = rbd.update(grads, state)
-        p = jax.tree_util.tree_map(lambda a, u: a - lr * u, p, sketch)
-        return p, state, loss
+        p, rbd_state, opt_state, _ = sub.step(p, grads, rbd_state,
+                                              opt_state)
+        return p, rbd_state, opt_state, loss
 
     def accuracy(p, x, y):
         return jnp.mean(jnp.argmax(apply(p, x), -1) == y)
@@ -48,11 +54,12 @@ def main():
     xe, ye = synthetic.mixture_images(
         jax.random.PRNGKey(999), 2048, shape=(28, 28, 1), noise=1.0)
 
-    state = rbd.init(params)
-    lr = 2.0  # paper table 4: RBD lr = 2^1 for FC-MNIST
+    rbd_state = sub.init_rbd_state(params)
+    opt_state = sub.init_opt_state(params)
     for step in range(300):
         x, y = next(data)
-        params, state, loss = train_step(params, state, x, y, lr)
+        params, rbd_state, opt_state, loss = train_step(
+            params, rbd_state, opt_state, x, y)
         if step % 50 == 0 or step == 299:
             acc = accuracy(params, xe, ye)
             print(f"step {step:4d}  loss {float(loss):.4f}  "

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import numpy as np
@@ -354,6 +354,85 @@ class PackedLayout:
     @property
     def n_recon_tiles(self) -> int:
         return int(self.rt_seg.shape[0])
+
+    def worker_tables(self, k_workers: int) -> "WorkerReconTables":
+        """Reconstruct-apply tile tables with a worker axis (cached) --
+        the K-worker joint-subspace step of independent_bases mode."""
+        return worker_recon_tables(self, k_workers)
+
+
+class WorkerReconTables(NamedTuple):
+    """Host-side tile tables for the K-worker joint reconstruct-apply
+    megakernel (packed ``independent_bases`` mode).
+
+    The base ``rt_*`` tables visit each packed theta block once per
+    (segment, pos-block) group with directions innermost; here every
+    group is repeated K times -- worker index in the middle, directions
+    still innermost -- so the streamed (1, pos_block) theta block
+    accumulates ALL K workers' deltas before its single write-back.
+    The K·d-dimensional joint update therefore never exists in HBM.
+
+    ``seed_idx`` indexes the worker-major per-segment seed table of
+    shape (k_workers * n_segments,) (worker k's segment seeds are built
+    from ``fold_seed(step_seed, k + 1)``, the Algorithm 1 schedule);
+    ``sblk`` is the dir_block-granular index into the row-major
+    flattened (k_workers * d_packed,) gathered coordinate buffer.
+    """
+
+    seed_idx: np.ndarray
+    row0: np.ndarray
+    col0: np.ndarray
+    q: np.ndarray
+    init: np.ndarray       # 1 iff first visit (worker 0, dir-block 0)
+    gblk: np.ndarray
+    sblk: np.ndarray
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.seed_idx.shape[0])
+
+
+@functools.lru_cache(maxsize=32)
+def worker_recon_tables(layout: PackedLayout,
+                        k_workers: int) -> WorkerReconTables:
+    """Extend a layout's reconstruct-apply tables with a worker axis.
+
+    Ordering contract (relied on by the kernel-vs-oracle bit-exactness
+    tests): per theta block the accumulation sequence is worker-major
+    with directions innermost -- identical to a scan over workers
+    OUTSIDE the single-worker tile scan, which is exactly what the jnp
+    oracle runs.
+    """
+    if k_workers < 1:
+        raise ValueError(f"k_workers must be >= 1, got {k_workers}")
+    starts = np.flatnonzero(np.asarray(layout.rt_init) == 1)
+    ends = np.append(starts[1:], layout.n_recon_tiles)
+    n_seg = layout.n_segments
+    d_blocks = layout.d_packed // layout.dir_block
+    cols: list[tuple[np.ndarray, ...]] = []
+    for s0, s1 in zip(starts, ends):
+        idx = np.arange(s0, s1)
+        for wk in range(k_workers):
+            cols.append((
+                wk * n_seg + layout.rt_seg[idx],
+                layout.rt_row0[idx],
+                layout.rt_col0[idx],
+                layout.rt_q[idx],
+                (layout.rt_init[idx] if wk == 0
+                 else np.zeros_like(layout.rt_init[idx])),
+                layout.rt_gblk[idx],
+                wk * d_blocks + layout.rt_sblk[idx],
+            ))
+    packed = [np.concatenate([c[i] for c in cols]) for i in range(7)]
+    return WorkerReconTables(
+        seed_idx=packed[0].astype(np.int32),
+        row0=packed[1].astype(np.uint32),
+        col0=packed[2].astype(np.uint32),
+        q=packed[3].astype(np.int32),
+        init=packed[4].astype(np.int32),
+        gblk=packed[5].astype(np.int32),
+        sblk=packed[6].astype(np.int32),
+    )
 
 
 @functools.lru_cache(maxsize=32)

@@ -1,0 +1,60 @@
+"""Cross-version jax compatibility shims, consolidated.
+
+The repo is validated against the container's pinned jax but must keep
+working as the shard_map / mesh APIs migrate across releases.  Every
+version bridge lives HERE and nowhere else -- one definition per
+symbol, one import site per consumer module:
+
+* :func:`axis_size`        -- ``jax.lax.axis_size`` only exists on newer
+                              jax (consumer: ``core.distributed``).
+* :func:`make_mesh`        -- ``jax.make_mesh``'s ``axis_types`` kwarg
+                              only exists on newer jax (consumer:
+                              ``launch.mesh``, re-exported there as
+                              ``_make_mesh`` for the tests).
+* :func:`shard_map_compat` -- the partial-manual shard_map kwargs were
+                              renamed (``axis_names``/``check_vma`` vs
+                              ``auto``/``check_rep``) when shard_map
+                              graduated from jax.experimental (consumer:
+                              ``launch.mesh``, re-exported).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name, gathered_dim: int) -> int:
+    """Mesh-axis size inside shard_map; jax.lax.axis_size only exists on
+    newer jax, so fall back to the leading dim of an already-
+    all_gathered array."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return gathered_dim
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` only exists on
+    newer jax; older releases treat every axis as Auto already."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    """shard_map with only ``manual_axes`` manual, remaining mesh axes
+    automatic, with replication checking off -- bridging the renamed
+    kwargs (axis_names/check_vma vs auto/check_rep) across jax versions."""
+    try:
+        from jax import shard_map as sm  # jax >= 0.6
+
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(manual_axes), check_vma=False)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+
+        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)

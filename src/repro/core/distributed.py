@@ -17,6 +17,13 @@ the combined ``("pod", "data")`` axes in the multi-pod mesh):
   update -- no D-dimensional tensor ever crosses the wire and there is no
   central parameter server.  This is Algorithm 1 verbatim; it trades K
   extra reconstruction (PRNG + FMA) passes for the richer subspace.
+  The PACKED flavor (:func:`independent_bases_coords` + the K-worker
+  reconstruct-apply megakernel driven by ``optim.subspace``) keeps the
+  step at two kernel launches for any K and its exchange at exactly one
+  all-gather of the (d_packed,) coordinate buffer; the per-leaf
+  :func:`independent_bases_update` below remains the full-space
+  fallback (weight decay, 'exact'/'orthonormal' normalization,
+  model-sharded params).
 
 Both functions are written to run inside ``shard_map`` (manual axes contain
 ``axis_name``); gradients may additionally be sharded over a ``model``
@@ -33,15 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rng
+from repro.core.compat import axis_size as _axis_size
 from repro.core.rbd import RandomBasesTransform, RBDState
-
-
-def _axis_size(axis_name, gathered_dim: int) -> int:
-    """Mesh-axis size; jax.lax.axis_size only exists on newer jax, so
-    fall back to the leading dim of an already-all_gathered array."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(axis_name)
-    return gathered_dim
 
 
 def worker_seed(transform: RandomBasesTransform, state: RBDState, axis_name):
@@ -97,6 +97,37 @@ def shared_basis_update(
     return update, RBDState(step=state.step + 1)
 
 
+def independent_bases_coords(
+    transform: RandomBasesTransform,
+    local_grads,
+    state: RBDState,
+    axis_name,
+    *,
+    layout=None,
+    prepacked: bool = True,
+):
+    """The PACKED independent-bases exchange primitive (Algorithm 1 on
+    the packed representation): project the worker's prepacked gradient
+    onto its OWN basis -- seed folded with the worker index -- then
+    all_gather the single (d_packed,) normalized coordinate buffer into
+    the (K, d_packed) joint-coordinate buffer.  That all-gather is the
+    ENTIRE per-step exchange: ``optim.subspace.SubspaceOptimizer`` runs
+    its coordinate-space optimizer on the gathered buffer (the
+    post-gather state update is deterministic, so worker states stay
+    replicated) and the K-worker reconstruct-apply megakernel
+    regenerates every basis locally.
+    """
+    from repro.core import projector
+
+    plan = transform.plan
+    layout = layout if layout is not None else plan.packed()
+    my_seed = worker_seed(transform, state, axis_name)
+    coords = projector.project_packed(
+        local_grads, plan, my_seed, backend=transform.backend,
+        layout=layout, prepacked=prepacked)
+    return jax.lax.all_gather(coords, axis_name=axis_name)
+
+
 def independent_bases_update(
     transform: RandomBasesTransform,
     local_grads: Any,
@@ -147,10 +178,17 @@ def independent_bases_update(
     return update, RBDState(step=state.step + 1)
 
 
-def grad_comm_bytes(plan, n_params: int, k_workers: int, mode: str) -> dict:
+def grad_comm_bytes(plan, n_params: int, k_workers: int, mode: str,
+                    *, packed: bool = False) -> dict:
     """Napkin accounting of per-step gradient communication, used by the
-    benchmarks and EXPERIMENTS.md tables."""
-    d = plan.total_dim
+    benchmarks and EXPERIMENTS.md tables.
+
+    ``packed=True`` accounts the packed exchange: the wire payload is
+    the (d_packed,) coordinate buffer (d padded per-segment to the
+    dir_block tile boundary), exchanged in ONE collective per step --
+    one pmean (shared_basis) or one all-gather (independent_bases).
+    """
+    d = plan.packed().d_packed if packed else plan.total_dim
     if mode == "sgd":
         payload = 4 * n_params * 2 * (k_workers - 1) / k_workers  # ring AR
     elif mode == "shared_basis":
@@ -159,4 +197,5 @@ def grad_comm_bytes(plan, n_params: int, k_workers: int, mode: str) -> dict:
         payload = 4 * d * (k_workers - 1)  # all-gather of K coord vectors
     else:
         raise ValueError(mode)
-    return {"mode": mode, "bytes_per_step": payload, "dim": d, "D": n_params}
+    return {"mode": mode, "bytes_per_step": payload, "dim": d,
+            "D": n_params, "packed": packed}

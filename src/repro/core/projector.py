@@ -628,6 +628,30 @@ def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
     return theta[0]
 
 
+def _reconstruct_apply_packed_workers_jnp(wseg_seeds, scale_gathered,
+                                          theta_packed, layout,
+                                          k_workers: int,
+                                          distribution: str):
+    """jnp oracle for the K-worker joint reconstruct-apply megakernel:
+    a lax.scan over workers OUTSIDE the single-worker tile scan.  Per
+    packed theta block the accumulation order is worker-major with
+    directions innermost -- identical to the worker kernel's tile tables
+    (``PackedLayout.worker_tables``), so interpret-mode kernel output is
+    bit-exact against this."""
+    seeds = wseg_seeds.reshape(k_workers, layout.n_segments)
+    sc = scale_gathered.astype(jnp.float32).reshape(k_workers,
+                                                    layout.d_packed)
+
+    def body(theta, xs):
+        seeds_w, scale_w = xs
+        return (_reconstruct_apply_packed_jnp(
+            seeds_w, scale_w, theta, layout, distribution), None)
+
+    theta, _ = jax.lax.scan(
+        body, theta_packed.astype(jnp.float32), (seeds, sc))
+    return theta
+
+
 def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
                    layout=None, return_norms: bool = False,
                    prepacked: bool = False):
@@ -691,6 +715,66 @@ def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
     return unpack_tree(out, plan, layout, params)
 
 
+# Normalizations whose reconstruction scale is a STATIC per-slot factor
+# (no per-basis row norms).  The K-worker joint reconstruction regenerates
+# every other worker's basis from the seed schedule alone; 'exact'
+# normalization would additionally need every worker's row norms (a second
+# generation pass or a second collective), so it takes the per-leaf path.
+STATIC_FACTOR_NORMALIZATIONS = ("rsqrt_dim", "none")
+
+
+def worker_base_seeds(seed, k_workers: int):
+    """(k_workers,) per-worker base seeds: ``fold_seed(step_seed, k + 1)``
+    -- the Algorithm 1 shared seed schedule (bit-identical to
+    ``distributed.worker_seed`` for worker k)."""
+    return jax.vmap(
+        lambda i: rng.fold_seed(seed, i + jnp.uint32(1))
+    )(jnp.arange(k_workers, dtype=jnp.uint32))
+
+
+def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
+                                     params: Any, eta, *,
+                                     backend: str = "jnp", layout=None,
+                                     prepacked: bool = False):
+    """K-worker joint fused update (packed ``independent_bases`` mode):
+
+        theta' = theta - eta * sum_k (c_hat_k @ P_k)
+
+    applied to the whole parameter buffer in ONE launch, regenerating
+    every worker's basis locally from the shared seed schedule
+    (``fold_seed(seed, k + 1)``).  ``coords_gathered`` is the
+    (k_workers, d_packed) all-gathered normalized coordinate buffer --
+    the only quantity that crossed the wire; ``eta`` should fold the
+    1/K mean.  The K·d-dimensional joint update never exists in HBM.
+
+    Requires a static-factor normalization
+    (:data:`STATIC_FACTOR_NORMALIZATIONS`): 'exact' would need every
+    worker's regenerated row norms and takes the per-leaf path instead
+    (see ``optim.subspace.plan_from_flags``).
+    """
+    if plan.normalization not in STATIC_FACTOR_NORMALIZATIONS:
+        raise ValueError(
+            f"normalization {plan.normalization!r} is not supported by "
+            "the K-worker packed reconstruction (needs a static per-slot "
+            "factor); use the per-leaf independent_bases path")
+    layout = layout if layout is not None else plan.packed()
+    k_workers = int(coords_gathered.shape[0])
+    wseeds = worker_base_seeds(seed, k_workers)
+    seg_seed_table = jax.vmap(
+        lambda s: segment_seeds(plan, s))(wseeds).reshape(-1)
+    factor = _packed_norm_factor(plan, layout, None)
+    scale = (coords_gathered.astype(jnp.float32) * factor[None, :]
+             * jnp.float32(eta))
+    theta = (params.astype(jnp.float32) if prepacked
+             else pack_tree(params, plan, layout))
+    out = _get_backend(backend).reconstruct_apply_packed_workers(
+        seg_seed_table, scale, theta, layout, k_workers,
+        plan.distribution)
+    if prepacked:
+        return out
+    return unpack_tree(out, plan, layout, params)
+
+
 # ---------------------------------------------------------------------------
 # backend dispatch (jnp reference vs Pallas kernels)
 # ---------------------------------------------------------------------------
@@ -701,6 +785,8 @@ class _JnpBackend:
     reconstruct_flat = staticmethod(_reconstruct_flat)
     project_packed = staticmethod(_project_packed_jnp)
     reconstruct_apply_packed = staticmethod(_reconstruct_apply_packed_jnp)
+    reconstruct_apply_packed_workers = staticmethod(
+        _reconstruct_apply_packed_workers_jnp)
 
 
 @functools.cache
@@ -716,6 +802,8 @@ def _get_backend(name: str):
             project_packed = staticmethod(ops.project_packed)
             reconstruct_apply_packed = staticmethod(
                 ops.reconstruct_apply_packed)
+            reconstruct_apply_packed_workers = staticmethod(
+                ops.reconstruct_apply_packed_workers)
 
         return _PallasBackend
     raise ValueError(f"unknown projector backend {name!r}")

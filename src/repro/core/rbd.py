@@ -26,6 +26,7 @@ examples, benchmarks and tests.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -33,6 +34,13 @@ import jax.numpy as jnp
 
 from repro.core import projector, rng
 from repro.core.compartments import Plan
+
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated: construct a repro.optim.subspace."
+        "SubspaceOptimizer (or use train.step.make_subspace_optimizer) "
+        "and call .step()", DeprecationWarning, stacklevel=3)
 
 
 class RBDState(NamedTuple):
@@ -43,12 +51,17 @@ class RBDState(NamedTuple):
 class RandomBasesTransform:
     """Gradient transform implementing RBD (redraw=True) or FPD (False).
 
-    Usage (mirrors optax's GradientTransformation contract):
+    Preferred usage -- the transform is the sketch CONFIG handed to the
+    one update-path abstraction:
 
         t = RandomBasesTransform(plan, base_seed=0, redraw=True)
-        state = t.init(params)
-        sketch, state = t.update(grads, state)
-        params = tree_map(lambda p, u: p - lr * u, params, sketch)
+        sub = SubspaceOptimizer(transform=t, learning_rate=lr)
+        params, rbd_state, opt_state, _ = sub.step(
+            params, grads, rbd_state, opt_state)
+
+    (``update()`` below mirrors optax's GradientTransformation contract
+    but is a deprecation shim now; ``projector.rbd_gradient`` is the
+    non-deprecated way to compute a bare sketch.)
     """
 
     plan: Plan
@@ -66,6 +79,7 @@ class RandomBasesTransform:
         return rng.fold_seed(self.base_seed, jnp.zeros((), jnp.uint32))
 
     def update(self, grads: Any, state: RBDState, params: Any = None):
+        _warn_deprecated("RandomBasesTransform.update")
         del params
         seed = self.step_seed(state.step)
         sketch = projector.rbd_gradient(
@@ -98,6 +112,7 @@ class RandomBasesTransform:
         still no delta in HBM).  Only valid when nothing (weight decay,
         clipping) sits between the sketch and the apply.
         """
+        _warn_deprecated("RandomBasesTransform.fused_step")
         seed = self.step_seed(state.step)
         if packed:
             params = rbd_step(params, grads, self.plan, seed, lr,

@@ -73,3 +73,15 @@ def reconstruct_apply_packed(seg_seeds, scale_packed, theta_packed, layout,
         seg_seeds, scale_packed, theta_packed, layout, distribution,
         interpret=_INTERPRET,
     )
+
+
+def reconstruct_apply_packed_workers(wseg_seeds, scale_gathered,
+                                     theta_packed, layout, k_workers: int,
+                                     distribution: str = "normal"):
+    """K-worker joint fused update (packed independent_bases), one launch."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.reconstruct_apply_packed_workers(
+        wseg_seeds, scale_gathered, theta_packed, layout, k_workers,
+        distribution, interpret=_INTERPRET,
+    )

@@ -47,7 +47,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import rng
 from repro.core.compartments import PackedLayout
 
-__all__ = ["project_packed", "reconstruct_apply_packed"]
+__all__ = ["project_packed", "reconstruct_apply_packed",
+           "reconstruct_apply_packed_workers"]
 
 
 def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
@@ -240,6 +241,77 @@ def reconstruct_apply_packed(
         jnp.asarray(layout.rt_init),
         jnp.asarray(layout.rt_gblk),
         jnp.asarray(layout.rt_sblk),
+        s,
+        theta,
+    )
+    return out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layout", "k_workers", "distribution", "interpret"),
+)
+def reconstruct_apply_packed_workers(
+    wseg_seeds,
+    scale_gathered,
+    theta_packed,
+    layout: PackedLayout,
+    k_workers: int,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+):
+    """One launch: theta' = theta - sum_k scale_k @ P_k for ALL segments
+    of ALL K workers' bases, fused (packed ``independent_bases`` mode).
+
+    The grid is the base reconstruct-apply grid grown by a worker axis
+    (``PackedLayout.worker_tables``): per (segment, pos-block) group the
+    streamed theta block accumulates every worker's contribution --
+    worker-major, directions innermost -- before its single write-back,
+    so the K·d-dimensional joint update never exists in HBM and the
+    step stays ONE launch regardless of K.  The kernel body is the
+    single-worker one; only the host-side tables change.
+
+    ``wseg_seeds``: (k_workers * n_segments,) uint32 per-worker segment
+    seeds, worker-major (worker k's segment seeds derive from
+    ``fold_seed(step_seed, k + 1)``).  ``scale_gathered``:
+    (k_workers, d_packed) f32 -- each worker's packed coordinates with
+    learning rate (folding the 1/K mean) and normalization applied,
+    zero on padding slots.  ``theta_packed``: (q_packed,) f32.
+    """
+    pb, db = layout.pos_block, layout.dir_block
+    wt = layout.worker_tables(k_workers)
+    s = scale_gathered.astype(jnp.float32).reshape(
+        1, k_workers * layout.d_packed)
+    theta = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    seeds = _tile_seeds(wseg_seeds, wt.seed_idx)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(wt.n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, sb[t])),
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, gb[t])),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                               (0, gb[t])),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_apply_kernel, dir_block=db, distribution=distribution),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
+        interpret=interpret,
+    )(
+        seeds,
+        jnp.asarray(wt.row0),
+        jnp.asarray(wt.col0),
+        jnp.asarray(wt.q),
+        jnp.asarray(wt.init),
+        jnp.asarray(wt.gblk),
+        jnp.asarray(wt.sblk),
         s,
         theta,
     )

@@ -8,6 +8,7 @@ production meshes.  Do NOT replicate this env var anywhere global.
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
       --shape train_4k [--multi-pod] [--mode rbd|sgd|sharedseed] \
+      [--rbd-mode shared_basis|independent_bases] [--packed auto|on|off] \
       [--out reports/dryrun]
   PYTHONPATH=src python -m repro.launch.dryrun --all
 """
@@ -68,7 +69,9 @@ def model_flops(cfg, shape: InputShape) -> float:
 # --------------------------------------------------------------------------
 
 
-def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
+def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
+                       rbd_mode: str = "shared_basis",
+                       packed: str = "auto"):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
     mode='sharedseed' wraps the step in shard_map (manual over the batch
@@ -76,12 +79,17 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
     are projected locally and only d-dimensional coordinates cross the
     wire -- paper Algorithm 1.  The D-dimensional gradient all-reduce of
     the pjit modes does not exist in the lowered program.
+    ``rbd_mode`` selects the exchange: 'shared_basis' (one pmean of the
+    packed coordinate buffer) or 'independent_bases' (one all-gather
+    into the K*d joint subspace); both compile, plan and assert through
+    the identical SubspaceOptimizer machinery.
 
     Prints the SubspaceOptimizer ``plan_execution()`` reason code so the
     dry run never silently takes an unexpected (e.g. unfused) path.
     """
     cfg = model.cfg
-    rbd_cfg = RBDConfig(enabled=(mode != "sgd"))
+    rbd_cfg = RBDConfig(enabled=(mode != "sgd"), mode=rbd_mode,
+                        packed=packed)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
     transform = train_step_lib.make_transform(model, rbd_cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -94,9 +102,12 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None):
 
         layout = rules.layout_policy(params_shape, cfg)
         baxes = rules.batch_axes(mesh, layout)
+        k_workers = 1
+        for a in baxes:
+            k_workers *= mesh.shape[a]
         init_fn, inner, sub_opt = train_step_lib.make_train_step(
             model, tcfg, transform, axis_name=tuple(baxes),
-            return_optimizer=True)
+            k_workers=k_workers, return_optimizer=True)
         _print_update_path(sub_opt)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         repl_state = jax.tree_util.tree_map(lambda _: P(), state_shape)
@@ -199,7 +210,8 @@ def should_skip(cfg, shape: InputShape) -> str | None:
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            mode: str = "rbd", out_dir: str = "reports/dryrun",
+            mode: str = "rbd", rbd_mode: str = "shared_basis",
+            packed: str = "auto", out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -207,6 +219,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh_tag = "2x16x16" if multi_pod else "16x16"
     result: dict[str, Any] = {
         "arch": arch, "shape": shape_name, "mesh": mesh_tag, "mode": mode,
+        "rbd_mode": rbd_mode,
     }
     if skip:
         result["skipped"] = skip
@@ -218,7 +231,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     n_dev = mesh.size
 
     if shape.kind == "train":
-        fn, args_shape = build_train_inputs(model, shape, mode, mesh)
+        fn, args_shape = build_train_inputs(model, shape, mode, mesh,
+                                            rbd_mode=rbd_mode,
+                                            packed=packed)
     elif shape.kind == "prefill":
         fn, args_shape = build_prefill_inputs(model, shape)
     else:
@@ -274,19 +289,25 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     _save(result, out_dir, save)
     if save:
         os.makedirs(out_dir, exist_ok=True)
-        tag = f"{arch}_{shape_name}_{mesh_tag}_{mode}"
+        tag = _tag(result)
         with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as fh:
             fh.write(hlo)
     return result
+
+
+def _tag(result) -> str:
+    tag = (f"{result['arch']}_{result['shape']}_{result['mesh']}"
+           f"_{result['mode']}")
+    if result.get("rbd_mode", "shared_basis") != "shared_basis":
+        tag += "_" + result["rbd_mode"]
+    return tag
 
 
 def _save(result, out_dir, save):
     if not save:
         return
     os.makedirs(out_dir, exist_ok=True)
-    tag = (f"{result['arch']}_{result['shape']}_{result['mesh']}"
-           f"_{result['mode']}")
-    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+    with open(os.path.join(out_dir, _tag(result) + ".json"), "w") as f:
         json.dump(result, f, indent=1)
 
 
@@ -297,6 +318,13 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default="rbd",
                     choices=["rbd", "sgd", "sharedseed"])
+    ap.add_argument("--rbd-mode", default="shared_basis",
+                    choices=["shared_basis", "independent_bases"],
+                    help="sharedseed exchange: one packed-coordinate "
+                         "pmean, or one all-gather into the K*d joint "
+                         "subspace (Algorithm 1)")
+    ap.add_argument("--packed", default="auto",
+                    choices=["auto", "on", "off"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="reports/dryrun")
     args = ap.parse_args()
@@ -315,6 +343,7 @@ def main():
     for arch, shape, mp in combos:
         try:
             r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
+                        rbd_mode=args.rbd_mode, packed=args.packed,
                         out_dir=args.out)
             if "skipped" in r:
                 print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")

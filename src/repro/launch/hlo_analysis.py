@@ -203,6 +203,43 @@ def _collect_collectives(jaxpr, sites) -> None:
             _collect_collectives(j, sites)
 
 
+def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
+                               kinds=("pmean", "psum"),
+                               n_launches: int | None = 2) -> None:
+    """Assert the packed sharedseed communication contract on ``fn``'s
+    traced program, for BOTH exchange modes:
+
+    * exactly ``n_launches`` static ``pallas_call`` sites (``None``
+      skips the launch assertion -- e.g. on the jnp backend);
+    * exactly ONE non-scalar collective, whose primitive is in
+      ``kinds`` (``("pmean", "psum")`` for shared_basis,
+      ``("all_gather",)`` for independent_bases) and whose payload is
+      exactly ``payload`` elements -- the packed (d,) coordinate
+      buffer;
+    * nothing D-sized (``n_params`` elements) crosses the wire.
+
+    This is the acceptance gate for the paper's communication claim in
+    its strongest form: d (or K*d) floats per step, two launches, no
+    gradient all-reduce, for every optimizer x mode combination.
+    """
+    if n_launches is not None:
+        got = count_pallas_calls(fn, *args)
+        assert got == n_launches, (
+            f"expected {n_launches} pallas_call launch sites, got {got}")
+    sites = collective_sites(fn, *args)
+    big = [s for s in sites if s[1] > 1]
+    assert len(big) == 1, (
+        "expected exactly ONE non-scalar collective (the packed "
+        f"coordinate exchange), got {big or sites}")
+    kind, n = big[0]
+    assert kind in kinds, (f"exchange primitive {kind!r} not in {kinds}",
+                           sites)
+    assert n == payload, (
+        f"exchange payload {n} != packed coordinate buffer {payload}")
+    assert all(n != n_params for _, n in sites), (
+        f"a D-sized ({n_params}) collective exists", sites)
+
+
 def _sub_jaxprs(params) -> Iterator:
     try:
         from jax.core import ClosedJaxpr, Jaxpr

@@ -3,39 +3,18 @@
 Defined as FUNCTIONS (never module-level constants) so importing this
 module never touches jax device state -- the dry-run must set XLA_FLAGS
 before the first jax initialization.
+
+The jax-version bridges (make_mesh axis_types, shard_map kwarg renames)
+live in ``repro.core.compat``; this module is their single launch-layer
+import site and re-exports them under the historical names.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh as _make_mesh, shard_map_compat
 
-
-def _make_mesh(shape, axes):
-    """jax.make_mesh across jax versions: ``axis_types`` only exists on
-    newer jax; older releases treat every axis as Auto already."""
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        )
-    return jax.make_mesh(shape, axes)
-
-
-def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
-    """shard_map with only ``manual_axes`` manual, remaining mesh axes
-    automatic, with replication checking off -- bridging the renamed
-    kwargs (axis_names/check_vma vs auto/check_rep) across jax versions."""
-    try:
-        from jax import shard_map as sm  # jax >= 0.6
-
-        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  axis_names=set(manual_axes), check_vma=False)
-    except ImportError:
-        from jax.experimental.shard_map import shard_map as sm
-
-        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
-        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=False, auto=auto)
+__all__ = ["_make_mesh", "shard_map_compat", "make_production_mesh",
+           "make_host_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

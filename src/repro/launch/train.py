@@ -14,8 +14,11 @@ Distribution modes:
                      collective exists in the program.  With the packed
                      step enabled (--packed on, or --rbd-backend pallas)
                      the whole sketch+apply is two kernel launches and
-                     the exchange is ONE pmean of the packed coordinate
-                     buffer per step instead of one per compartment.
+                     the exchange is ONE collective on the packed
+                     coordinate buffer per step instead of one per
+                     compartment: a pmean (--rbd-mode shared_basis) or
+                     an all-gather into the K*d joint subspace
+                     (--rbd-mode independent_bases, Algorithm 1).
 * ``sgd``         -- baseline: no RBD, classic data-parallel all-reduce.
 
 Usage (examples; on the CPU container use --fake-devices N):
@@ -131,9 +134,13 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     # would silently replicate them, so declare it and let plan_execution
     # fall back with a reason code
     model_sharded = (mode == "pjit" or model_axis > 1)
+    # independent_bases needs the static worker count of its joint
+    # subspace -- the data-axis size of the shard_map step
+    k_workers = data if axis_name is not None else 1
     init_state, train_step, sub_opt = steplib.make_train_step(
         model, tcfg, transform, axis_name=axis_name,
-        model_sharded=model_sharded, return_optimizer=True)
+        model_sharded=model_sharded, k_workers=k_workers,
+        return_optimizer=True)
     eplan = sub_opt.plan_execution()
     print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
 

@@ -39,7 +39,22 @@ Execution strategy is a single static decision
                         coordinate-space.
 * ``full_space``     -- classic full-space optimizer state: RBD
                         disabled, weight decay (couples updates to
-                        full-space params), or independent_bases mode.
+                        full-space params), or the ineligible
+                        independent_bases configs (unpacked, 'exact'/
+                        'orthonormal' normalization, model-sharded).
+
+``independent_bases`` mode (paper Algorithm 1, the headline distributed
+result) now ALSO takes the ``fused_packed`` strategy: every worker
+projects onto its own basis (seed folded with the worker index),
+all-gathers the single packed (d_packed,) coordinate buffer, and the
+coordinate-space optimizer runs on the gathered (K, d_packed) JOINT
+coordinate buffer -- the K workers span a K*d-dimensional subspace, so
+momentum/adam state is (K, d_packed)-shaped instead of D-dimensional
+(Krummenacher et al. again).  The post-gather state update is
+deterministic, so worker states stay replicated, and the K-worker
+reconstruct-apply megakernel accumulates all K deltas into the streamed
+theta update: one step is still exactly two ``pallas_call``s and its
+entire exchange is ONE (d_packed,) all-gather, for any worker count.
 
 FPD equivalence (property-tested): with a FIXED basis, coordinate-space
 momentum and full-space momentum on the sketched gradient are
@@ -85,29 +100,57 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     rbd_enabled: bool = True, use_packed: bool = False,
                     normalization: str = "rsqrt_dim", backend: str = "jnp",
                     mode: str = "shared_basis", axis_name=None,
-                    model_sharded: bool = False) -> ExecutionPlan:
+                    model_sharded: bool = False,
+                    k_workers: int = 1) -> ExecutionPlan:
     """The one fuse/state-placement decision point (pure function of the
     config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
 
     ``model_sharded``: the caller shards parameters over a model axis --
     the packed-resident buffer is one array and would silently replicate
     them, so packing falls back to the per-leaf paths with a reason code.
+
+    ``k_workers``: static worker count of the independent_bases joint
+    subspace.  With ``axis_name`` set it must match the mesh axis size;
+    with ``axis_name=None`` and ``k_workers > 1`` the step runs the
+    sequential K-worker SIMULATION (grads arrive stacked (K, q_packed)),
+    bit-compatible with the shard_map exchange -- used by the fig5
+    benchmark and the equivalence tests.
     """
     del optimizer  # all optimizers have coordinate-space state now
     if not rbd_enabled:
         return ExecutionPlan(
             "full_space", False,
             "rbd disabled -> full-space optimizer on raw gradients")
-    if axis_name is not None and mode == "independent_bases":
-        return ExecutionPlan(
-            "full_space", False,
-            "independent_bases exchange -> K per-worker bases, "
-            "full-space optimizer state")
     if weight_decay:
         return ExecutionPlan(
             "full_space", False,
             "weight_decay couples updates to full-space params -> "
             "unfused full-space path")
+    if mode == "independent_bases" and (axis_name is not None
+                                        or k_workers > 1):
+        if not use_packed:
+            return ExecutionPlan(
+                "full_space", False,
+                "independent_bases per-leaf exchange -> K per-worker "
+                "bases, full-space optimizer state (use_packed joins "
+                "the K*d coordinate space)")
+        if normalization not in projector.STATIC_FACTOR_NORMALIZATIONS:
+            return ExecutionPlan(
+                "full_space", False,
+                f"independent_bases with {normalization} normalization "
+                "needs every worker's row norms -> per-leaf full-space "
+                "path")
+        if model_sharded:
+            return ExecutionPlan(
+                "full_space", False,
+                "independent_bases with model-axis param sharding -> "
+                "per-leaf full-space path (the packed-resident buffer "
+                "would replicate the params)")
+        return ExecutionPlan(
+            "fused_packed", True,
+            "packed independent_bases: project on own basis -> one "
+            "(d,) all-gather -> (K, d) joint-coordinate optimizer -> "
+            "K-worker reconstruct-apply; packed-resident TrainState")
     if normalization not in PACKABLE_NORMALIZATIONS:
         return ExecutionPlan(
             "coord_unfused", False,
@@ -169,6 +212,11 @@ class SubspaceOptimizer:
     mode: str = "shared_basis"        # shared_basis | independent_bases
     use_packed: bool = False
     axis_name: Any = None             # mesh axis (or tuple) for sharedseed
+    k_workers: int = 1                # independent_bases joint-subspace
+                                      # worker count (must equal the mesh
+                                      # axis size under shard_map; > 1
+                                      # with axis_name=None runs the
+                                      # sequential simulation)
     model_sharded: bool = False       # params sharded over a model axis
     log_update_norm: bool = True
     params_template: Any = None       # pytree of shapes/dtypes; required
@@ -176,10 +224,12 @@ class SubspaceOptimizer:
 
     @classmethod
     def from_config(cls, tcfg, transform=None, axis_name=None,
-                    model_sharded=False,
-                    params_template=None) -> "SubspaceOptimizer":
+                    model_sharded=False, params_template=None,
+                    k_workers: int = 1) -> "SubspaceOptimizer":
         """Build from a ``TrainConfig`` (the transform comes from
-        ``train.step.make_transform`` to avoid a circular import)."""
+        ``train.step.make_transform`` to avoid a circular import).
+        ``k_workers`` is a mesh property, not a TrainConfig field: the
+        launcher passes its data-axis size."""
         return cls(
             transform=transform,
             optimizer=tcfg.optimizer,
@@ -193,6 +243,7 @@ class SubspaceOptimizer:
             mode=tcfg.rbd.mode,
             use_packed=tcfg.rbd.use_packed,
             axis_name=axis_name,
+            k_workers=k_workers,
             model_sharded=model_sharded,
             log_update_norm=tcfg.log_update_norm,
             params_template=params_template,
@@ -212,7 +263,16 @@ class SubspaceOptimizer:
             mode=self.mode,
             axis_name=self.axis_name,
             model_sharded=self.model_sharded,
+            k_workers=self.k_workers,
         )
+
+    @property
+    def joint_subspace(self) -> bool:
+        """True when the K-worker joint subspace (independent_bases) is
+        active -- under shard_map (axis_name set) or in the sequential
+        K-worker simulation (k_workers > 1, axis_name None)."""
+        return self.mode == "independent_bases" and (
+            self.axis_name is not None or self.k_workers > 1)
 
     def _optimizer(self) -> opt.Transform:
         return opt.get_optimizer(
@@ -239,7 +299,12 @@ class SubspaceOptimizer:
     def _coord_template(self):
         plan = self.transform.plan
         if self.plan_execution().strategy == "fused_packed":
-            return jnp.zeros((plan.packed().d_packed,), jnp.float32)
+            d = plan.packed().d_packed
+            if self.joint_subspace:
+                # the joint subspace is K*d-dimensional: state lives on
+                # the gathered (K, d_packed) joint-coordinate buffer
+                return jnp.zeros((self.k_workers, d), jnp.float32)
+            return jnp.zeros((d,), jnp.float32)
         return [jnp.zeros((lp.n_stack, lp.dim), jnp.float32)
                 for lp in plan.leaves]
 
@@ -288,6 +353,9 @@ class SubspaceOptimizer:
         coordinate buffer is the entire per-step exchange -- for sgd,
         momentum AND adam (the state update is deterministic on the
         post-pmean coordinates, so worker states stay replicated)."""
+        if self.joint_subspace:
+            return self._packed_independent_step(params, grads, rbd_state,
+                                                 opt_state)
         t = self.transform
         plan = t.plan
         layout = plan.packed()
@@ -301,6 +369,55 @@ class SubspaceOptimizer:
         new_params = projector.reconstruct_apply_packed(
             coords, plan, seed, params, self.learning_rate,
             backend=t.backend, row_sq=sq, layout=layout, prepacked=True)
+        return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
+                self._delta_aux(params, new_params))
+
+    def _packed_independent_step(self, params, grads, rbd_state,
+                                 opt_state):
+        """Packed independent_bases (paper Algorithm 1): still exactly
+        two launches.  Launch 1 projects the local prepacked gradient
+        onto THIS worker's basis; ONE all-gather of the (d_packed,)
+        coordinate buffer is the entire exchange; the coordinate-space
+        optimizer runs on the gathered (K, d_packed) joint-coordinate
+        buffer (deterministic post-gather -> states stay replicated);
+        launch 2 regenerates all K bases in-kernel and accumulates every
+        worker's delta into the streamed theta update -- the joint
+        K*d-dimensional update never exists in HBM.
+
+        With ``axis_name=None`` (sequential K-worker simulation,
+        ``k_workers > 1``) ``grads`` is the stacked (K, q_packed) buffer
+        of per-worker gradients and the "gather" is a vmapped local
+        projection -- bit-compatible with the shard_map exchange.
+        """
+        t = self.transform
+        plan = t.plan
+        layout = plan.packed()
+        seed = t.step_seed(rbd_state.step)
+        if self.axis_name is not None:
+            from repro.core import distributed
+
+            gathered = distributed.independent_bases_coords(
+                t, grads, rbd_state, self.axis_name, layout=layout)
+            if gathered.shape[0] != self.k_workers:
+                raise ValueError(
+                    f"k_workers={self.k_workers} does not match the "
+                    f"'{self.axis_name}' mesh axis size "
+                    f"{gathered.shape[0]}")
+        else:
+            # lax.map, not vmap: the scan body is the UNBATCHED per-worker
+            # projection -- the same program each shard_map worker runs --
+            # so the simulation stays bit-exact against the exchange
+            # (vmap's batched contraction accumulates differently)
+            wseeds = projector.worker_base_seeds(seed, self.k_workers)
+            gathered = jax.lax.map(
+                lambda sg: projector.project_packed(
+                    sg[1], plan, sg[0], backend=t.backend, layout=layout,
+                    prepacked=True), (wseeds, grads))
+        gathered, opt_state = self._optimizer().update(gathered, opt_state)
+        new_params = projector.reconstruct_apply_packed_workers(
+            gathered, plan, seed, params,
+            self.learning_rate / self.k_workers, backend=t.backend,
+            layout=layout, prepacked=True)
         return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
                 self._delta_aux(params, new_params))
 
@@ -338,7 +455,12 @@ class SubspaceOptimizer:
                 grads = jax.lax.pmean(grads, self.axis_name)
             updates, new_rbd = grads, rbd_state
         elif self.axis_name is None:
-            updates, new_rbd = t.update(grads, rbd_state)
+            # the full RBD sketch, inlined (t.update is a deprecation
+            # shim now and would warn on this legitimate internal path)
+            seed = t.step_seed(rbd_state.step)
+            updates = projector.rbd_gradient(grads, t.plan, seed,
+                                             backend=t.backend)
+            new_rbd = RBDState(step=rbd_state.step + 1)
         else:
             from repro.core import distributed
 

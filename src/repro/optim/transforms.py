@@ -143,8 +143,14 @@ def can_fuse_apply(optimizer: str, weight_decay: float, rbd_cfg) -> bool:
     """Deprecated shim: the fuse decision (with a structured reason code)
     now lives in ``repro.optim.subspace.plan_from_flags`` /
     ``SubspaceOptimizer.plan_execution``."""
+    import warnings
+
     from repro.optim import subspace
 
+    warnings.warn(
+        "can_fuse_apply is deprecated: use repro.optim.subspace."
+        "plan_from_flags / SubspaceOptimizer.plan_execution (reason-"
+        "coded)", DeprecationWarning, stacklevel=2)
     return subspace.plan_from_flags(
         optimizer=optimizer, weight_decay=weight_decay,
         rbd_enabled=rbd_cfg.enabled, use_packed=rbd_cfg.use_packed,
@@ -157,6 +163,12 @@ def fused_rbd_apply(transform, params, grads, rbd_state, lr,
     """Deprecated shim (SGD-only fused apply); prefer
     ``repro.optim.subspace.SubspaceOptimizer.step``.  Returns
     (new_params, new_rbd_state).  See ``core.rbd.rbd_step``."""
+    import warnings
+
+    warnings.warn(
+        "fused_rbd_apply is deprecated: construct a repro.optim."
+        "subspace.SubspaceOptimizer and call .step()",
+        DeprecationWarning, stacklevel=2)
     return transform.fused_step(params, grads, rbd_state, lr,
                                 axis_name=axis_name, packed=packed)
 

@@ -75,17 +75,21 @@ def make_subspace_optimizer(
         model: Model, tcfg: TrainConfig,
         transform: Optional[rbd_lib.RandomBasesTransform] = None,
         axis_name=None, *,
-        model_sharded: bool = False) -> subspace.SubspaceOptimizer:
+        model_sharded: bool = False,
+        k_workers: int = 1) -> subspace.SubspaceOptimizer:
     """The one update-path object for a (model, TrainConfig) pair.
 
     ``model_sharded``: the caller shards params over a model axis --
     rules out the packed-resident strategy (see ``plan_from_flags``).
+    ``k_workers``: size of the shard_map data axis -- the static worker
+    count of the independent_bases joint subspace (ignored by
+    shared_basis mode).
     """
     if transform is None and tcfg.rbd.enabled:
         transform = make_transform(model, tcfg.rbd)
     sub_opt = subspace.SubspaceOptimizer.from_config(
         tcfg, transform=transform, axis_name=axis_name,
-        model_sharded=model_sharded)
+        model_sharded=model_sharded, k_workers=k_workers)
     if sub_opt.plan_execution().packed_resident:
         # only the packed-resident strategy materializes params from the
         # packed buffer, so only it pays the model.init shape trace
@@ -108,6 +112,7 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     transform: Optional[rbd_lib.RandomBasesTransform] = None,
                     axis_name: Optional[str] = None, *,
                     model_sharded: bool = False,
+                    k_workers: int = 1,
                     return_optimizer: bool = False):
     """Returns (init_state_fn, train_step_fn) -- plus the
     :class:`SubspaceOptimizer` when ``return_optimizer`` is set (the
@@ -119,10 +124,13 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     of relying on an implicit D-dimensional gradient all-reduce.
     ``model_sharded``: declare that params are sharded over a model axis
     (disables the packed-resident strategy with a reason code).
+    ``k_workers``: the shard_map data-axis size -- required by
+    independent_bases mode (static joint-subspace worker count).
     """
     loss_fn = make_loss_fn(model, model.cfg.router_aux_coef)
     sub_opt = make_subspace_optimizer(model, tcfg, transform, axis_name,
-                                      model_sharded=model_sharded)
+                                      model_sharded=model_sharded,
+                                      k_workers=k_workers)
 
     def init_state(key) -> TrainState:
         params = model.init(key)

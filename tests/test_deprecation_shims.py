@@ -1,0 +1,76 @@
+"""The PR 2 compatibility shims must WARN (DeprecationWarning) so legacy
+callers migrate to SubspaceOptimizer -- and the new path must stay
+silent (no shim is reached internally)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RBDConfig
+from repro.core import make_plan, projector
+from repro.core.rbd import RandomBasesTransform
+from repro.optim import transforms as opt
+from repro.optim.subspace import SubspaceOptimizer
+
+
+def _fixture():
+    params = {"w": jnp.ones((16, 8)), "b": jnp.ones((8,))}
+    plan = make_plan(params, 32)
+    t = RandomBasesTransform(plan, base_seed=1)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    return params, plan, t, grads
+
+
+def test_update_shim_warns():
+    params, _, t, grads = _fixture()
+    state = t.init(params)
+    with pytest.warns(DeprecationWarning, match="SubspaceOptimizer"):
+        t.update(grads, state)
+
+
+def test_fused_step_shim_warns():
+    params, _, t, grads = _fixture()
+    state = t.init(params)
+    with pytest.warns(DeprecationWarning, match="SubspaceOptimizer"):
+        t.fused_step(params, grads, state, 0.1)
+
+
+def test_can_fuse_apply_shim_warns():
+    with pytest.warns(DeprecationWarning, match="plan_from_flags"):
+        opt.can_fuse_apply("sgd", 0.0, RBDConfig())
+
+
+def test_fused_rbd_apply_shim_warns():
+    params, _, t, grads = _fixture()
+    state = t.init(params)
+    with pytest.warns(DeprecationWarning):
+        opt.fused_rbd_apply(t, params, grads, state, 0.1)
+
+
+@pytest.mark.parametrize("strategy_kw", [
+    dict(use_packed=True),                      # fused_packed
+    dict(),                                     # coord_unfused (jnp)
+    dict(weight_decay=0.1),                     # full_space
+    dict(use_packed=True, mode="independent_bases", k_workers=2),
+])
+def test_subspace_optimizer_path_does_not_warn(strategy_kw):
+    """Every SubspaceOptimizer strategy -- including the new packed
+    independent_bases joint-subspace path -- runs without touching a
+    deprecated shim."""
+    params, plan, t, grads = _fixture()
+    sub = SubspaceOptimizer(transform=t, learning_rate=0.1,
+                            params_template=params, **strategy_kw)
+    stored = sub.prepare_params(params)
+    if sub.joint_subspace:
+        layout = plan.packed()
+        g = jnp.stack([projector.pack_tree(grads, plan, layout)] * 2)
+    elif sub.plan_execution().packed_resident:
+        g = projector.pack_tree(grads, plan, plan.packed())
+    else:
+        g = grads
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sub.step(stored, g, sub.init_rbd_state(params),
+                 sub.init_opt_state(params))

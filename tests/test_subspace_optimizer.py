@@ -92,6 +92,18 @@ def test_plan_execution_reason_codes():
         (dict(use_packed=True), "fused_packed", "two-launch"),
         (dict(backend="pallas"), "fused_per_leaf", "per-leaf"),
         (dict(), "coord_unfused", "jnp backend"),
+        # packed independent_bases: the K*d joint subspace fuses
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True), "fused_packed", "independent_bases"),
+        (dict(mode="independent_bases", k_workers=4, use_packed=True),
+         "fused_packed", "joint-coordinate"),
+        # ...except where a static normalization factor does not exist
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True, normalization="exact"), "full_space",
+         "row norms"),
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True, model_sharded=True), "full_space",
+         "model-axis"),
     ]
     for flags, strategy, marker in cases:
         ep = plan_from_flags(**flags)
@@ -99,6 +111,9 @@ def test_plan_execution_reason_codes():
         assert marker in ep.reason, (flags, ep.reason)
     assert plan_from_flags(use_packed=True).packed_resident
     assert not plan_from_flags().packed_resident
+    # acceptance: independent_bases + packing is no longer locked out
+    assert plan_from_flags(mode="independent_bases",
+                           use_packed=True).strategy != "full_space"
 
 
 def test_can_fuse_apply_shim_covers_stateful_optimizers():
@@ -250,11 +265,118 @@ def _check_fpd_momentum_equivalence(beta, nesterov):
 
 
 # ---------------------------------------------------------------------------
+# joint subspace: kernel-vs-oracle bit-exactness and the momentum identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum"])
+def test_joint_subspace_kernel_bitexact_vs_oracle(optimizer):
+    """Acceptance: the interpret-mode K-worker megakernels (own-basis
+    projection + worker-axis reconstruct-apply) are BIT-exact against
+    the packed jnp worker-scan oracle, through full simulation steps --
+    the worker tile tables (worker-major, directions innermost per theta
+    block) must replicate the oracle's accumulation order exactly."""
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed()
+    k = 3
+    grad_seq = [[_grads(params, key=5 * i + w) for w in range(k)]
+                for i in range(2)]
+    outs = {}
+    for backend in ("pallas", "jnp"):
+        t = RandomBasesTransform(plan, base_seed=7, redraw=True,
+                                 backend=backend)
+        sub = _sub(t, optimizer, use_packed=True,
+                   mode="independent_bases", k_workers=k,
+                   params_template=params)
+        assert sub.plan_execution().strategy == "fused_packed"
+        stored = sub.prepare_params(params)
+        st_r = sub.init_rbd_state(params)
+        st_o = sub.init_opt_state(params)
+        for gs in grad_seq:
+            gp = jnp.stack([projector.pack_tree(g, plan, layout)
+                            for g in gs])
+            stored, st_r, st_o, _ = sub.step(stored, gp, st_r, st_o)
+        outs[backend] = stored
+    np.testing.assert_array_equal(np.asarray(outs["pallas"]),
+                                  np.asarray(outs["jnp"]))
+
+
+# ---------------------------------------------------------------------------
+# joint subspace: gathered-coordinate momentum == K-reconstruction
+# full-space momentum under a fixed basis (paper 4.5 x Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("beta,nesterov",
+                         [(0.9, False), (0.9, True), (0.5, False)])
+def test_joint_coordinate_momentum_equals_full_space_cases(beta, nesterov):
+    """Fixed-sample version of the property below (runs even without
+    hypothesis -- this identity is what makes (K, d)-shaped state a
+    strict generalization of D-dimensional state in independent_bases
+    mode)."""
+    _check_joint_momentum_equivalence(beta, nesterov)
+
+
+@given(beta=st.floats(0.0, 0.95), nesterov=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_joint_coordinate_momentum_equals_full_space(beta, nesterov):
+    """With FIXED per-worker bases (FPD seeds), momentum on the gathered
+    (K, d) joint coordinates equals full-space momentum on the mean of
+    the K reconstructions (linearity of reconstruction), step after
+    step."""
+    _check_joint_momentum_equivalence(beta, nesterov)
+
+
+def _check_joint_momentum_equivalence(beta, nesterov, k=3, n_steps=3):
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed()
+    t = RandomBasesTransform(plan, base_seed=5, redraw=False,
+                             backend="jnp")
+    lr = 0.4
+    sub = _sub(t, "momentum", lr=lr, use_packed=True, momentum_beta=beta,
+               nesterov=nesterov, mode="independent_bases", k_workers=k,
+               params_template=params)
+    assert sub.plan_execution().strategy == "fused_packed"
+    grad_seq = [[_grads(params, key=7 * i + w) for w in range(k)]
+                for i in range(n_steps)]
+
+    stored = sub.prepare_params(params)
+    st_r, st_o = sub.init_rbd_state(params), sub.init_opt_state(params)
+    for gs in grad_seq:
+        gp = jnp.stack([projector.pack_tree(g, plan, layout) for g in gs])
+        stored, st_r, st_o, _ = sub.step(stored, gp, st_r, st_o)
+    coord_p = sub.materialize_params(stored)
+
+    # full-space reference: momentum over the mean of the K per-worker
+    # sketches, each reconstructed from its own fixed basis
+    base = t.step_seed(jnp.uint32(0))
+    full_opt = opt.momentum(beta, nesterov)
+    m = full_opt.init(params)
+    p = params
+    for gs in grad_seq:
+        sketch = jax.tree_util.tree_map(jnp.zeros_like, params)
+        for w, g in enumerate(gs):
+            seed_w = rng.fold_seed(base, jnp.uint32(w + 1))
+            sk = projector.rbd_gradient(g, plan, seed_w, backend="jnp")
+            sketch = jax.tree_util.tree_map(
+                lambda a, b: a + b / k, sketch, sk)
+        upd, m = full_opt.update(sketch, m)
+        p = opt.apply_updates(p, upd, lr)
+    for a, b in zip(jax.tree_util.tree_leaves(coord_p),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
 # acceptance invariants: 2 launches and one (d,) pmean for ALL optimizers
 # ---------------------------------------------------------------------------
 
 
-def _tiny_lm_setup(optimizer, backend="pallas"):
+def _tiny_lm_setup(optimizer, backend="pallas", rbd_mode="shared_basis",
+                   batch_size=2):
     from repro.configs import get_config
     from repro.configs.base import TrainConfig
     from repro.data import synthetic
@@ -264,9 +386,10 @@ def _tiny_lm_setup(optimizer, backend="pallas"):
     model = get_model(cfg)
     tcfg = TrainConfig(
         model=cfg, optimizer=optimizer,
-        rbd=RBDConfig(total_dim=256, backend=backend, packed="on"),
-        learning_rate=0.5, steps=1, batch_size=2, seq_len=16)
-    batch = next(synthetic.lm_batches(0, 2, 16, cfg.vocab))
+        rbd=RBDConfig(total_dim=256, backend=backend, packed="on",
+                      mode=rbd_mode),
+        learning_rate=0.5, steps=1, batch_size=batch_size, seq_len=16)
+    batch = next(synthetic.lm_batches(0, batch_size, 16, cfg.vocab))
     return model, tcfg, batch
 
 
@@ -284,26 +407,25 @@ def test_full_train_step_two_launches_stateful(optimizer):
     assert count_pallas_calls(train_step, state, batch) == 2
 
 
-@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
-def test_sharedseed_one_packed_pmean(optimizer):
-    """The communication contract for all three optimizers: one shard_map
-    train step contains exactly ONE non-scalar collective -- the pmean of
-    the packed (d_packed,) coordinate buffer -- and in particular no
-    D-sized gradient all-reduce."""
-    from repro.launch.hlo_analysis import collective_sites
+def _sharded_train_step(optimizer, rbd_mode, backend):
+    """(fn, state, batch, sub): the shard_map-wrapped train step over a
+    mesh spanning every available device (1 in the plain tier-1 run; 8
+    under the CI multi-device step, exercising real mesh axes)."""
     from repro.launch.mesh import _make_mesh, shard_map_compat
     from repro.train import step as steplib
     from jax.sharding import PartitionSpec as P
 
-    model, tcfg, batch = _tiny_lm_setup(optimizer, backend="jnp")
+    n_dev = jax.device_count()
+    model, tcfg, batch = _tiny_lm_setup(optimizer, backend=backend,
+                                        rbd_mode=rbd_mode,
+                                        batch_size=2 * n_dev)
     init_state, train_step, sub = steplib.make_train_step(
-        model, tcfg, axis_name="data", return_optimizer=True)
+        model, tcfg, axis_name="data", k_workers=n_dev,
+        return_optimizer=True)
     assert sub.plan_execution().strategy == "fused_packed"
-    d_packed = sub.transform.plan.packed().d_packed
-    n_params = sub.transform.plan.total_params
     state = init_state(jax.random.PRNGKey(0))
 
-    mesh = _make_mesh((1,), ("data",))
+    mesh = _make_mesh((n_dev,), ("data",))
     repl = jax.tree_util.tree_map(lambda _: P(), state)
     fn = shard_map_compat(
         train_step, mesh=mesh,
@@ -311,12 +433,42 @@ def test_sharedseed_one_packed_pmean(optimizer):
         out_specs=(repl, {"ce": P(), "aux": P(), "loss": P(),
                           "update_norm": P()}),
         manual_axes=("data",))
-    sites = collective_sites(fn, state, batch)
-    big = [s for s in sites if s[1] > 1]
-    assert big, ("no non-scalar collective found -- the coordinate "
-                 "pmean is missing", sites)
-    assert big == [(big[0][0], d_packed)], (sites, d_packed)
-    assert all(n != n_params for _, n in sites), sites
+    return fn, state, batch, sub
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_sharedseed_one_packed_pmean(optimizer):
+    """The communication contract for all three optimizers: one shard_map
+    train step contains exactly ONE non-scalar collective -- the pmean of
+    the packed (d_packed,) coordinate buffer -- and in particular no
+    D-sized gradient all-reduce."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(optimizer,
+                                                "shared_basis", "jnp")
+    assert_coordinate_exchange(
+        fn, state, batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("pmean", "psum"), n_launches=None)
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_independent_bases_packed_contract(optimizer):
+    """Acceptance gate for the K-worker joint subspace: the packed
+    independent_bases train step compiles to exactly TWO pallas_calls
+    (own-basis projection + K-worker reconstruct-apply) and exactly ONE
+    coordinate-buffer all-gather -- no D-sized collective -- for sgd,
+    momentum and adam alike."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(
+        optimizer, "independent_bases", "pallas")
+    assert_coordinate_exchange(
+        fn, state, batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("all_gather",), n_launches=2)
 
 
 # ---------------------------------------------------------------------------
