@@ -261,6 +261,65 @@ def fused_step_benchmark(quick: bool = True):
     return rows
 
 
+def check_regression(rows, baseline_path, hbm_tol=0.05):
+    """The CI bench-regression gate: compare freshly measured rows
+    against the committed baseline JSON.  Returns a list of violation
+    strings (empty = gate passes).  Checked invariants:
+
+    * no packed row's ``launches_per_step`` exceeds 2 (the two-launch
+      contract, per optimizer and for any worker count);
+    * no row's MODELED ``hbm_bytes_per_step`` regresses more than
+      ``hbm_tol`` vs the baseline (the byte model is deterministic, so
+      any growth is a real code change, not noise);
+    * every packed row present in the baseline still exists (a deleted
+      row would silently retire its invariant).
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["stage"]: r for r in base["rows"]}
+    new_rows = {r["stage"]: r for r in rows}
+    violations = []
+    # launch contract on EVERY fresh packed row -- including rows the
+    # baseline has never seen, so a newly added packed stage cannot ship
+    # with >2 launches, and a row that silently dropped the field fails
+    # rather than defaulting past the gate
+    for stage, nr in new_rows.items():
+        if not stage.startswith("packed_"):
+            continue
+        launches = nr.get("launches_per_step")
+        if launches is None:
+            violations.append(
+                f"{stage}: packed row lost its launches_per_step field")
+        elif launches > 2:
+            violations.append(
+                f"{stage}: launches_per_step {launches} > 2 "
+                "(two-launch contract)")
+        if nr.get("hbm_bytes_per_step") is None:
+            violations.append(
+                f"{stage}: packed row lost its hbm_bytes_per_step field")
+    for stage, br in base_rows.items():
+        packed = stage.startswith("packed_")
+        nr = new_rows.get(stage)
+        if nr is None:
+            if packed:
+                violations.append(
+                    f"{stage}: packed row disappeared from the benchmark")
+            continue
+        b_hbm, n_hbm = br.get("hbm_bytes_per_step"), \
+            nr.get("hbm_bytes_per_step")
+        if b_hbm is None:
+            continue
+        if n_hbm is None:
+            if not packed:  # packed rows already flagged above
+                violations.append(
+                    f"{stage}: row lost its hbm_bytes_per_step field")
+        elif n_hbm > b_hbm * (1.0 + hbm_tol):
+            violations.append(
+                f"{stage}: modeled HBM bytes/step {n_hbm:.0f} regressed "
+                f">{hbm_tol:.0%} vs baseline {b_hbm:.0f}")
+    return violations
+
+
 def _write_json(rows, path=None):
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..",
@@ -280,6 +339,7 @@ def _write_json(rows, path=None):
 
 if __name__ == "__main__":
     import argparse
+    import sys
 
     ap = argparse.ArgumentParser()
     grp = ap.add_mutually_exclusive_group()
@@ -288,5 +348,32 @@ if __name__ == "__main__":
                           "runs, independent of the default")
     grp.add_argument("--full", action="store_true",
                      help="more timing reps for stable numbers")
+    ap.add_argument("--check", metavar="BASELINE_JSON", default=None,
+                    help="bench-regression gate: after running, compare "
+                         "the fresh rows against this committed baseline "
+                         "and exit non-zero if launches/step exceeds 2 "
+                         "on a packed row, modeled HBM bytes/step "
+                         "regresses >5%%, or a packed row disappeared")
     args = ap.parse_args()
-    run(quick=args.smoke or not args.full)
+    if args.check:
+        # snapshot the baseline BEFORE run() refreshes the JSON in place
+        import shutil
+        import tempfile
+
+        fd, baseline_copy = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            shutil.copyfile(args.check, baseline_copy)
+            rows = run(quick=args.smoke or not args.full)
+            violations = check_regression(rows, baseline_copy)
+        finally:
+            os.unlink(baseline_copy)
+        if violations:
+            print("BENCH REGRESSION GATE FAILED:")
+            for v in violations:
+                print("  -", v)
+            sys.exit(1)
+        print("bench-regression gate passed "
+              f"(baseline {args.check}, {len(rows)} rows)")
+    else:
+        run(quick=args.smoke or not args.full)

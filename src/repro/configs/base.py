@@ -147,6 +147,14 @@ class RBDConfig:
                                     # backend (two launches/step); the
                                     # CPU jnp path keeps the wider
                                     # per-leaf chunks unless forced "on".
+    prng_impl: str = "threefry"     # threefry | hw | hw_emulated --
+                                    # requested core.rng.PrngSpec impl.
+                                    # "hw" uses the TPU hardware PRNG
+                                    # inside the packed megakernels (zero
+                                    # Threefry ALU cost, tile-coordinate
+                                    # keyed) and degrades off-TPU to the
+                                    # emulated counter stub with a
+                                    # reason code (plan_execution).
 
     @property
     def use_packed(self) -> bool:

@@ -105,6 +105,7 @@ def independent_bases_coords(
     *,
     layout=None,
     prepacked: bool = True,
+    prng="threefry",
 ):
     """The PACKED independent-bases exchange primitive (Algorithm 1 on
     the packed representation): project the worker's prepacked gradient
@@ -124,7 +125,7 @@ def independent_bases_coords(
     my_seed = worker_seed(transform, state, axis_name)
     coords = projector.project_packed(
         local_grads, plan, my_seed, backend=transform.backend,
-        layout=layout, prepacked=prepacked)
+        layout=layout, prepacked=prepacked, prng=prng)
     return jax.lax.all_gather(coords, axis_name=axis_name)
 
 

@@ -548,10 +548,25 @@ def _packed_norm_factor(plan: Plan, layout, sq):
         "packed path; use the per-leaf project/reconstruct API")
 
 
-def _project_packed_jnp(seg_seeds, g_packed, layout, distribution: str):
+def _check_oracle_prng(prng) -> rng.PrngSpec:
+    spec = rng.get_prng_spec(prng)
+    if spec.in_kernel_only:
+        raise ValueError(
+            "prng='hw' only lowers inside real TPU Pallas kernels; the "
+            "jnp oracle runs 'threefry' or 'hw_emulated' (the stub with "
+            "the identical tile-seeding discipline)")
+    return spec
+
+
+def _project_packed_jnp(seg_seeds, g_packed, layout, distribution: str,
+                        prng="threefry"):
     """jnp oracle for the projection megakernel: one lax.scan over the
     SAME linearized tile table, same tile shapes, same accumulation
-    order -- interpret-mode kernel output is bit-exact against this."""
+    order -- interpret-mode kernel output is bit-exact against this,
+    for any non-hw ``core.rng.PrngSpec`` impl (the tables carry each
+    tile's (seed, row0, col0) identity, which is all a tile-keyed
+    backend needs)."""
+    spec = _check_oracle_prng(prng)
     pb, db = layout.pos_block, layout.dir_block
     g = g_packed.astype(jnp.float32).reshape(1, layout.q_packed)
     xs = (
@@ -567,7 +582,7 @@ def _project_packed_jnp(seg_seeds, g_packed, layout, distribution: str):
     def body(carry, x):
         u, sq = carry
         seed, row0, col0, q, init, gb, ub = x
-        block = rng.generate_block(seed, row0, col0, (db, pb), distribution)
+        block = spec.generate_tile(seed, row0, col0, (db, pb), distribution)
         cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
             + col0.astype(jnp.int32)
         block = jnp.where(cols < q, block, 0.0)
@@ -592,9 +607,11 @@ def _project_packed_jnp(seg_seeds, g_packed, layout, distribution: str):
 
 
 def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
-                                  layout, distribution: str):
+                                  layout, distribution: str,
+                                  prng="threefry"):
     """jnp oracle for the fused reconstruct-apply megakernel (same tile
     table, direction-innermost order, carry = streamed theta)."""
+    spec = _check_oracle_prng(prng)
     pb, db = layout.pos_block, layout.dir_block
     s = scale_packed.astype(jnp.float32).reshape(1, layout.d_packed)
     xs = (
@@ -608,7 +625,7 @@ def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
 
     def body(theta, x):
         seed, row0, col0, q, gb, sb = x
-        block = rng.generate_block(seed, row0, col0, (db, pb), distribution)
+        block = spec.generate_tile(seed, row0, col0, (db, pb), distribution)
         # mask positions past the segment's true size: a packed-RESIDENT
         # theta keeps its padding slots exactly zero in-stream
         cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
@@ -631,7 +648,8 @@ def _reconstruct_apply_packed_jnp(seg_seeds, scale_packed, theta_packed,
 def _reconstruct_apply_packed_workers_jnp(wseg_seeds, scale_gathered,
                                           theta_packed, layout,
                                           k_workers: int,
-                                          distribution: str):
+                                          distribution: str,
+                                          prng="threefry"):
     """jnp oracle for the K-worker joint reconstruct-apply megakernel:
     a lax.scan over workers OUTSIDE the single-worker tile scan.  Per
     packed theta block the accumulation order is worker-major with
@@ -645,7 +663,7 @@ def _reconstruct_apply_packed_workers_jnp(wseg_seeds, scale_gathered,
     def body(theta, xs):
         seeds_w, scale_w = xs
         return (_reconstruct_apply_packed_jnp(
-            seeds_w, scale_w, theta, layout, distribution), None)
+            seeds_w, scale_w, theta, layout, distribution, prng), None)
 
     theta, _ = jax.lax.scan(
         body, theta_packed.astype(jnp.float32), (seeds, sc))
@@ -654,7 +672,7 @@ def _reconstruct_apply_packed_workers_jnp(wseg_seeds, scale_gathered,
 
 def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
                    layout=None, return_norms: bool = False,
-                   prepacked: bool = False):
+                   prepacked: bool = False, prng="threefry"):
     """Packed-path projection: normalized coordinates for ALL compartments
     in one (d_packed,) buffer -- ONE kernel launch on the pallas backend,
     one scan on the jnp backend.
@@ -665,13 +683,15 @@ def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
 
     ``prepacked=True`` takes ``grads`` as an already-packed (q_packed,)
     buffer (packed-resident TrainState) and skips the staging copy.
+    ``prng`` selects the generation backend (``core.rng.PrngSpec`` impl
+    name or instance; "hw" needs backend="pallas" on real TPU).
     """
     layout = layout if layout is not None else plan.packed()
     seeds = segment_seeds(plan, seed)
     g_packed = (grads.astype(jnp.float32) if prepacked
                 else pack_tree(grads, plan, layout))
     u, sq = _get_backend(backend).project_packed(
-        seeds, g_packed, layout, plan.distribution)
+        seeds, g_packed, layout, plan.distribution, prng)
     coords = u * _packed_norm_factor(plan, layout, sq)
     if return_norms:
         return coords, sq
@@ -680,7 +700,8 @@ def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
 
 def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
                              eta, *, backend: str = "jnp", row_sq=None,
-                             layout=None, prepacked: bool = False):
+                             layout=None, prepacked: bool = False,
+                             prng="threefry"):
     """Fused packed update: theta' = theta - eta * (c_hat @ P), applied to
     the whole parameter pytree in ONE kernel launch.  The reconstructed
     delta never exists in HBM.  ``row_sq`` (from
@@ -701,7 +722,7 @@ def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
     if plan.normalization == "exact" and row_sq is None:
         _, row_sq = be.project_packed(
             seeds, jnp.zeros((layout.q_packed,), jnp.float32), layout,
-            plan.distribution)
+            plan.distribution, prng)
     # factor is zero on padding slots, so phantom padded basis rows never
     # contribute to the applied update
     factor = _packed_norm_factor(plan, layout, row_sq)
@@ -709,7 +730,7 @@ def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
     theta = (params.astype(jnp.float32) if prepacked
              else pack_tree(params, plan, layout))
     out = be.reconstruct_apply_packed(
-        seeds, scale, theta, layout, plan.distribution)
+        seeds, scale, theta, layout, plan.distribution, prng)
     if prepacked:
         return out
     return unpack_tree(out, plan, layout, params)
@@ -735,7 +756,8 @@ def worker_base_seeds(seed, k_workers: int):
 def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
                                      params: Any, eta, *,
                                      backend: str = "jnp", layout=None,
-                                     prepacked: bool = False):
+                                     prepacked: bool = False,
+                                     prng="threefry"):
     """K-worker joint fused update (packed ``independent_bases`` mode):
 
         theta' = theta - eta * sum_k (c_hat_k @ P_k)
@@ -769,7 +791,7 @@ def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
              else pack_tree(params, plan, layout))
     out = _get_backend(backend).reconstruct_apply_packed_workers(
         seg_seed_table, scale, theta, layout, k_workers,
-        plan.distribution)
+        plan.distribution, prng)
     if prepacked:
         return out
     return unpack_tree(out, plan, layout, params)

@@ -68,6 +68,10 @@ class RandomBasesTransform:
     base_seed: int = 0
     redraw: bool = True
     backend: str = "jnp"
+    prng: str = "threefry"    # REQUESTED PrngSpec impl; the effective
+                              # impl is resolved per execution strategy
+                              # (core.rng.resolve_prng_impl, surfaced by
+                              # SubspaceOptimizer.plan_execution)
 
     def init(self, params: Any) -> RBDState:
         del params
@@ -77,6 +81,18 @@ class RandomBasesTransform:
         if self.redraw:
             return rng.fold_seed(self.base_seed, step)
         return rng.fold_seed(self.base_seed, jnp.zeros((), jnp.uint32))
+
+    def _effective_prng(self, strategy: str) -> str:
+        """Resolve the requested ``prng`` impl exactly like
+        ``SubspaceOptimizer.plan_execution`` does, so the deprecated
+        entry points below honor the field instead of silently running
+        threefry (per-leaf strategies still resolve TO threefry -- the
+        position-keyed paths are the only ones they have)."""
+        impl, _ = rng.resolve_prng_impl(
+            self.prng, strategy=strategy, backend=self.backend,
+            hw_available=rng.hw_prng_available_for(self.prng,
+                                                   self.backend))
+        return impl
 
     def update(self, grads: Any, state: RBDState, params: Any = None):
         _warn_deprecated("RandomBasesTransform.update")
@@ -116,7 +132,8 @@ class RandomBasesTransform:
         seed = self.step_seed(state.step)
         if packed:
             params = rbd_step(params, grads, self.plan, seed, lr,
-                              backend=self.backend, axis_name=axis_name)
+                              backend=self.backend, axis_name=axis_name,
+                              prng=self._effective_prng("fused_packed"))
         else:
             coords, norms = projector.project(
                 grads, self.plan, seed, backend=self.backend,
@@ -131,7 +148,8 @@ class RandomBasesTransform:
 
 
 def rbd_step(params: Any, grads: Any, plan: Plan, seed, lr, *,
-             backend: str = "jnp", axis_name=None, layout=None) -> Any:
+             backend: str = "jnp", axis_name=None, layout=None,
+             prng="threefry") -> Any:
     """One full RBD optimizer step as two kernel launches.
 
         theta' = theta - lr * P_hat^T P_hat g
@@ -149,12 +167,12 @@ def rbd_step(params: Any, grads: Any, plan: Plan, seed, lr, *,
     layout = layout if layout is not None else plan.packed()
     coords, sq = projector.project_packed(
         grads, plan, seed, backend=backend, layout=layout,
-        return_norms=True)
+        return_norms=True, prng=prng)
     if axis_name is not None:
         coords = jax.lax.pmean(coords, axis_name=axis_name)
     return projector.reconstruct_apply_packed(
         coords, plan, seed, params, lr, backend=backend, row_sq=sq,
-        layout=layout)
+        layout=layout, prng=prng)
 
 
 def rbd(plan: Plan, base_seed: int = 0, backend: str = "jnp"):

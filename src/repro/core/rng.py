@@ -13,13 +13,17 @@ plain uint32 jnp ops, so that the *identical* code runs
     shard can generate exactly its slice with no communication).
 
 ``pltpu.prng_random_bits`` (true hardware PRNG) has no CPU interpret-mode
-lowering, so it is exposed behind a flag for real-TPU deployments only.
+lowering; it is reachable through the pluggable :class:`PrngSpec` backend
+(``impl="hw"``) for real-TPU deployments, with ``impl="hw_emulated"`` as
+the CPU-testable counter stub that follows the identical tile-seeding
+discipline (see the PrngSpec section at the bottom of this module).
 
 All functions are deterministic, stateless and vectorized.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Literal
 
@@ -100,6 +104,47 @@ def _uniform01(bits):
     ) + np.float32(0.5 / (1 << 24))
 
 
+# How many independent uint32 bit streams each distribution consumes.
+# This is a CONTRACT shared by every PrngSpec impl: the hw kernel path
+# issues exactly this many ``pltpu.prng_random_bits`` draws per tile, the
+# emulated stub the same number of counter draws, and Threefry maps its
+# two cipher output words onto streams (0, 1).
+N_BIT_STREAMS = {
+    "normal": 2,      # Box-Muller: two uniforms per sample
+    "uniform": 1,
+    "bernoulli": 1,
+    "rademacher": 1,
+    "sparse": 2,      # magnitude stream + sign stream
+}
+
+
+def bits_to_sample(distribution: Distribution, b0, b1=None):
+    """The one uint32-bits -> f32-sample mapping, shared by every PRNG
+    backend (Threefry counters, TPU hardware PRNG, the emulated stub).
+
+    ``b0``/``b1`` are independent uint32 bit streams;  ``b1`` is only
+    consumed when ``N_BIT_STREAMS[distribution] == 2``.  Keeping this
+    mapping in one place is what makes the distribution moment / sign
+    tests meaningful across backends: an impl only chooses WHERE bits
+    come from, never how they become samples.
+    """
+    if distribution == "normal":
+        u1 = _uniform01(b0)
+        u2 = _uniform01(b1)
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        return r * jnp.cos((2.0 * np.pi) * u2)
+    if distribution == "uniform":
+        return _uniform01(b0) * 2.0 - 1.0
+    if distribution in ("bernoulli", "rademacher"):
+        return jnp.where(b0 & np.uint32(1), 1.0, -1.0).astype(jnp.float32)
+    if distribution == "sparse":
+        u = _uniform01(b0)
+        sign = jnp.where(b1 & np.uint32(1), np.float32(np.sqrt(3.0)),
+                         np.float32(-np.sqrt(3.0)))
+        return jnp.where(u < np.float32(1.0 / 3.0), sign, 0.0)
+    raise ValueError(f"unknown distribution {distribution!r}")
+
+
 def normal_from_counter(seed, ctr0, ctr1=np.uint32(0)):
     """Standard normal samples keyed by (seed, counters) via Box-Muller.
 
@@ -108,22 +153,19 @@ def normal_from_counter(seed, ctr0, ctr1=np.uint32(0)):
     what position-keyed sharded generation needs.
     """
     b0, b1 = _bits_for_counters(seed, ctr0, ctr1)
-    u1 = _uniform01(b0)
-    u2 = _uniform01(b1)
-    r = jnp.sqrt(-2.0 * jnp.log(u1))
-    return r * jnp.cos((2.0 * np.pi) * u2)
+    return bits_to_sample("normal", b0, b1)
 
 
 def uniform_from_counter(seed, ctr0, ctr1=np.uint32(0)):
     """Uniform in [-1, 1) keyed by (seed, counters) -- paper Table 2."""
     b0, _ = _bits_for_counters(seed, ctr0, ctr1)
-    return _uniform01(b0) * 2.0 - 1.0
+    return bits_to_sample("uniform", b0)
 
 
 def rademacher_from_counter(seed, ctr0, ctr1=np.uint32(0)):
     """Zero-mean Bernoulli (+-1 with p=0.5) -- paper's 'Bernoulli-0.5'."""
     b0, _ = _bits_for_counters(seed, ctr0, ctr1)
-    return jnp.where(b0 & np.uint32(1), 1.0, -1.0).astype(jnp.float32)
+    return bits_to_sample("rademacher", b0)
 
 
 def sparse_from_counter(seed, ctr0, ctr1=np.uint32(0)):
@@ -132,10 +174,7 @@ def sparse_from_counter(seed, ctr0, ctr1=np.uint32(0)):
     Unit variance; 3x fewer FMAs on TPU (two-thirds of the generated
     tile multiplies by zero and the VPU predicates them away)."""
     b0, b1 = _bits_for_counters(seed, ctr0, ctr1)
-    u = _uniform01(b0)
-    sign = jnp.where(b1 & np.uint32(1), np.float32(np.sqrt(3.0)),
-                     np.float32(-np.sqrt(3.0)))
-    return jnp.where(u < np.float32(1.0 / 3.0), sign, 0.0)
+    return bits_to_sample("sparse", b0, b1)
 
 
 _GENERATORS = {
@@ -228,3 +267,196 @@ def generate_vector(seed, offset, n: int, distribution: Distribution = "normal",
     """Generate n consecutive row-0 samples starting at column offset."""
     ctr = jnp.arange(n, dtype=jnp.uint32) + jnp.asarray(offset, jnp.uint32)
     return sample_from_counter(seed, ctr, np.uint32(0), distribution).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# pluggable PRNG backends (PrngSpec)
+# ---------------------------------------------------------------------------
+#
+# The paper's systems claim is HARDWARE-accelerated on-demand generation:
+# on the IPU every core regenerates its basis slice from a shared seed at
+# zero memory cost.  The TPU equivalent is the per-core PRNG exposed to
+# Pallas kernels (``pltpu.prng_seed`` / ``pltpu.prng_random_bits``).  Its
+# bits are a function of the SEED CALL, not of a per-element counter, so
+# to keep regeneration coherent across kernels the discipline is
+# TILE-COORDINATE KEYING: every (segment, dir_block, pos_block) tile
+# re-seeds with (seg_seed, row0, col0) and then draws
+# ``N_BIT_STREAMS[dist]`` whole-tile bit blocks.  The projection
+# megakernel, the fused reconstruct-apply megakernel and the K-worker
+# variant enumerate the SAME tile set (only in different orders), so the
+# same (seed, row0, col0) tile yields identical bits everywhere -- the
+# property Threefry gets per-element, recovered per-tile at zero ALU cost.
+#
+# Three impls:
+#   * ``threefry``     -- in-kernel counter cipher; bit-stable across
+#                         tilings and releases (the reproducibility
+#                         default; everything above this section).
+#   * ``hw``           -- the TPU hardware PRNG; only lowers inside real
+#                         (non-interpret) Pallas TPU kernels.
+#   * ``hw_emulated``  -- pure-jnp stub with the identical tile-seeding
+#                         and stream-consumption discipline, runnable in
+#                         interpret-mode kernels AND the jnp oracles, so
+#                         the hw code path's structure, masking and
+#                         two-stream draws are testable without a TPU.
+#
+# Unlike threefry, the hw/hw_emulated value of an element DEPENDS on the
+# tiling (row0/col0 of its tile): block-size invariance does not hold,
+# and values are not bit-stable across jaxlib PRNG generations (hw).
+# Both are documented trade-offs of the zero-ALU generation path.
+
+PRNG_IMPLS = ("threefry", "hw", "hw_emulated")
+
+
+def hw_tile_key(seed, row0, col0):
+    """Fold a tile's (seed, row0, col0) identity into one uint32 key --
+    the emulated analogue of ``pltpu.prng_seed(seed, row0, col0)``."""
+    a, b = threefry2x32(
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(row0, jnp.uint32) ^ np.uint32(0xA511E9B3),
+        jnp.asarray(col0, jnp.uint32),
+        jnp.asarray(seed, jnp.uint32) ^ np.uint32(0x9E3779B9),
+    )
+    return a ^ _rotl32(b, 16)
+
+
+def emulated_random_bits(key, draw, shape: tuple[int, int]):
+    """uint32 bits for one emulated ``prng_random_bits(shape)`` draw.
+
+    ``draw`` is the call index since the tile's ``hw_tile_key`` seeding
+    (the hardware PRNG advances per call; the stub advances a counter).
+    Bits are keyed by the WITHIN-TILE linear index -- deliberately not by
+    global position, mirroring the hardware's ignorance of any global
+    coordinate system.
+    """
+    rows, cols = shape
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    idx = r * np.uint32(cols) + c
+    b0, _ = threefry2x32(key, key ^ np.uint32(0x85EBCA6B), idx,
+                         jnp.asarray(draw, jnp.uint32))
+    return b0
+
+
+def _hw_emulated_tile(seed, row0, col0, shape, distribution):
+    key = hw_tile_key(seed, row0, col0)
+    b0 = emulated_random_bits(key, np.uint32(0), shape)
+    b1 = (emulated_random_bits(key, np.uint32(1), shape)
+          if N_BIT_STREAMS[distribution] == 2 else None)
+    return bits_to_sample(distribution, b0, b1)
+
+
+def _hw_tile(seed, row0, col0, shape, distribution):  # pragma: no cover
+    # requires a real TPU: pltpu.prng_* has no CPU/interpret lowering
+    from jax.experimental.pallas import tpu as pltpu
+
+    pltpu.prng_seed(seed, row0, col0)
+    b0 = pltpu.prng_random_bits(shape).astype(jnp.uint32)
+    b1 = (pltpu.prng_random_bits(shape).astype(jnp.uint32)
+          if N_BIT_STREAMS[distribution] == 2 else None)
+    return bits_to_sample(distribution, b0, b1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrngSpec:
+    """One pluggable PRNG backend.  Hashable (frozen) so it can ride as a
+    static argument through jitted kernel wrappers."""
+
+    impl: str = "threefry"
+
+    def __post_init__(self):
+        if self.impl not in PRNG_IMPLS:
+            raise ValueError(
+                f"unknown prng impl {self.impl!r}; expected one of "
+                f"{PRNG_IMPLS}")
+
+    @property
+    def in_kernel_only(self) -> bool:
+        """True when generation only lowers inside a real TPU Pallas
+        kernel (no jnp-oracle or interpret-mode execution exists)."""
+        return self.impl == "hw"
+
+    @property
+    def tile_keyed(self) -> bool:
+        """True when bits are keyed by tile coordinates (hw discipline)
+        rather than per-element counters: values then depend on the
+        (dir_block, pos_block) tiling."""
+        return self.impl != "threefry"
+
+    def generate_tile(self, seed, row0, col0, shape: tuple[int, int],
+                      distribution: Distribution = "normal",
+                      dtype=jnp.float32):
+        """A (rows, cols) basis tile at (row0, col0) of its segment --
+        the single generation entry point used by kernel bodies and by
+        the tile-table-driven jnp oracles.  For ``threefry`` this is
+        exactly :func:`generate_block` (position-keyed, tiling-blind);
+        for the hw impls the tile identity seeds the stream."""
+        if self.impl == "threefry":
+            return generate_block(seed, row0, col0, shape, distribution,
+                                  dtype)
+        if self.impl == "hw_emulated":
+            return _hw_emulated_tile(seed, row0, col0, shape,
+                                     distribution).astype(dtype)
+        return _hw_tile(seed, row0, col0, shape, distribution).astype(dtype)
+
+
+@functools.cache
+def get_prng_spec(impl) -> PrngSpec:
+    """Normalize an impl name (or pass a PrngSpec through) to the shared
+    frozen instance."""
+    if isinstance(impl, PrngSpec):
+        return impl
+    return PrngSpec(impl)
+
+
+def hw_prng_available_for(requested: str, backend: str) -> bool:
+    """The one hw-eligibility probe (shared by every resolution site):
+    only a ``hw`` request on the pallas backend pays the deferred kernel
+    import to ask whether real non-interpret TPU kernels exist."""
+    if requested != "hw" or backend != "pallas":
+        return False
+    from repro.kernels import ops
+
+    return ops.hw_prng_available()
+
+
+def resolve_prng_impl(requested: str, *, strategy: str, backend: str,
+                      hw_available: bool,
+                      rbd_enabled: bool = True) -> tuple[str, str]:
+    """Reason-coded selection of the effective PRNG impl for an
+    execution strategy (the one decision point;
+    ``optim.subspace.plan_from_flags`` delegates here and surfaces the
+    reason through dryrun/launcher output).
+
+    Tile-keyed impls need the tile-table-driven paths: the packed
+    megakernels (or their bit-exact jnp scan oracle).  The per-leaf
+    chunked jnp paths are position-keyed only, so hw/hw_emulated fall
+    back to threefry there; ``hw`` additionally degrades to
+    ``hw_emulated`` off-TPU so the code path stays exercised.
+    """
+    if requested not in PRNG_IMPLS:
+        raise ValueError(
+            f"unknown prng impl {requested!r}; expected one of {PRNG_IMPLS}")
+    if not rbd_enabled:
+        return "threefry", ("rbd disabled -> no basis generation, prng "
+                            "unused")
+    if requested == "threefry":
+        return "threefry", "counter-keyed Threefry (bit-stable default)"
+    if strategy != "fused_packed":
+        return "threefry", (
+            f"{requested} requested but the {strategy} strategy takes "
+            "per-leaf position-keyed paths -> threefry (tile-keyed PRNG "
+            "needs the packed tile tables)")
+    if requested == "hw":
+        if backend != "pallas":
+            return "hw_emulated", (
+                "hw PRNG requested on the jnp backend -> emulated "
+                "counter stub (same tile-seeding discipline, no TPU "
+                "kernel to run the real PRNG in)")
+        if not hw_available:
+            return "hw_emulated", (
+                "hw PRNG requested without a TPU (interpret-mode "
+                "kernels) -> emulated counter stub")
+        return "hw", ("TPU hardware PRNG, tile-coordinate keyed; zero "
+                      "Threefry ALU cost per basis element")
+    return "hw_emulated", ("emulated hw-PRNG counter stub (CPU-testable "
+                           "tile-seeding discipline)")

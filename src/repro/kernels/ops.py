@@ -6,6 +6,12 @@ transparently.  ``INTERPRET`` defaults to True on CPU hosts (this
 container) and should be set False on real TPU via
 ``repro.kernels.ops.set_interpret(False)`` or the REPRO_PALLAS_INTERPRET
 environment variable.
+
+Every wrapper accepts ``prng`` (a ``core.rng.PrngSpec`` impl name or
+instance) selecting the in-kernel generation backend; the default
+``threefry`` is the bit-stable counter path.  :func:`hw_prng_available`
+answers whether the real hardware PRNG (``prng="hw"``) can lower here --
+it needs a TPU and non-interpret kernels.
 """
 
 from __future__ import annotations
@@ -24,17 +30,27 @@ def set_interpret(value: bool) -> None:
     _INTERPRET = value
 
 
-def project_flat(seed, g, dim: int, distribution: str = "normal"):
+def hw_prng_available() -> bool:
+    """True when ``prng="hw"`` can actually lower: real (non-interpret)
+    Pallas kernels on a TPU backend.  ``pltpu.prng_random_bits`` has no
+    CPU/interpret lowering -- off TPU the selection logic degrades hw to
+    the emulated stub with a reason code (see ``core.rng``)."""
+    return (not _INTERPRET) and jax.default_backend() == "tpu"
+
+
+def project_flat(seed, g, dim: int, distribution: str = "normal",
+                 prng="threefry"):
     """Tensor-shaped compartment contract (same as the jnp projector):
     linear positions are row-major, so flattening before the kernel is
     bit-identical to the jnp backend's tensor-shaped generation."""
     return rbd_project.project_flat(
-        seed, g.reshape(-1), dim, distribution, interpret=_INTERPRET
+        seed, g.reshape(-1), dim, distribution, interpret=_INTERPRET,
+        prng=prng,
     )
 
 
 def reconstruct_flat(seed, scale, tail, distribution: str = "normal",
-                     dtype=None):
+                     dtype=None, prng="threefry"):
     import math
 
     import jax.numpy as jnp
@@ -43,45 +59,49 @@ def reconstruct_flat(seed, scale, tail, distribution: str = "normal",
     q = math.prod(tail) if tail else 1
     out = rbd_reconstruct.reconstruct_flat(
         seed, scale, q, distribution, dtype or jnp.float32,
-        interpret=_INTERPRET,
+        interpret=_INTERPRET, prng=prng,
     )
     return out.reshape(tail)
 
 
 def reconstruct_apply_flat(seed, scale, theta_flat, eta,
-                           distribution: str = "normal"):
+                           distribution: str = "normal", prng="threefry"):
     return rbd_reconstruct.reconstruct_apply_flat(
-        seed, scale, theta_flat, eta, distribution, interpret=_INTERPRET
+        seed, scale, theta_flat, eta, distribution, interpret=_INTERPRET,
+        prng=prng,
     )
 
 
-def project_packed(seg_seeds, g_packed, layout, distribution: str = "normal"):
+def project_packed(seg_seeds, g_packed, layout, distribution: str = "normal",
+                   prng="threefry"):
     """All compartments' (u, sq) in one megakernel launch (packed layout)."""
     from repro.kernels import rbd_step
 
     return rbd_step.project_packed(
-        seg_seeds, g_packed, layout, distribution, interpret=_INTERPRET
+        seg_seeds, g_packed, layout, distribution, interpret=_INTERPRET,
+        prng=prng,
     )
 
 
 def reconstruct_apply_packed(seg_seeds, scale_packed, theta_packed, layout,
-                             distribution: str = "normal"):
+                             distribution: str = "normal", prng="threefry"):
     """Fused theta' = theta - scale @ P for all compartments, one launch."""
     from repro.kernels import rbd_step
 
     return rbd_step.reconstruct_apply_packed(
         seg_seeds, scale_packed, theta_packed, layout, distribution,
-        interpret=_INTERPRET,
+        interpret=_INTERPRET, prng=prng,
     )
 
 
 def reconstruct_apply_packed_workers(wseg_seeds, scale_gathered,
                                      theta_packed, layout, k_workers: int,
-                                     distribution: str = "normal"):
+                                     distribution: str = "normal",
+                                     prng="threefry"):
     """K-worker joint fused update (packed independent_bases), one launch."""
     from repro.kernels import rbd_step
 
     return rbd_step.reconstruct_apply_packed_workers(
         wseg_seeds, scale_gathered, theta_packed, layout, k_workers,
-        distribution, interpret=_INTERPRET,
+        distribution, interpret=_INTERPRET, prng=prng,
     )

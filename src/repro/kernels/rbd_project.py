@@ -1,31 +1,36 @@
 """Pallas TPU kernel: fused basis-generation + projection  u = P @ g.
 
 The virtual basis matrix P (d_pad, Q_pad) is never materialized in HBM:
-each grid step generates one (DB, PB) tile directly in VMEM from the
-Threefry counter hash (``repro.core.rng`` -- the identical code runs here
-and in the oracle), multiplies it against the resident gradient tile on
-the MXU, and accumulates into the (DB, 1) output block.  HBM traffic is
-exactly one read of g and one write of u; the basis costs compute only.
-This is the TPU-native translation of the paper's IPU hardware-PRNG
-insight (substitute fast local generation for memory/communication).
+each grid step generates one (DB, PB) tile directly in VMEM through the
+pluggable PRNG backend (``core.rng.PrngSpec``), multiplies it against the
+resident gradient tile on the MXU, and accumulates into the (DB, 1)
+output block.  HBM traffic is exactly one read of g and one write of u;
+the basis costs compute only.  This is the TPU-native translation of the
+paper's IPU hardware-PRNG insight (substitute fast local generation for
+memory/communication).
 
 Grid: (n_dir_blocks, n_pos_blocks); the position axis is innermost so the
 output block for direction-block ``di`` stays resident in VMEM across the
 whole accumulation sweep.
 
-On real TPU hardware, set ``use_hw_prng=True`` to generate raw bits with
-``pltpu.prng_random_bits`` instead of in-kernel Threefry (faster, but not
-interpretable on CPU and not bit-stable across generations -- the
-framework default stays Threefry for reproducibility).
+On real TPU hardware, pass ``prng="hw"`` to generate raw bits with the
+TPU hardware PRNG (``pltpu.prng_seed`` re-keyed per tile with
+(seed, row0, col0), then ``pltpu.prng_random_bits``): faster -- zero
+Threefry ALU cost per element -- but not interpretable on CPU, not
+bit-stable across generations, and tile-keyed, so the values depend on
+the (dir_block, pos_block) tiling.  ``prng="hw_emulated"`` runs the same
+seeding discipline as a CPU/interpret-mode counter stub.  The framework
+default stays ``threefry`` for reproducibility.  The old boolean
+``use_hw_prng`` flag is a deprecation shim over ``prng="hw"``.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import rng
@@ -36,30 +41,20 @@ POS_BLOCK = 512    # parameter positions per tile (multiple of 128)
 
 
 def _project_kernel(seed_ref, g_ref, u_ref, sq_ref, *, q: int,
-                    pos_block: int, distribution: str, use_hw_prng: bool):
+                    pos_block: int, distribution: str,
+                    prng_spec: rng.PrngSpec):
     di = pl.program_id(0)
     pj = pl.program_id(1)
     seed = seed_ref[0]
 
     db, pb = u_ref.shape[0], pos_block
-    if use_hw_prng:  # pragma: no cover - requires real TPU
-        from jax.experimental.pallas import tpu as pltpu
-
-        pltpu.prng_seed(seed, di, pj)
-        bits = pltpu.prng_random_bits((db, pb))
-        block = rng._uniform01(bits.astype(jnp.uint32))
-        bits2 = pltpu.prng_random_bits((db, pb))
-        u2 = rng._uniform01(bits2.astype(jnp.uint32))
-        r = jnp.sqrt(-2.0 * jnp.log(block))
-        block = r * jnp.cos((2.0 * np.pi) * u2)
-    else:
-        block = rng.generate_block(
-            seed,
-            di * db,
-            pj * pb,
-            (db, pb),
-            distribution,
-        )
+    block = prng_spec.generate_tile(
+        seed,
+        (di * db).astype(jnp.uint32),
+        (pj * pb).astype(jnp.uint32),
+        (db, pb),
+        distribution,
+    )
 
     # mask padded columns (q may not divide POS_BLOCK); the gradient is
     # zero-padded by the wrapper so u is unaffected, but the row norms must
@@ -87,26 +82,21 @@ def _project_kernel(seed_ref, g_ref, u_ref, sq_ref, *, q: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dim", "distribution", "interpret", "use_hw_prng",
+    static_argnames=("dim", "distribution", "interpret", "prng",
                      "dir_block", "pos_block"),
 )
-def project_flat(
+def _project_flat_jit(
     seed,
     g_flat,
     dim: int,
-    distribution: str = "normal",
+    distribution: str,
     *,
-    interpret: bool = True,
-    use_hw_prng: bool = False,
-    dir_block: int = DIR_BLOCK,
-    pos_block: int = POS_BLOCK,
+    interpret: bool,
+    prng,
+    dir_block: int,
+    pos_block: int,
 ):
-    """Kernel-backed equivalent of ``projector._project_flat``.
-
-    Returns (u, sq) of shape (dim,): raw projections and squared row
-    norms.  ``interpret=True`` runs the kernel body in Python on CPU --
-    the validation mode for this container; on TPU pass interpret=False.
-    """
+    prng_spec = rng.get_prng_spec(prng)
     q = g_flat.shape[0]
     d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
     q_pad = ((q + pos_block - 1) // pos_block) * pos_block
@@ -122,7 +112,7 @@ def project_flat(
             q=q,
             pos_block=pos_block,
             distribution=distribution,
-            use_hw_prng=use_hw_prng,
+            prng_spec=prng_spec,
         ),
         grid=grid,
         in_specs=[
@@ -140,3 +130,36 @@ def project_flat(
         interpret=interpret,
     )(seed_arr, g)
     return u[:dim, 0], sq[:dim, 0]
+
+
+def project_flat(
+    seed,
+    g_flat,
+    dim: int,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    use_hw_prng: bool | None = None,
+    prng="threefry",
+    dir_block: int = DIR_BLOCK,
+    pos_block: int = POS_BLOCK,
+):
+    """Kernel-backed equivalent of ``projector._project_flat``.
+
+    Returns (u, sq) of shape (dim,): raw projections and squared row
+    norms.  ``interpret=True`` runs the kernel body in Python on CPU --
+    the validation mode for this container; on TPU pass interpret=False.
+    ``prng`` selects the generation backend (PrngSpec impl name or
+    instance); ``use_hw_prng`` is the deprecated boolean spelling of
+    ``prng="hw"``.
+    """
+    if use_hw_prng is not None:
+        warnings.warn(
+            "use_hw_prng is deprecated: pass prng='hw' (a core.rng."
+            "PrngSpec impl name) instead", DeprecationWarning,
+            stacklevel=2)
+        if use_hw_prng:
+            prng = "hw"
+    return _project_flat_jit(
+        seed, g_flat, dim, distribution, interpret=interpret, prng=prng,
+        dir_block=dir_block, pos_block=pos_block)

@@ -3,9 +3,12 @@
   reconstruct:        delta = s @ P                      (s: (d,))
   reconstruct_apply:  theta' = theta - eta * (s @ P)     (fused axpy)
 
-P tiles are regenerated in VMEM with the same counter scheme as the
-projection kernel -- forward and backward passes of the paper's scheme
-regenerate identical bases from the seed, nothing is stored.
+P tiles are regenerated in VMEM through the same pluggable PRNG backend
+(``core.rng.PrngSpec``) as the projection kernel -- forward and backward
+passes of the paper's scheme regenerate identical bases from the seed,
+nothing is stored.  Both kernels enumerate the identical (row0, col0)
+tile grid, so the tile-keyed ``hw``/``hw_emulated`` impls stay coherent
+between projection and reconstruction.
 
 Grid: (n_pos_blocks, n_dir_blocks) with the direction axis innermost, so
 each (1, PB) output block accumulates over all direction blocks while
@@ -28,13 +31,13 @@ from repro.kernels.rbd_project import DIR_BLOCK, POS_BLOCK
 
 
 def _recon_kernel(seed_ref, s_ref, out_ref, *, dir_block: int,
-                  distribution: str):
+                  distribution: str, prng_spec: rng.PrngSpec):
     pj = pl.program_id(0)
     di = pl.program_id(1)
     seed = seed_ref[0]
     pb = out_ref.shape[1]
 
-    block = rng.generate_block(
+    block = prng_spec.generate_tile(
         seed, di * dir_block, pj * pb, (dir_block, pb), distribution
     )
     s = s_ref[...].astype(jnp.float32)  # (1, dir_block)
@@ -52,13 +55,14 @@ def _recon_kernel(seed_ref, s_ref, out_ref, *, dir_block: int,
 
 
 def _recon_apply_kernel(seed_ref, s_ref, theta_ref, eta_ref, out_ref, *,
-                        dir_block: int, distribution: str):
+                        dir_block: int, distribution: str,
+                        prng_spec: rng.PrngSpec):
     pj = pl.program_id(0)
     di = pl.program_id(1)
     seed = seed_ref[0]
     pb = out_ref.shape[1]
 
-    block = rng.generate_block(
+    block = prng_spec.generate_tile(
         seed, di * dir_block, pj * pb, (dir_block, pb), distribution
     )
     s = s_ref[...].astype(jnp.float32)
@@ -78,7 +82,7 @@ def _recon_apply_kernel(seed_ref, s_ref, theta_ref, eta_ref, out_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("q", "distribution", "dtype", "interpret",
-                     "dir_block", "pos_block"),
+                     "dir_block", "pos_block", "prng"),
 )
 def reconstruct_flat(
     seed,
@@ -90,8 +94,10 @@ def reconstruct_flat(
     interpret: bool = True,
     dir_block: int = DIR_BLOCK,
     pos_block: int = POS_BLOCK,
+    prng="threefry",
 ):
     """Kernel-backed equivalent of ``projector._reconstruct_flat``."""
+    prng_spec = rng.get_prng_spec(prng)
     dim = scale.shape[0]
     d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
     q_pad = ((q + pos_block - 1) // pos_block) * pos_block
@@ -103,7 +109,8 @@ def reconstruct_flat(
     grid = (q_pad // pos_block, d_pad // dir_block)
     out = pl.pallas_call(
         functools.partial(
-            _recon_kernel, dir_block=dir_block, distribution=distribution
+            _recon_kernel, dir_block=dir_block, distribution=distribution,
+            prng_spec=prng_spec,
         ),
         grid=grid,
         in_specs=[
@@ -119,7 +126,8 @@ def reconstruct_flat(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("distribution", "interpret", "dir_block", "pos_block"),
+    static_argnames=("distribution", "interpret", "dir_block", "pos_block",
+                     "prng"),
 )
 def reconstruct_apply_flat(
     seed,
@@ -131,6 +139,7 @@ def reconstruct_apply_flat(
     interpret: bool = True,
     dir_block: int = DIR_BLOCK,
     pos_block: int = POS_BLOCK,
+    prng="threefry",
 ):
     """Fused theta' = theta - eta * (scale @ P) over a flat parameter
     vector: one HBM read of theta, one write of theta', zero traffic for
@@ -140,6 +149,7 @@ def reconstruct_apply_flat(
     buffer is f32 regardless of theta's dtype; bf16 parameters are
     upcast once on load and the result is rounded back to theta's dtype
     exactly once on the way out."""
+    prng_spec = rng.get_prng_spec(prng)
     q = theta_flat.shape[0]
     dim = scale.shape[0]
     d_pad = ((dim + dir_block - 1) // dir_block) * dir_block
@@ -159,6 +169,7 @@ def reconstruct_apply_flat(
             _recon_apply_kernel,
             dir_block=dir_block,
             distribution=distribution,
+            prng_spec=prng_spec,
         ),
         grid=grid,
         in_specs=[

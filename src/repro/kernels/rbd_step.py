@@ -21,10 +21,16 @@ tile plus the revisited output block, same as the per-leaf kernels, but
 with zero per-leaf launch or padding overhead and no HBM round-trip for
 the reconstructed delta (~2 x 4 x D bytes/step saved).
 
-Basis tiles are generated in VMEM from the segment's folded seed with the
-identical counter scheme as everywhere else (``core.rng``): element
-(row, col) of compartment k is keyed by (seed_k, col, row) with col the
+Basis tiles are generated in VMEM through the pluggable PRNG backend
+(``core.rng.PrngSpec``).  The default ``threefry`` impl uses the identical
+counter scheme as everywhere else (``core.rng``): element (row, col) of
+compartment k is keyed by (seed_k, col, row) with col the
 *within-segment* position, so packed and per-leaf paths are bit-identical.
+The ``hw`` impl instead re-seeds the TPU hardware PRNG per tile with
+(seed_k, row0, col0): both megakernels (and the K-worker variant)
+enumerate the same tile set, so the same tile regenerates identical bits
+in the projection and reconstruct-apply launches at zero Threefry ALU
+cost; ``hw_emulated`` is its CPU/interpret-mode counter stub.
 
 Tile ordering (enforced by the host-side tables, relied on here):
 
@@ -53,12 +59,13 @@ __all__ = ["project_packed", "reconstruct_apply_packed",
 
 def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
                     gblk_ref, ublk_ref, g_ref, u_ref, sq_ref, *,
-                    pos_block: int, distribution: str):
+                    pos_block: int, distribution: str,
+                    prng_spec: rng.PrngSpec):
     t = pl.program_id(0)
     db = u_ref.shape[0]
     pb = pos_block
 
-    block = rng.generate_block(
+    block = prng_spec.generate_tile(
         seed_ref[t],
         row0_ref[t].astype(jnp.uint32),
         col0_ref[t].astype(jnp.uint32),
@@ -90,11 +97,12 @@ def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
 
 def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
                         gblk_ref, sblk_ref, s_ref, theta_ref, out_ref, *,
-                        dir_block: int, distribution: str):
+                        dir_block: int, distribution: str,
+                        prng_spec: rng.PrngSpec):
     t = pl.program_id(0)
     pb = out_ref.shape[1]
 
-    block = rng.generate_block(
+    block = prng_spec.generate_tile(
         seed_ref[t],
         row0_ref[t].astype(jnp.uint32),
         col0_ref[t].astype(jnp.uint32),
@@ -129,7 +137,7 @@ def _tile_seeds(seg_seeds, tiles_seg):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("layout", "distribution", "interpret"),
+    static_argnames=("layout", "distribution", "interpret", "prng"),
 )
 def project_packed(
     seg_seeds,
@@ -138,14 +146,17 @@ def project_packed(
     distribution: str = "normal",
     *,
     interpret: bool = True,
+    prng="threefry",
 ):
     """One launch: raw projections + squared row norms for ALL segments.
 
     ``seg_seeds``: (n_segments,) uint32 folded seeds.  ``g_packed``:
     (q_packed,) f32 packed gradient.  Returns (u, sq), each (d_packed,)
     f32 in packed coordinate layout (padding slots undefined -- mask with
-    ``layout.coord_valid``).
+    ``layout.coord_valid``).  ``prng`` selects the in-kernel generation
+    backend (``core.rng.PrngSpec`` impl name or instance).
     """
+    prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     n_tiles = layout.n_proj_tiles
     g = g_packed.astype(jnp.float32).reshape(1, layout.q_packed)
@@ -167,7 +178,8 @@ def project_packed(
     )
     u, sq = pl.pallas_call(
         functools.partial(
-            _project_kernel, pos_block=pb, distribution=distribution),
+            _project_kernel, pos_block=pb, distribution=distribution,
+            prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((layout.d_packed, 1), jnp.float32),
@@ -189,7 +201,7 @@ def project_packed(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("layout", "distribution", "interpret"),
+    static_argnames=("layout", "distribution", "interpret", "prng"),
 )
 def reconstruct_apply_packed(
     seg_seeds,
@@ -199,6 +211,7 @@ def reconstruct_apply_packed(
     distribution: str = "normal",
     *,
     interpret: bool = True,
+    prng="threefry",
 ):
     """One launch: theta' = theta - scale @ P for ALL segments, fused.
 
@@ -207,8 +220,11 @@ def reconstruct_apply_packed(
     ``layout.coord_valid``) -- padded basis rows are generated and would
     otherwise contribute phantom directions.  ``theta_packed`` is the
     (q_packed,) f32 packed parameter buffer; the update never exists in
-    HBM, only the new parameters are written.
+    HBM, only the new parameters are written.  With a tile-keyed ``prng``
+    impl each tile regenerates the exact bits the projection launch drew
+    for it (same (seed, row0, col0) identity).
     """
+    prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     n_tiles = layout.n_recon_tiles
     s = scale_packed.astype(jnp.float32).reshape(1, layout.d_packed)
@@ -229,7 +245,8 @@ def reconstruct_apply_packed(
     )
     out = pl.pallas_call(
         functools.partial(
-            _recon_apply_kernel, dir_block=db, distribution=distribution),
+            _recon_apply_kernel, dir_block=db, distribution=distribution,
+            prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
         interpret=interpret,
@@ -249,7 +266,8 @@ def reconstruct_apply_packed(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("layout", "k_workers", "distribution", "interpret"),
+    static_argnames=("layout", "k_workers", "distribution", "interpret",
+                     "prng"),
 )
 def reconstruct_apply_packed_workers(
     wseg_seeds,
@@ -260,6 +278,7 @@ def reconstruct_apply_packed_workers(
     distribution: str = "normal",
     *,
     interpret: bool = True,
+    prng="threefry",
 ):
     """One launch: theta' = theta - sum_k scale_k @ P_k for ALL segments
     of ALL K workers' bases, fused (packed ``independent_bases`` mode).
@@ -279,6 +298,7 @@ def reconstruct_apply_packed_workers(
     learning rate (folding the 1/K mean) and normalization applied,
     zero on padding slots.  ``theta_packed``: (q_packed,) f32.
     """
+    prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     wt = layout.worker_tables(k_workers)
     s = scale_gathered.astype(jnp.float32).reshape(
@@ -300,7 +320,8 @@ def reconstruct_apply_packed_workers(
     )
     out = pl.pallas_call(
         functools.partial(
-            _recon_apply_kernel, dir_block=db, distribution=distribution),
+            _recon_apply_kernel, dir_block=db, distribution=distribution,
+            prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
         interpret=interpret,

@@ -9,7 +9,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
       --shape train_4k [--multi-pod] [--mode rbd|sgd|sharedseed] \
       [--rbd-mode shared_basis|independent_bases] [--packed auto|on|off] \
-      [--out reports/dryrun]
+      [--prng-impl threefry|hw|hw_emulated] [--out reports/dryrun]
   PYTHONPATH=src python -m repro.launch.dryrun --all
 """
 
@@ -71,7 +71,8 @@ def model_flops(cfg, shape: InputShape) -> float:
 
 def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                        rbd_mode: str = "shared_basis",
-                       packed: str = "auto"):
+                       packed: str = "auto",
+                       prng_impl: str = "threefry"):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
     mode='sharedseed' wraps the step in shard_map (manual over the batch
@@ -89,7 +90,7 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     """
     cfg = model.cfg
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"), mode=rbd_mode,
-                        packed=packed)
+                        packed=packed, prng_impl=prng_impl)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
     transform = train_step_lib.make_transform(model, rbd_cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -136,6 +137,8 @@ def _print_update_path(sub_opt):
     ep = sub_opt.plan_execution()
     fused = "fused" if ep.fused else "UNFUSED"
     print(f"      update path [{fused}]: {ep.strategy} -- {ep.reason}")
+    if sub_opt.transform is not None:
+        print(f"      prng impl: {ep.prng_impl} -- {ep.prng_reason}")
 
 
 def build_prefill_inputs(model, shape: InputShape):
@@ -211,7 +214,8 @@ def should_skip(cfg, shape: InputShape) -> str | None:
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "rbd", rbd_mode: str = "shared_basis",
-            packed: str = "auto", out_dir: str = "reports/dryrun",
+            packed: str = "auto", prng_impl: str = "threefry",
+            out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -233,7 +237,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if shape.kind == "train":
         fn, args_shape = build_train_inputs(model, shape, mode, mesh,
                                             rbd_mode=rbd_mode,
-                                            packed=packed)
+                                            packed=packed,
+                                            prng_impl=prng_impl)
     elif shape.kind == "prefill":
         fn, args_shape = build_prefill_inputs(model, shape)
     else:
@@ -325,6 +330,10 @@ def main():
                          "subspace (Algorithm 1)")
     ap.add_argument("--packed", default="auto",
                     choices=["auto", "on", "off"])
+    ap.add_argument("--prng-impl", default="threefry",
+                    choices=["threefry", "hw", "hw_emulated"],
+                    help="basis-generation PRNG backend (hw degrades to "
+                         "hw_emulated off-TPU with a printed reason)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="reports/dryrun")
     args = ap.parse_args()
@@ -344,7 +353,7 @@ def main():
         try:
             r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
                         rbd_mode=args.rbd_mode, packed=args.packed,
-                        out_dir=args.out)
+                        prng_impl=args.prng_impl, out_dir=args.out)
             if "skipped" in r:
                 print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")
             else:

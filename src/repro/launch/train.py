@@ -69,6 +69,13 @@ def main(argv=None):
                     choices=["auto", "on", "off"],
                     help="single-launch packed RBD step "
                          "(auto: on for the pallas backend)")
+    ap.add_argument("--prng-impl", default="threefry",
+                    choices=["threefry", "hw", "hw_emulated"],
+                    help="basis-generation PRNG backend: bit-stable "
+                         "Threefry counters, the TPU hardware PRNG "
+                         "(packed megakernels, real TPU only; degrades "
+                         "to the emulated stub off-TPU with a logged "
+                         "reason), or the CPU-testable emulated stub")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -89,6 +96,7 @@ def main(argv=None):
         model_axis=args.model, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rbd_dim=args.rbd_dim,
         rbd_backend=args.rbd_backend, packed=args.packed,
+        prng_impl=args.prng_impl,
         optimizer=args.optimizer, weight_decay=args.weight_decay,
         momentum_beta=args.momentum_beta, nesterov=args.nesterov,
         adam_b1=args.adam_b1, adam_b2=args.adam_b2,
@@ -99,7 +107,8 @@ def main(argv=None):
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  data=1, model_axis=1, steps=10, batch=8, seq=128,
                  lr=0.125, rbd_dim=1024, rbd_backend="jnp",
-                 packed="auto", optimizer="sgd", weight_decay=0.0,
+                 packed="auto", prng_impl="threefry",
+                 optimizer="sgd", weight_decay=0.0,
                  momentum_beta=0.9, nesterov=False, adam_b1=0.9,
                  adam_b2=0.999, adam_eps=1e-8, checkpoint_dir=None):
     import jax
@@ -116,7 +125,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
 
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"),
                         total_dim=rbd_dim, mode=rbd_mode,
-                        backend=rbd_backend, packed=packed)
+                        backend=rbd_backend, packed=packed,
+                        prng_impl=prng_impl)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,
                       steps=steps, batch_size=batch, seq_len=seq,
                       optimizer=optimizer, weight_decay=weight_decay,
@@ -143,6 +153,9 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
         return_optimizer=True)
     eplan = sub_opt.plan_execution()
     print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
+    if rbd_cfg.enabled:
+        print(f"prng impl: {eplan.prng_impl} -- {eplan.prng_reason}",
+              flush=True)
 
     # full state shape (params may be the packed buffer) drives the specs
     state_shape = jax.eval_shape(init_state, jax.random.PRNGKey(tcfg.seed))

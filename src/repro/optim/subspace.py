@@ -71,7 +71,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import projector
+from repro.core import projector, rng
 from repro.core.compartments import PACKABLE_NORMALIZATIONS
 from repro.core.rbd import RandomBasesTransform, RBDState
 from repro.optim import transforms as opt
@@ -85,6 +85,11 @@ class ExecutionPlan(NamedTuple):
                            # | full_space
     packed_resident: bool  # TrainState stores params packed across steps
     reason: str            # human-readable decision trail
+    prng_impl: str = "threefry"   # EFFECTIVE core.rng.PrngSpec impl (the
+                                  # requested impl after reason-coded
+                                  # degradation: hw off-TPU -> emulated,
+                                  # tile-keyed on per-leaf -> threefry)
+    prng_reason: str = ""         # why that impl was selected
 
     @property
     def fused(self) -> bool:
@@ -101,7 +106,9 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     normalization: str = "rsqrt_dim", backend: str = "jnp",
                     mode: str = "shared_basis", axis_name=None,
                     model_sharded: bool = False,
-                    k_workers: int = 1) -> ExecutionPlan:
+                    k_workers: int = 1,
+                    prng_impl: str = "threefry",
+                    hw_prng_available: bool = False) -> ExecutionPlan:
     """The one fuse/state-placement decision point (pure function of the
     config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
 
@@ -115,71 +122,85 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     sequential K-worker SIMULATION (grads arrive stacked (K, q_packed)),
     bit-compatible with the shard_map exchange -- used by the fig5
     benchmark and the equivalence tests.
+
+    ``prng_impl``: the REQUESTED ``core.rng.PrngSpec`` impl;
+    ``hw_prng_available``: whether ``"hw"`` can actually lower (real
+    TPU, non-interpret kernels).  The effective impl is resolved per
+    strategy by ``core.rng.resolve_prng_impl`` and lands on the returned
+    plan's ``prng_impl``/``prng_reason`` fields.
     """
     del optimizer  # all optimizers have coordinate-space state now
-    if not rbd_enabled:
-        return ExecutionPlan(
-            "full_space", False,
-            "rbd disabled -> full-space optimizer on raw gradients")
-    if weight_decay:
-        return ExecutionPlan(
-            "full_space", False,
-            "weight_decay couples updates to full-space params -> "
-            "unfused full-space path")
-    if mode == "independent_bases" and (axis_name is not None
-                                        or k_workers > 1):
-        if not use_packed:
+
+    def _decide() -> ExecutionPlan:
+        if not rbd_enabled:
             return ExecutionPlan(
                 "full_space", False,
-                "independent_bases per-leaf exchange -> K per-worker "
-                "bases, full-space optimizer state (use_packed joins "
-                "the K*d coordinate space)")
-        if normalization not in projector.STATIC_FACTOR_NORMALIZATIONS:
+                "rbd disabled -> full-space optimizer on raw gradients")
+        if weight_decay:
             return ExecutionPlan(
                 "full_space", False,
-                f"independent_bases with {normalization} normalization "
-                "needs every worker's row norms -> per-leaf full-space "
-                "path")
-        if model_sharded:
+                "weight_decay couples updates to full-space params -> "
+                "unfused full-space path")
+        if mode == "independent_bases" and (axis_name is not None
+                                            or k_workers > 1):
+            if not use_packed:
+                return ExecutionPlan(
+                    "full_space", False,
+                    "independent_bases per-leaf exchange -> K per-worker "
+                    "bases, full-space optimizer state (use_packed joins "
+                    "the K*d coordinate space)")
+            if normalization not in projector.STATIC_FACTOR_NORMALIZATIONS:
+                return ExecutionPlan(
+                    "full_space", False,
+                    f"independent_bases with {normalization} normalization "
+                    "needs every worker's row norms -> per-leaf full-space "
+                    "path")
+            if model_sharded:
+                return ExecutionPlan(
+                    "full_space", False,
+                    "independent_bases with model-axis param sharding -> "
+                    "per-leaf full-space path (the packed-resident buffer "
+                    "would replicate the params)")
             return ExecutionPlan(
-                "full_space", False,
-                "independent_bases with model-axis param sharding -> "
-                "per-leaf full-space path (the packed-resident buffer "
-                "would replicate the params)")
-        return ExecutionPlan(
-            "fused_packed", True,
-            "packed independent_bases: project on own basis -> one "
-            "(d,) all-gather -> (K, d) joint-coordinate optimizer -> "
-            "K-worker reconstruct-apply; packed-resident TrainState")
-    if normalization not in PACKABLE_NORMALIZATIONS:
-        return ExecutionPlan(
-            "coord_unfused", False,
-            f"{normalization} normalization -> unfused (materializes a "
-            "QR basis per compartment); coordinate-space state")
-    if use_packed and model_sharded:
+                "fused_packed", True,
+                "packed independent_bases: project on own basis -> one "
+                "(d,) all-gather -> (K, d) joint-coordinate optimizer -> "
+                "K-worker reconstruct-apply; packed-resident TrainState")
+        if normalization not in PACKABLE_NORMALIZATIONS:
+            return ExecutionPlan(
+                "coord_unfused", False,
+                f"{normalization} normalization -> unfused (materializes a "
+                "QR basis per compartment); coordinate-space state")
+        if use_packed and model_sharded:
+            if backend == "pallas":
+                return ExecutionPlan(
+                    "fused_per_leaf", False,
+                    "model-axis param sharding is incompatible with the "
+                    "packed-resident buffer -> per-leaf fused apply")
+            return ExecutionPlan(
+                "coord_unfused", False,
+                "model-axis param sharding is incompatible with the "
+                "packed-resident buffer -> per-leaf XLA-fused stages")
+        if use_packed:
+            return ExecutionPlan(
+                "fused_packed", True,
+                "packed two-launch step: project -> (d,)-state coordinate "
+                "optimizer -> reconstruct-apply; packed-resident TrainState")
         if backend == "pallas":
             return ExecutionPlan(
                 "fused_per_leaf", False,
-                "model-axis param sharding is incompatible with the "
-                "packed-resident buffer -> per-leaf fused apply")
+                "packing disabled -> per-leaf fused reconstruct-apply; "
+                "coordinate-space state")
         return ExecutionPlan(
             "coord_unfused", False,
-            "model-axis param sharding is incompatible with the "
-            "packed-resident buffer -> per-leaf XLA-fused stages")
-    if use_packed:
-        return ExecutionPlan(
-            "fused_packed", True,
-            "packed two-launch step: project -> (d,)-state coordinate "
-            "optimizer -> reconstruct-apply; packed-resident TrainState")
-    if backend == "pallas":
-        return ExecutionPlan(
-            "fused_per_leaf", False,
-            "packing disabled -> per-leaf fused reconstruct-apply; "
-            "coordinate-space state")
-    return ExecutionPlan(
-        "coord_unfused", False,
-        "jnp backend unpacked -> per-leaf XLA-fused stages (no kernel "
-        "launches); coordinate-space state")
+            "jnp backend unpacked -> per-leaf XLA-fused stages (no kernel "
+            "launches); coordinate-space state")
+
+    eplan = _decide()
+    impl, why = rng.resolve_prng_impl(
+        prng_impl, strategy=eplan.strategy, backend=backend,
+        hw_available=hw_prng_available, rbd_enabled=rbd_enabled)
+    return eplan._replace(prng_impl=impl, prng_reason=why)
 
 
 class _Aux(NamedTuple):
@@ -253,6 +274,9 @@ class SubspaceOptimizer:
 
     def plan_execution(self) -> ExecutionPlan:
         t = self.transform
+        requested = (getattr(t, "prng", "threefry") if t else "threefry")
+        hw_ok = rng.hw_prng_available_for(
+            requested, t.backend if t else "jnp")
         return plan_from_flags(
             optimizer=self.optimizer,
             weight_decay=self.weight_decay,
@@ -264,6 +288,8 @@ class SubspaceOptimizer:
             axis_name=self.axis_name,
             model_sharded=self.model_sharded,
             k_workers=self.k_workers,
+            prng_impl=requested,
+            hw_prng_available=hw_ok,
         )
 
     @property
@@ -338,16 +364,18 @@ class SubspaceOptimizer:
         ``aux.update_norm`` the full-space update norm (zeros when
         ``log_update_norm`` is off).  ``params``/``grads`` are in the
         stored representation."""
-        strategy = self.plan_execution().strategy
-        if strategy == "full_space":
+        eplan = self.plan_execution()
+        if eplan.strategy == "full_space":
             return self._full_space_step(params, grads, rbd_state,
                                          opt_state)
-        if strategy == "fused_packed":
-            return self._packed_step(params, grads, rbd_state, opt_state)
+        if eplan.strategy == "fused_packed":
+            return self._packed_step(params, grads, rbd_state, opt_state,
+                                     eplan)
         return self._per_leaf_step(params, grads, rbd_state, opt_state,
-                                   fused=(strategy == "fused_per_leaf"))
+                                   fused=(eplan.strategy
+                                          == "fused_per_leaf"))
 
-    def _packed_step(self, params, grads, rbd_state, opt_state):
+    def _packed_step(self, params, grads, rbd_state, opt_state, eplan):
         """Two launches: project || (d,)-state optimizer || reconstruct-
         apply.  With ``axis_name`` set, ONE pmean of the packed (d,)
         coordinate buffer is the entire per-step exchange -- for sgd,
@@ -355,25 +383,27 @@ class SubspaceOptimizer:
         post-pmean coordinates, so worker states stay replicated)."""
         if self.joint_subspace:
             return self._packed_independent_step(params, grads, rbd_state,
-                                                 opt_state)
+                                                 opt_state, eplan)
         t = self.transform
         plan = t.plan
         layout = plan.packed()
+        prng = eplan.prng_impl
         seed = t.step_seed(rbd_state.step)
         coords, sq = projector.project_packed(
             grads, plan, seed, backend=t.backend, layout=layout,
-            return_norms=True, prepacked=True)
+            return_norms=True, prepacked=True, prng=prng)
         if self.axis_name is not None:
             coords = jax.lax.pmean(coords, axis_name=self.axis_name)
         coords, opt_state = self._optimizer().update(coords, opt_state)
         new_params = projector.reconstruct_apply_packed(
             coords, plan, seed, params, self.learning_rate,
-            backend=t.backend, row_sq=sq, layout=layout, prepacked=True)
+            backend=t.backend, row_sq=sq, layout=layout, prepacked=True,
+            prng=prng)
         return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
                 self._delta_aux(params, new_params))
 
     def _packed_independent_step(self, params, grads, rbd_state,
-                                 opt_state):
+                                 opt_state, eplan):
         """Packed independent_bases (paper Algorithm 1): still exactly
         two launches.  Launch 1 projects the local prepacked gradient
         onto THIS worker's basis; ONE all-gather of the (d_packed,)
@@ -392,12 +422,14 @@ class SubspaceOptimizer:
         t = self.transform
         plan = t.plan
         layout = plan.packed()
+        prng = eplan.prng_impl
         seed = t.step_seed(rbd_state.step)
         if self.axis_name is not None:
             from repro.core import distributed
 
             gathered = distributed.independent_bases_coords(
-                t, grads, rbd_state, self.axis_name, layout=layout)
+                t, grads, rbd_state, self.axis_name, layout=layout,
+                prng=prng)
             if gathered.shape[0] != self.k_workers:
                 raise ValueError(
                     f"k_workers={self.k_workers} does not match the "
@@ -412,12 +444,12 @@ class SubspaceOptimizer:
             gathered = jax.lax.map(
                 lambda sg: projector.project_packed(
                     sg[1], plan, sg[0], backend=t.backend, layout=layout,
-                    prepacked=True), (wseeds, grads))
+                    prepacked=True, prng=prng), (wseeds, grads))
         gathered, opt_state = self._optimizer().update(gathered, opt_state)
         new_params = projector.reconstruct_apply_packed_workers(
             gathered, plan, seed, params,
             self.learning_rate / self.k_workers, backend=t.backend,
-            layout=layout, prepacked=True)
+            layout=layout, prepacked=True, prng=prng)
         return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
                 self._delta_aux(params, new_params))
 

@@ -67,7 +67,7 @@ def make_transform(model: Model, rbd_cfg: RBDConfig, params_shape=None):
     plan = make_plan(model, rbd_cfg, params_shape)
     return rbd_lib.RandomBasesTransform(
         plan, base_seed=rbd_cfg.base_seed, redraw=rbd_cfg.redraw,
-        backend=rbd_cfg.backend,
+        backend=rbd_cfg.backend, prng=rbd_cfg.prng_impl,
     )
 
 

@@ -1,0 +1,102 @@
+"""The CI bench-regression gate (benchmarks.kernel_throughput.
+check_regression): every violation branch must fire, and a clean
+fresh-vs-baseline pair must pass.  Pure-python -- no jax work."""
+
+import json
+
+import pytest
+
+from benchmarks.kernel_throughput import check_regression
+
+BASE_ROWS = [
+    {"stage": "generate_normal", "samples_per_s": 1.0, "wall_ms": 1.0},
+    {"stage": "per_leaf_step_jnp", "launches_per_step": 0,
+     "hbm_bytes_per_step": 2000.0},
+    {"stage": "packed_step_v5e_modeled", "launches_per_step": 2,
+     "hbm_bytes_per_step": 1000.0},
+    {"stage": "packed_independent_k2_v5e_modeled", "launches_per_step": 2,
+     "hbm_bytes_per_step": 1100.0},
+]
+
+
+@pytest.fixture
+def baseline(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"benchmark": "kernel_throughput",
+                             "rows": BASE_ROWS}))
+    return str(p)
+
+
+def _rows(**overrides):
+    rows = [dict(r) for r in BASE_ROWS]
+    for r in rows:
+        if r["stage"] in overrides:
+            r.update(overrides[r["stage"]])
+    return rows
+
+
+def test_identical_rows_pass(baseline):
+    assert check_regression(_rows(), baseline) == []
+
+
+def test_hbm_within_tolerance_passes(baseline):
+    rows = _rows(packed_step_v5e_modeled={"hbm_bytes_per_step": 1040.0})
+    assert check_regression(rows, baseline) == []
+
+
+def test_launch_count_violation(baseline):
+    rows = _rows(packed_step_v5e_modeled={"launches_per_step": 3})
+    v = check_regression(rows, baseline)
+    assert any("two-launch" in x for x in v), v
+
+
+def test_new_packed_row_is_gated_too(baseline):
+    """A packed row the baseline has never seen must still satisfy the
+    two-launch contract -- the gate may not grandfather new stages."""
+    rows = _rows() + [{"stage": "packed_independent_k16_v5e_modeled",
+                       "launches_per_step": 5,
+                       "hbm_bytes_per_step": 1.0}]
+    v = check_regression(rows, baseline)
+    assert any("k16" in x and "two-launch" in x for x in v), v
+
+
+def test_packed_row_missing_fields_flagged(baseline):
+    rows = _rows() + [{"stage": "packed_new_thing"}]
+    v = check_regression(rows, baseline)
+    assert any("launches_per_step field" in x for x in v), v
+    assert any("hbm_bytes_per_step field" in x for x in v), v
+
+
+def test_hbm_regression_violation(baseline):
+    rows = _rows(packed_step_v5e_modeled={"hbm_bytes_per_step": 1100.0})
+    v = check_regression(rows, baseline)
+    assert any("regressed" in x for x in v), v
+
+
+def test_non_packed_hbm_regression_also_gated(baseline):
+    rows = _rows(per_leaf_step_jnp={"hbm_bytes_per_step": 3000.0})
+    v = check_regression(rows, baseline)
+    assert any("per_leaf_step_jnp" in x and "regressed" in x for x in v), v
+
+
+def test_disappeared_packed_row(baseline):
+    rows = [r for r in _rows()
+            if r["stage"] != "packed_independent_k2_v5e_modeled"]
+    v = check_regression(rows, baseline)
+    assert any("disappeared" in x for x in v), v
+
+
+def test_disappeared_unpacked_row_tolerated(baseline):
+    """Non-packed rows carry no standing invariant; dropping one is a
+    benchmark edit, not a gate violation."""
+    rows = [r for r in _rows() if r["stage"] != "generate_normal"]
+    assert check_regression(rows, baseline) == []
+
+
+def test_baseline_row_losing_hbm_field_flagged(baseline):
+    rows = _rows(per_leaf_step_jnp={"hbm_bytes_per_step": None})
+    for r in rows:
+        if r["stage"] == "per_leaf_step_jnp":
+            del r["hbm_bytes_per_step"]
+    v = check_regression(rows, baseline)
+    assert sum("per_leaf_step_jnp" in x for x in v) == 1, v

@@ -49,6 +49,22 @@ def test_fused_rbd_apply_shim_warns():
         opt.fused_rbd_apply(t, params, grads, state, 0.1)
 
 
+def test_use_hw_prng_shim_warns_and_maps_to_prng():
+    """The per-leaf projection kernel's boolean flag is folded into the
+    PrngSpec backend: passing it (either value) warns, and the False
+    spelling still selects the bit-stable threefry path."""
+    from repro.core import rng
+    from repro.kernels import rbd_project
+
+    seed = rng.fold_seed(5)
+    g = jnp.arange(64, dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning, match="prng='hw'"):
+        u_shim, _ = rbd_project.project_flat(seed, g, 8,
+                                             use_hw_prng=False)
+    u_new, _ = rbd_project.project_flat(seed, g, 8, prng="threefry")
+    assert (jnp.asarray(u_shim) == jnp.asarray(u_new)).all()
+
+
 @pytest.mark.parametrize("strategy_kw", [
     dict(use_packed=True),                      # fused_packed
     dict(),                                     # coord_unfused (jnp)

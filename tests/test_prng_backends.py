@@ -1,0 +1,499 @@
+"""Pluggable PRNG backends (core.rng.PrngSpec): hw_emulated kernel-vs-
+oracle bit-exactness across all five distributions and ragged tails,
+distribution moment / sign-balance checks shared by threefry and
+hw_emulated, seed determinism, projection-tile == reconstruction-tile
+coherence, worker-fold coherence, the reason-coded impl resolution, and
+the communication/launch contract under ``prng_impl="hw_emulated"``.
+
+The ``test_hw_real_*`` tests exercise ``prng_impl="hw"`` with
+``interpret=False`` -- the real-hardware validation hook the ROADMAP asks
+for.  They self-skip off TPU, so the CI ``workflow_dispatch`` TPU lane
+can run this file unconditionally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RBDConfig
+from repro.core import make_plan, projector, rng
+from repro.core.rbd import RandomBasesTransform, rbd_step
+from repro.optim.subspace import SubspaceOptimizer, plan_from_flags
+
+PB, DB = 128, 8
+DISTS = ["normal", "uniform", "bernoulli", "rademacher", "sparse"]
+SPECS = ["threefry", "hw_emulated"]
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _params():
+    # ragged on purpose (same fixture family as test_packed_step): sizes
+    # that do not divide PB/DB, a scalar leaf, a stacked 3-layer leaf
+    return {
+        "w": jnp.ones((64, 32)),
+        "layers": {"k": jnp.ones((3, 40, 10))},
+        "s": jnp.ones(()),
+        "odd": jnp.ones((7, 73)),
+        "long": jnp.ones((700,)),
+    }
+
+
+def _grads(params, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(k, p.shape), params)
+
+
+def _plan(params, norm="rsqrt_dim", dist="normal"):
+    return make_plan(params, 96, granularity="layer",
+                     is_stacked=lambda n: n.startswith("layers"),
+                     distribution=dist, normalization=norm)
+
+
+@pytest.fixture(scope="module")
+def seed():
+    return rng.fold_seed(7)
+
+
+# ---------------------------------------------------------------------------
+# hw_emulated: bit-exact kernel vs PrngSpec-parameterized oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_hw_emulated_packed_kernel_bitexact_vs_oracle(seed, dist):
+    """Interpret-mode megakernels under the emulated hw discipline must
+    be IDENTICAL to the tile-table jnp oracle, for every distribution,
+    over ragged/stacked/scalar compartments -- the acceptance contract
+    that the hw code path's structure (tile keying, masking, two-stream
+    consumption for normal/sparse) is right, testable without a TPU."""
+    params = _params()
+    plan = _plan(params, dist=dist)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+
+    c_p, sq_p = projector.project_packed(
+        grads, plan, seed, backend="pallas", layout=layout,
+        return_norms=True, prng="hw_emulated")
+    c_j, sq_j = projector.project_packed(
+        grads, plan, seed, backend="jnp", layout=layout,
+        return_norms=True, prng="hw_emulated")
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_j))
+    np.testing.assert_array_equal(np.asarray(sq_p), np.asarray(sq_j))
+
+    new_p = rbd_step(params, grads, plan, seed, 0.25, backend="pallas",
+                     layout=layout, prng="hw_emulated")
+    new_j = rbd_step(params, grads, plan, seed, 0.25, backend="jnp",
+                     layout=layout, prng="hw_emulated")
+    for a, b in zip(jax.tree_util.tree_leaves(new_p),
+                    jax.tree_util.tree_leaves(new_j)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hw_emulated_workers_kernel_bitexact_vs_oracle(seed):
+    """The K-worker joint reconstruct-apply megakernel under hw_emulated
+    is bit-exact against the worker-scan oracle -- worker-folded segment
+    seeds key the tiles, so sharedseed workers regenerate coherently."""
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+    coords = projector.project_packed(
+        grads, plan, seed, backend="jnp", layout=layout,
+        prng="hw_emulated")
+    gathered = jnp.stack([coords, 0.5 * coords, -coords])
+    outs = [projector.reconstruct_apply_packed_workers(
+        gathered, plan, seed, params, 0.1, backend=b, layout=layout,
+        prng="hw_emulated") for b in ("pallas", "jnp")]
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hw_emulated_per_leaf_kernel_matches_tile_assembly(seed):
+    """The unified per-leaf projection kernel (the old use_hw_prng branch
+    folded onto PrngSpec) generates exactly spec.generate_tile per
+    (row0, col0) grid tile, ragged tail masked."""
+    spec = rng.get_prng_spec("hw_emulated")
+    from repro.kernels import rbd_project
+
+    q, dim, pb, db = 700, 16, 128, 8
+    g = jnp.arange(q, dtype=jnp.float32) / q
+    u_k, sq_k = rbd_project.project_flat(seed, g, dim, prng="hw_emulated",
+                                         pos_block=pb)
+    q_pad = -(-q // pb) * pb
+    p_mat = np.zeros((dim, q_pad), np.float32)
+    for di in range(dim // db):
+        for pj in range(q_pad // pb):
+            p_mat[di * db:(di + 1) * db, pj * pb:(pj + 1) * pb] = \
+                np.asarray(spec.generate_tile(
+                    seed, np.uint32(di * db), np.uint32(pj * pb),
+                    (db, pb), "normal"))
+    p_mat[:, q:] = 0.0
+    np.testing.assert_allclose(np.asarray(u_k), p_mat[:, :q] @ np.asarray(g),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sq_k), (p_mat ** 2).sum(axis=1),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# distribution moments / sign balance, shared across backends
+# ---------------------------------------------------------------------------
+
+
+def _big_tile(spec_name, dist, seed_val=5, shape=(8, 1 << 15)):
+    spec = rng.get_prng_spec(spec_name)
+    return np.asarray(spec.generate_tile(
+        rng.fold_seed(seed_val), np.uint32(0), np.uint32(0), shape,
+        dist)).ravel()
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_moments_normal(spec_name):
+    x = _big_tile(spec_name, "normal")
+    assert abs(x.mean()) < 0.01
+    assert abs(x.std() - 1.0) < 0.01
+    assert (np.abs(x) > 4).mean() < 1e-3
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_moments_uniform(spec_name):
+    x = _big_tile(spec_name, "uniform")
+    assert x.min() >= -1.0 and x.max() < 1.0
+    assert abs(x.mean()) < 0.02
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+@pytest.mark.parametrize("dist", ["bernoulli", "rademacher"])
+def test_sign_balance_rademacher(spec_name, dist):
+    x = _big_tile(spec_name, dist)
+    assert set(np.unique(x)) == {-1.0, 1.0}
+    assert abs(x.mean()) < 0.02
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_moments_sparse(spec_name):
+    """Achlioptas sparse: P(0)=2/3, signs +-sqrt(3) balanced, unit
+    variance -- and the TWO-stream consumption is load-bearing (sign and
+    magnitude must be independent streams)."""
+    x = _big_tile(spec_name, "sparse")
+    assert abs((x == 0).mean() - 2.0 / 3.0) < 0.02
+    nz = x[x != 0]
+    np.testing.assert_allclose(np.abs(nz), np.sqrt(3.0), rtol=1e-6)
+    assert abs((nz > 0).mean() - 0.5) < 0.02
+    assert abs(x.var() - 1.0) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# determinism and tile keying
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_seed_determinism_and_decorrelation(spec_name):
+    spec = rng.get_prng_spec(spec_name)
+    s1, s2 = rng.fold_seed(1), rng.fold_seed(2)
+    a = np.asarray(spec.generate_tile(s1, 8, 128, (8, 4096), "normal"))
+    b = np.asarray(spec.generate_tile(s1, 8, 128, (8, 4096), "normal"))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(spec.generate_tile(s2, 8, 128, (8, 4096), "normal"))
+    assert abs(np.corrcoef(a.ravel(), c.ravel())[0, 1]) < 0.02
+    # a different tile of the SAME seed is a fresh stream too
+    d = np.asarray(spec.generate_tile(s1, 16, 128, (8, 4096), "normal"))
+    assert abs(np.corrcoef(a.ravel(), d.ravel())[0, 1]) < 0.02
+
+
+def test_hw_emulated_is_tile_keyed_threefry_is_not():
+    """The documented trade-off: threefry values are a function of global
+    position (tiling-blind); hw-discipline values are keyed by their
+    tile's (row0, col0) identity."""
+    s = rng.fold_seed(3)
+    tf = rng.get_prng_spec("threefry")
+    em = rng.get_prng_spec("hw_emulated")
+    assert not tf.tile_keyed and em.tile_keyed
+    big_tf = np.asarray(tf.generate_tile(s, 0, 0, (16, 256), "normal"))
+    sub_tf = np.asarray(tf.generate_tile(s, 8, 128, (8, 128), "normal"))
+    np.testing.assert_array_equal(big_tf[8:, 128:], sub_tf)
+    big_em = np.asarray(em.generate_tile(s, 0, 0, (16, 256), "normal"))
+    sub_em = np.asarray(em.generate_tile(s, 8, 128, (8, 128), "normal"))
+    assert not np.allclose(big_em[8:, 128:], sub_em)
+
+
+# ---------------------------------------------------------------------------
+# projection tile == reconstruction tile coherence (per backend)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_projection_reconstruction_tile_coherence(spec_name):
+    """The basis implied by the projection launch and the one regenerated
+    by the reconstruct-apply launch must be the SAME matrix: extract P
+    column-wise (project one-hot gradients) and row-wise (reconstruct
+    one-hot coordinates) through the tile-table oracle and compare
+    exactly.  This is what tile-coordinate keying buys -- the pt_*/rt_*
+    tables enumerate identical (seed, row0, col0) tiles."""
+    params = {"a": jnp.ones((5, 11)), "b": jnp.ones((37,))}
+    plan = make_plan(params, 24, granularity="leaf")
+    layout = plan.packed(PB, DB)
+    seed = rng.fold_seed(11)
+    seeds = projector.segment_seeds(plan, seed)
+
+    eye_q = jnp.eye(layout.q_packed, dtype=jnp.float32)
+    u_cols, _ = jax.vmap(
+        lambda g: projector._project_packed_jnp(seeds, g, layout,
+                                                "normal", spec_name))(eye_q)
+    p_from_proj = np.asarray(u_cols).T           # (d_packed, q_packed)
+
+    eye_d = jnp.eye(layout.d_packed, dtype=jnp.float32)
+    zeros = jnp.zeros((layout.q_packed,), jnp.float32)
+    rows = jax.vmap(
+        lambda sc: projector._reconstruct_apply_packed_jnp(
+            seeds, -sc, zeros, layout, "normal", spec_name))(eye_d)
+    p_from_recon = np.asarray(rows)              # (d_packed, q_packed)
+
+    np.testing.assert_array_equal(p_from_proj, p_from_recon)
+
+
+@pytest.mark.parametrize("spec_name", SPECS)
+def test_worker_fold_coherence(spec_name):
+    """Worker k's slice of the joint K-worker reconstruction equals the
+    single-worker reconstruction under worker k's folded seed: the
+    worker-major tables key tiles with fold(seed, k+1)-derived segment
+    seeds, identically in both kernels."""
+    params = {"a": jnp.ones((5, 11)), "b": jnp.ones((37,))}
+    plan = make_plan(params, 24, granularity="leaf")
+    layout = plan.packed(PB, DB)
+    seed = rng.fold_seed(13)
+    k_workers = 3
+    sc = jax.random.normal(jax.random.PRNGKey(1), (layout.d_packed,),
+                           jnp.float32) * np.asarray(layout.coord_valid)
+    for k in range(k_workers):
+        gathered = jnp.zeros((k_workers, layout.d_packed)).at[k].set(sc)
+        joint = projector.reconstruct_apply_packed_workers(
+            gathered, plan, seed, params, 1.0, backend="jnp",
+            layout=layout, prepacked=False, prng=spec_name)
+        wseed = projector.worker_base_seeds(seed, k_workers)[k]
+        single = projector.reconstruct_apply_packed(
+            sc, plan, wseed, params, 1.0, backend="jnp", layout=layout,
+            prepacked=False, prng=spec_name)
+        for a, b in zip(jax.tree_util.tree_leaves(joint),
+                        jax.tree_util.tree_leaves(single)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# reason-coded impl resolution
+# ---------------------------------------------------------------------------
+
+
+def test_prng_resolution_reason_codes():
+    cases = [
+        (dict(use_packed=True, backend="pallas", prng_impl="threefry"),
+         "threefry", "bit-stable"),
+        # hw without a TPU -> emulated, with the logged reason
+        (dict(use_packed=True, backend="pallas", prng_impl="hw"),
+         "hw_emulated", "without a TPU"),
+        # hw on the jnp backend -> emulated (no kernel to run it in)
+        (dict(use_packed=True, backend="jnp", prng_impl="hw"),
+         "hw_emulated", "jnp backend"),
+        # hw with real TPU kernels available -> hw
+        (dict(use_packed=True, backend="pallas", prng_impl="hw",
+              hw_prng_available=True), "hw", "hardware PRNG"),
+        (dict(use_packed=True, backend="pallas",
+              prng_impl="hw_emulated"), "hw_emulated", "counter stub"),
+        # tile-keyed impls need the packed tile tables: per-leaf
+        # strategies fall back to threefry
+        (dict(prng_impl="hw_emulated"), "threefry", "per-leaf"),
+        (dict(backend="pallas", prng_impl="hw"), "threefry", "per-leaf"),
+        (dict(rbd_enabled=False, prng_impl="hw"), "threefry",
+         "no basis generation"),
+    ]
+    for flags, impl, marker in cases:
+        ep = plan_from_flags(**flags)
+        assert ep.prng_impl == impl, (flags, ep)
+        assert marker in ep.prng_reason, (flags, ep.prng_reason)
+
+
+def test_unknown_impl_rejected():
+    with pytest.raises(ValueError):
+        rng.get_prng_spec("xorshift")
+    with pytest.raises(ValueError):
+        plan_from_flags(use_packed=True, prng_impl="xorshift")
+
+
+def test_hw_spec_rejected_by_jnp_oracle(seed):
+    params = _params()
+    plan = _plan(params)
+    with pytest.raises(ValueError, match="hw"):
+        projector.project_packed(_grads(params), plan, seed,
+                                 backend="jnp", prng="hw")
+
+
+# ---------------------------------------------------------------------------
+# communication / launch contract with hw_emulated (acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+def _sharded_train_step(optimizer, rbd_mode, backend):
+    """shard_map-wrapped train step (same harness as
+    test_subspace_optimizer) with prng_impl='hw_emulated'."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig
+    from repro.data import synthetic
+    from repro.launch.mesh import _make_mesh, shard_map_compat
+    from repro.models import get_model
+    from repro.train import step as steplib
+
+    n_dev = jax.device_count()
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        model=cfg, optimizer=optimizer,
+        rbd=RBDConfig(total_dim=256, backend=backend, packed="on",
+                      mode=rbd_mode, prng_impl="hw_emulated"),
+        learning_rate=0.5, steps=1, batch_size=2 * n_dev, seq_len=16)
+    batch = next(synthetic.lm_batches(0, 2 * n_dev, 16, cfg.vocab))
+    init_state, train_step, sub = steplib.make_train_step(
+        model, tcfg, axis_name="data", k_workers=n_dev,
+        return_optimizer=True)
+    eplan = sub.plan_execution()
+    assert eplan.strategy == "fused_packed"
+    assert eplan.prng_impl == "hw_emulated", eplan
+    state = init_state(jax.random.PRNGKey(0))
+
+    mesh = _make_mesh((n_dev,), ("data",))
+    repl = jax.tree_util.tree_map(lambda _: P(), state)
+    fn = shard_map_compat(
+        train_step, mesh=mesh,
+        in_specs=(repl, {"tokens": P("data"), "labels": P("data")}),
+        out_specs=(repl, {"ce": P(), "aux": P(), "loss": P(),
+                          "update_norm": P()}),
+        manual_axes=("data",))
+    return fn, state, batch, sub
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_sharedseed_contract_hw_emulated(optimizer):
+    """Acceptance: 2 launches, ONE packed-coordinate pmean, nothing
+    D-sized -- unchanged under the emulated hw PRNG, for all three
+    coordinate-space optimizers."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(optimizer,
+                                                "shared_basis", "pallas")
+    assert_coordinate_exchange(
+        fn, state, batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("pmean", "psum"), n_launches=2)
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_independent_bases_contract_hw_emulated(optimizer):
+    """Acceptance: the K-worker joint subspace keeps 2 launches + ONE
+    coordinate all-gather under the emulated hw PRNG."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(
+        optimizer, "independent_bases", "pallas")
+    assert_coordinate_exchange(
+        fn, state, batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("all_gather",), n_launches=2)
+
+
+# ---------------------------------------------------------------------------
+# real-hardware validation (prng_impl="hw", interpret=False) -- the CI
+# workflow_dispatch TPU lane runs these; they self-skip off TPU
+# ---------------------------------------------------------------------------
+
+tpu_only = pytest.mark.skipif(
+    not ON_TPU, reason="prng_impl='hw' needs a real TPU "
+    "(pltpu.prng_random_bits has no CPU/interpret lowering)")
+
+
+@tpu_only
+def test_hw_real_seed_determinism(seed):  # pragma: no cover - TPU lane
+    """Same (seed, tile) -> identical bits across kernel launches: the
+    property the whole regenerate-don't-store scheme rests on."""
+    from repro.kernels import ops
+
+    assert ops.hw_prng_available(), \
+        "TPU lane must run with REPRO_PALLAS_INTERPRET=0"
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed(PB, DB)
+    grads = _grads(params)
+    c1 = projector.project_packed(grads, plan, seed, backend="pallas",
+                                  layout=layout, prng="hw")
+    c2 = projector.project_packed(grads, plan, seed, backend="pallas",
+                                  layout=layout, prng="hw")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    c3 = projector.project_packed(grads, plan, rng.fold_seed(99),
+                                  backend="pallas", layout=layout,
+                                  prng="hw")
+    assert not np.allclose(np.asarray(c1), np.asarray(c3))
+
+
+@tpu_only
+@pytest.mark.parametrize("dist", DISTS)
+def test_hw_real_projection_reconstruction_parity(seed, dist):
+    # pragma: no cover - TPU lane
+    """P extracted via one-hot reconstructions equals P via one-hot
+    projections on the REAL kernels: the projection and reconstruct-apply
+    launches regenerate identical hardware-PRNG tiles."""
+    params = {"a": jnp.ones((5, 11)), "b": jnp.ones((37,))}
+    plan = make_plan(params, 16, granularity="leaf", distribution=dist)
+    layout = plan.packed(PB, DB)
+    seed2 = rng.fold_seed(21)
+    zeros = jnp.zeros((layout.q_packed,), jnp.float32)
+    rows, cols = [], []
+    for i in range(layout.d_packed):
+        sc = jnp.zeros((layout.d_packed,), jnp.float32).at[i].set(-1.0)
+        rows.append(np.asarray(projector._get_backend(
+            "pallas").reconstruct_apply_packed(
+            projector.segment_seeds(plan, seed2), sc, zeros, layout,
+            dist, "hw")))
+    p_recon = np.stack(rows)
+    for j in range(layout.q_packed):
+        g = jnp.zeros((layout.q_packed,), jnp.float32).at[j].set(1.0)
+        u, _ = projector._get_backend("pallas").project_packed(
+            projector.segment_seeds(plan, seed2), g, layout, dist, "hw")
+        cols.append(np.asarray(u))
+    p_proj = np.stack(cols).T
+    np.testing.assert_array_equal(p_proj, p_recon)
+
+
+@tpu_only
+@pytest.mark.parametrize("dist", DISTS)
+def test_hw_real_moments(dist):  # pragma: no cover - TPU lane
+    """Moment / sign-balance checks on basis rows extracted from the real
+    hardware-PRNG kernels (one-hot reconstructions)."""
+    params = {"big": jnp.ones((64, 512))}
+    plan = make_plan(params, 8, granularity="leaf", distribution=dist,
+                     normalization="none")
+    layout = plan.packed(512, 8)
+    seed = rng.fold_seed(31)
+    zeros = jnp.zeros((layout.q_packed,), jnp.float32)
+    rows = []
+    for i in range(plan.total_dim):
+        sc = jnp.zeros((layout.d_packed,), jnp.float32).at[i].set(-1.0)
+        rows.append(np.asarray(projector._get_backend(
+            "pallas").reconstruct_apply_packed(
+            projector.segment_seeds(plan, seed), sc, zeros, layout,
+            dist, "hw")))
+    x = np.stack(rows).ravel()
+    if dist == "normal":
+        assert abs(x.mean()) < 0.01 and abs(x.std() - 1.0) < 0.01
+    elif dist == "uniform":
+        assert x.min() >= -1.0 and x.max() < 1.0 and abs(x.mean()) < 0.02
+    elif dist in ("bernoulli", "rademacher"):
+        assert set(np.unique(x)) == {-1.0, 1.0} and abs(x.mean()) < 0.02
+    else:
+        assert abs((x == 0).mean() - 2.0 / 3.0) < 0.02
+        assert abs(x.var() - 1.0) < 0.02
