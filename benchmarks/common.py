@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

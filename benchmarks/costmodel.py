@@ -20,7 +20,6 @@ import dataclasses
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig, RBDConfig
 

@@ -12,8 +12,6 @@ from repro.core.rbd import RandomBasesTransform
 
 
 def _train_phase(params, loss_fn, transform, lr, steps, seed):
-    import jax.numpy as jnp
-
     from repro.data import synthetic
 
     state = transform.init(params) if transform else None

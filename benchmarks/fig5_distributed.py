@@ -13,7 +13,6 @@ statistically-equivalent seed the basis is drawn from)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import distributed, make_plan, projector

@@ -37,6 +37,7 @@ trajectory is tracked across PRs.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -234,30 +235,73 @@ def fused_step_benchmark(quick: bool = True):
     # read/write; generation work scales by K on the reconstruction pass.
     from repro.core import distributed
 
-    for k in (2, 8):
-        layout = plan.packed()
-        stored = projector.pack_tree(params, plan, layout)
+    def independent_row(stage, plan_k, k, *, exact):
+        """Launch-count + modeled row for one K-worker joint-subspace
+        config.  ``exact=True`` exercises the widened coords+norms
+        exchange: the projection emits row norms (same launch) and the
+        gathered (K, d) norms fold into the scale table; HBM adds the
+        gathered norms read/write and the comm payload doubles."""
+        layout_k = plan_k.packed()
+        stored_k = projector.pack_tree(params, plan_k, layout_k)
+        g_k = projector.pack_tree(grads, plan_k, layout_k)
 
         def worker_step(p, g, k=k):
-            coords = projector.project_packed(
-                g, plan, seed, backend="pallas", layout=layout,
-                prepacked=True)
-            gathered = jnp.broadcast_to(coords, (k, layout.d_packed))
+            proj = projector.project_packed(
+                g, plan_k, seed, backend="pallas", layout=layout_k,
+                prepacked=True, return_norms=exact)
+            coords, sq = proj if exact else (proj, None)
+            gathered = jnp.broadcast_to(coords, (k, layout_k.d_packed))
+            gathered_sq = (
+                jnp.broadcast_to(sq, (k, layout_k.d_packed))
+                if exact else None)
             return projector.reconstruct_apply_packed_workers(
-                gathered, plan, seed, p, lr / k, backend="pallas",
-                layout=layout, prepacked=True)
+                gathered, plan_k, seed, p, lr / k, backend="pallas",
+                row_sq=gathered_sq, layout=layout_k, prepacked=True)
 
-        n_launches = count_pallas_calls(worker_step, stored, g_packed)
-        assert n_launches == 2, (k, n_launches)
-        comm = distributed.grad_comm_bytes(plan, d_total, k,
+        n_launches = count_pallas_calls(worker_step, stored_k, g_k)
+        assert n_launches == 2, (stage, n_launches)
+        comm = distributed.grad_comm_bytes(plan_k, d_total, k,
                                            "independent_bases",
-                                           packed=True)
+                                           packed=True, widened=exact)
         samples_k = samples // 2 + k * (samples // 2)  # 1 proj + K recon
-        row = modeled_row(
-            f"packed_independent_k{k}_v5e_modeled", n_launches,
-            12.0 * d_total + 8.0 * k * layout.d_packed, samples_k)
+        hbm = 12.0 * d_total + 8.0 * k * layout_k.d_packed \
+            + (8.0 if exact else 0.0) * k * layout_k.d_packed
+        row = modeled_row(stage, n_launches, hbm, samples_k)
         row["comm_bytes_per_step"] = comm["bytes_per_step"]
         rows.append(row)
+
+    for k in (2, 8):
+        independent_row(f"packed_independent_k{k}_v5e_modeled", plan, k,
+                        exact=False)
+
+    # 'exact' normalization (the paper's best-performing configurations)
+    # stays on the packed two-launch step: the projection megakernel
+    # emits per-direction squared row norms as a SECOND (d,) output of
+    # the same tile sweep and the exact scales fold into the host-side
+    # scale tables.  HBM adds the (d,) norms write+read; distributed,
+    # the one collective WIDENS to the concatenated coords+norms buffer
+    # (2x payload, accounted by grad_comm_bytes(widened=True)).  These
+    # rows put the exact path under the same CI regression gate
+    # (launches/step, modeled HBM, row presence) as the static-factor
+    # rows.
+    plan_exact = dataclasses.replace(plan, normalization="exact")
+    layout_x = plan_exact.packed()
+    t_exact = RandomBasesTransform(plan_exact, 0, backend="pallas")
+    sub_x = SubspaceOptimizer(transform=t_exact, learning_rate=lr,
+                              use_packed=True)
+    stored_x = sub_x.prepare_params(params)
+    g_packed_x = projector.pack_tree(grads, plan_exact, layout_x)
+    st_rx = sub_x.init_rbd_state(params)
+    st_ox = sub_x.init_opt_state(params)
+    n_launches = count_pallas_calls(
+        lambda p, g: sub_x.step(p, g, st_rx, st_ox)[0],
+        stored_x, g_packed_x)
+    assert n_launches == 2, n_launches
+    rows.append(modeled_row(
+        "packed_exact_v5e_modeled", n_launches,
+        12.0 * d_total + 8.0 * layout_x.d_packed))
+    independent_row("packed_independent_exact_k2_v5e_modeled",
+                    plan_exact, 2, exact=True)
     return rows
 
 

@@ -18,7 +18,6 @@ reports them separately scaled by the VPU/MXU throughput ratio.
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 import numpy as np
@@ -153,14 +153,14 @@ def make_plan(
 
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     names = [_leaf_name(p) for p, _ in flat]
-    leaves = [l for _, l in flat]
+    leaves = [leaf for _, leaf in flat]
 
     if granularity in ("global", "even"):
         # ONE basis over the raveled parameter vector (Li et al. / paper
         # baseline), or K even compartments of it (paper Fig. 4).  The
         # projector flattens/unflattens; zero-padding makes K | D.
         k = 1 if granularity == "global" else max(1, n_compartments)
-        d_total = int(sum(np.prod(l.shape, dtype=np.int64) for l in leaves))
+        d_total = int(sum(np.prod(leaf.shape, dtype=np.int64) for leaf in leaves))
         pad = (-d_total) % k
         size = (d_total + pad) // k
         lp = LeafPlan(

@@ -20,10 +20,12 @@ the combined ``("pod", "data")`` axes in the multi-pod mesh):
   The PACKED flavor (:func:`independent_bases_coords` + the K-worker
   reconstruct-apply megakernel driven by ``optim.subspace``) keeps the
   step at two kernel launches for any K and its exchange at exactly one
-  all-gather of the (d_packed,) coordinate buffer; the per-leaf
+  all-gather of the (d_packed,) coordinate buffer -- widened to the
+  concatenated (2*d_packed,) coords+norms buffer under 'exact'
+  normalization, still one collective; the per-leaf
   :func:`independent_bases_update` below remains the full-space
-  fallback (weight decay, 'exact'/'orthonormal' normalization,
-  model-sharded params).
+  fallback (weight decay, 'orthonormal' normalization, model-sharded
+  params).
 
 Both functions are written to run inside ``shard_map`` (manual axes contain
 ``axis_name``); gradients may additionally be sharded over a ``model``
@@ -49,6 +51,49 @@ def worker_seed(transform: RandomBasesTransform, state: RBDState, axis_name):
     k = jax.lax.axis_index(axis_name)
     base = transform.step_seed(state.step)
     return rng.fold_seed(base, k.astype(jnp.uint32) + jnp.uint32(1))
+
+
+# ---------------------------------------------------------------------------
+# widened coords+norms exchange ('exact' normalization on the packed path)
+# ---------------------------------------------------------------------------
+
+
+def widen_coord_buffer(coords, sq):
+    """Concatenate the packed coordinate buffer with its squared row
+    norms along the last axis: (d_packed,) x2 -> (2*d_packed,) (or with
+    a leading worker axis).  Under 'exact' normalization this WIDENED
+    buffer is the single per-step exchange quantity -- the collective
+    count stays at ONE, its payload doubles (still d-sized, never
+    D-sized)."""
+    return jnp.concatenate(
+        [coords.astype(jnp.float32), sq.astype(jnp.float32)], axis=-1)
+
+
+def split_coord_buffer(buf, d_packed: int):
+    """Inverse of :func:`widen_coord_buffer`: (..., 2*d_packed) ->
+    ((..., d_packed) coords, (..., d_packed) sq)."""
+    return buf[..., :d_packed], buf[..., d_packed:]
+
+
+def shared_basis_packed_exchange(coords, sq, axis_name, *,
+                                 widened: bool = False):
+    """The packed sharedseed exchange: ONE pmean per step.
+
+    With ``widened=False`` (static-factor normalizations) only the
+    (d_packed,) coordinate buffer crosses the wire and the locally
+    computed ``sq`` passes through untouched.  With ``widened=True``
+    ('exact' normalization) the pmean carries the concatenated
+    (2*d_packed,) coords+norms buffer -- still exactly one collective;
+    the norms are identical on every worker (shared seed -> shared
+    basis), so their mean is a no-op up to summation rounding, and
+    post-exchange every worker holds the identical (coords, sq) pair
+    its reconstruct-apply scale table is built from.
+    """
+    if not widened:
+        return jax.lax.pmean(coords, axis_name=axis_name), sq
+    buf = jax.lax.pmean(widen_coord_buffer(coords, sq),
+                        axis_name=axis_name)
+    return split_coord_buffer(buf, coords.shape[-1])
 
 
 def shared_basis_coords(
@@ -106,6 +151,7 @@ def independent_bases_coords(
     layout=None,
     prepacked: bool = True,
     prng="threefry",
+    return_norms: bool = False,
 ):
     """The PACKED independent-bases exchange primitive (Algorithm 1 on
     the packed representation): project the worker's prepacked gradient
@@ -117,16 +163,33 @@ def independent_bases_coords(
     post-gather state update is deterministic, so worker states stay
     replicated) and the K-worker reconstruct-apply megakernel
     regenerates every basis locally.
+
+    ``return_norms=True`` ('exact' normalization): the all-gather WIDENS
+    to the concatenated (2*d_packed,) coords+norms buffer -- each
+    worker's squared row norms ride the same single collective, because
+    the K-worker reconstruction needs every OTHER worker's norms to fold
+    its exact per-direction scales, and regenerating them locally would
+    cost K extra generation passes.  Returns the gathered
+    ((K, d_packed), (K, d_packed)) pair instead of one (K, d_packed)
+    array.
     """
     from repro.core import projector
 
     plan = transform.plan
     layout = layout if layout is not None else plan.packed()
     my_seed = worker_seed(transform, state, axis_name)
-    coords = projector.project_packed(
+    if not return_norms:
+        coords = projector.project_packed(
+            local_grads, plan, my_seed, backend=transform.backend,
+            layout=layout, prepacked=prepacked, prng=prng)
+        return jax.lax.all_gather(coords, axis_name=axis_name)
+    coords, sq = projector.project_packed(
         local_grads, plan, my_seed, backend=transform.backend,
-        layout=layout, prepacked=prepacked, prng=prng)
-    return jax.lax.all_gather(coords, axis_name=axis_name)
+        layout=layout, prepacked=prepacked, prng=prng,
+        return_norms=True)
+    gathered = jax.lax.all_gather(widen_coord_buffer(coords, sq),
+                                  axis_name=axis_name)
+    return split_coord_buffer(gathered, layout.d_packed)
 
 
 def independent_bases_update(
@@ -180,7 +243,8 @@ def independent_bases_update(
 
 
 def grad_comm_bytes(plan, n_params: int, k_workers: int, mode: str,
-                    *, packed: bool = False) -> dict:
+                    *, packed: bool = False,
+                    widened: bool = False) -> dict:
     """Napkin accounting of per-step gradient communication, used by the
     benchmarks and EXPERIMENTS.md tables.
 
@@ -188,8 +252,13 @@ def grad_comm_bytes(plan, n_params: int, k_workers: int, mode: str,
     the (d_packed,) coordinate buffer (d padded per-segment to the
     dir_block tile boundary), exchanged in ONE collective per step --
     one pmean (shared_basis) or one all-gather (independent_bases).
+    ``widened=True`` accounts the 'exact'-normalization exchange: the
+    one collective carries the concatenated coords+norms buffer, so the
+    payload doubles (still d-sized, never D-sized).
     """
     d = plan.packed().d_packed if packed else plan.total_dim
+    if widened:
+        d *= 2
     if mode == "sgd":
         payload = 4 * n_params * 2 * (k_workers - 1) / k_workers  # ring AR
     elif mode == "shared_basis":

@@ -256,8 +256,8 @@ def _norm_scales(plan: Plan, lp: LeafPlan, u, sq):
 def _ravel_tree(tree, plan: Plan):
     """Pytree -> the (K, size) virtual leaf of a flatten plan."""
     vec = jnp.concatenate(
-        [l.reshape(-1).astype(jnp.float32)
-         for l in jax.tree_util.tree_leaves(tree)])
+        [x.reshape(-1).astype(jnp.float32)
+         for x in jax.tree_util.tree_leaves(tree)])
     if plan.pad:
         vec = jnp.concatenate([vec, jnp.zeros((plan.pad,), jnp.float32)])
     lp = plan.leaves[0]
@@ -270,9 +270,9 @@ def _unravel_tree(flat2d, plan: Plan, params_like):
         vec = vec[: vec.shape[0] - plan.pad]
     leaves = jax.tree_util.tree_leaves(params_like)
     out, off = [], 0
-    for l in leaves:
-        n = int(np.prod(l.shape)) if l.shape else 1
-        out.append(vec[off: off + n].reshape(l.shape).astype(l.dtype))
+    for ref in leaves:
+        n = int(np.prod(ref.shape)) if ref.shape else 1
+        out.append(vec[off: off + n].reshape(ref.shape).astype(ref.dtype))
         off += n
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(params_like), out)
@@ -360,7 +360,7 @@ def reconstruct(coords: list, plan: Plan, seed, params_like: Any,
 
     leaves = jax.tree_util.tree_leaves(params_like)
     treedef = jax.tree_util.tree_structure(params_like)
-    out = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+    out = [jnp.zeros(x.shape, x.dtype) for x in leaves]
     for i, (lp, c) in enumerate(zip(plan.leaves, coords)):
         sq_i = row_sq[i] if row_sq is not None else None
         delta = one_leaf(lp, c, sq_i, leaves[lp.leaf_idx].dtype)
@@ -534,7 +534,10 @@ def _packed_norm_factor(plan: Plan, layout, sq):
 
     The factor is applied once to get communicated coordinates
     (c = u * f) and once more for the reconstruction scale (s = c * f),
-    mirroring :func:`_norm_scales` / :func:`_recon_scale`.
+    mirroring :func:`_norm_scales` / :func:`_recon_scale`.  For 'exact',
+    ``sq`` may carry a leading worker axis ((k_workers, d_packed)
+    gathered norms) -- the (d_packed,) validity mask broadcasts and the
+    result is each worker's own per-direction factor row.
     """
     if plan.normalization == "rsqrt_dim":
         return jnp.asarray(layout.coord_inv_sqrt_q)
@@ -739,8 +742,10 @@ def reconstruct_apply_packed(coords_packed, plan: Plan, seed, params: Any,
 # Normalizations whose reconstruction scale is a STATIC per-slot factor
 # (no per-basis row norms).  The K-worker joint reconstruction regenerates
 # every other worker's basis from the seed schedule alone; 'exact'
-# normalization would additionally need every worker's row norms (a second
-# generation pass or a second collective), so it takes the per-leaf path.
+# normalization additionally needs every worker's row norms, which ride
+# the ONE widened coords+norms all-gather (see core.distributed) and
+# land here as ``row_sq`` -- only 'orthonormal' still takes the per-leaf
+# path.
 STATIC_FACTOR_NORMALIZATIONS = ("rsqrt_dim", "none")
 
 
@@ -755,7 +760,8 @@ def worker_base_seeds(seed, k_workers: int):
 
 def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
                                      params: Any, eta, *,
-                                     backend: str = "jnp", layout=None,
+                                     backend: str = "jnp", row_sq=None,
+                                     layout=None,
                                      prepacked: bool = False,
                                      prng="threefry"):
     """K-worker joint fused update (packed ``independent_bases`` mode):
@@ -765,27 +771,41 @@ def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
     applied to the whole parameter buffer in ONE launch, regenerating
     every worker's basis locally from the shared seed schedule
     (``fold_seed(seed, k + 1)``).  ``coords_gathered`` is the
-    (k_workers, d_packed) all-gathered normalized coordinate buffer --
-    the only quantity that crossed the wire; ``eta`` should fold the
-    1/K mean.  The K·d-dimensional joint update never exists in HBM.
+    (k_workers, d_packed) all-gathered normalized coordinate buffer;
+    ``eta`` should fold the 1/K mean.  The K·d-dimensional joint update
+    never exists in HBM.
 
-    Requires a static-factor normalization
-    (:data:`STATIC_FACTOR_NORMALIZATIONS`): 'exact' would need every
-    worker's regenerated row norms and takes the per-leaf path instead
-    (see ``optim.subspace.plan_from_flags``).
+    Supports the factor-style normalizations: the static per-slot
+    factors (:data:`STATIC_FACTOR_NORMALIZATIONS`) need nothing beyond
+    the seed schedule, while 'exact' folds each worker's per-direction
+    scale ``rsqrt(max(sq, 1e-30))`` into its rows of the scale table --
+    ``row_sq`` is the (k_workers, d_packed) gathered squared row norms
+    that rode the ONE widened coords+norms all-gather (see
+    ``core.distributed.independent_bases_coords(return_norms=True)``).
+    Only 'orthonormal' still takes the per-leaf path (see
+    ``optim.subspace.plan_from_flags``).
     """
-    if plan.normalization not in STATIC_FACTOR_NORMALIZATIONS:
+    if plan.normalization not in STATIC_FACTOR_NORMALIZATIONS \
+            and plan.normalization != "exact":
         raise ValueError(
             f"normalization {plan.normalization!r} is not supported by "
-            "the K-worker packed reconstruction (needs a static per-slot "
-            "factor); use the per-leaf independent_bases path")
+            "the K-worker packed reconstruction (needs a factor-style "
+            "scale); use the per-leaf independent_bases path")
+    if plan.normalization == "exact" and row_sq is None:
+        raise ValueError(
+            "'exact' normalization needs every worker's row norms "
+            "(row_sq, the (k_workers, d_packed) buffer gathered by the "
+            "widened coords+norms collective); regenerating them here "
+            "would cost K extra generation passes")
     layout = layout if layout is not None else plan.packed()
     k_workers = int(coords_gathered.shape[0])
     wseeds = worker_base_seeds(seed, k_workers)
     seg_seed_table = jax.vmap(
         lambda s: segment_seeds(plan, s))(wseeds).reshape(-1)
-    factor = _packed_norm_factor(plan, layout, None)
-    scale = (coords_gathered.astype(jnp.float32) * factor[None, :]
+    # (d_packed,) static factor, or (k_workers, d_packed) exact factors
+    # -- either broadcasts against the gathered coordinate buffer
+    factor = jnp.atleast_2d(_packed_norm_factor(plan, layout, row_sq))
+    scale = (coords_gathered.astype(jnp.float32) * factor
              * jnp.float32(eta))
     theta = (params.astype(jnp.float32) if prepacked
              else pack_tree(params, plan, layout))

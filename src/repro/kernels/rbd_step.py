@@ -7,7 +7,12 @@ megakernels instead consume the *packed* buffers of
 ``core.compartments.PackedLayout``: every compartment of every leaf is a
 run of tiles in one linear grid, so one optimizer step is exactly
 
-  1. ``project_packed``        -- u = P_k @ g_k for ALL compartments k
+  1. ``project_packed``        -- u = P_k @ g_k for ALL compartments k,
+     plus per-direction squared row norms as a SECOND (d_packed,)
+     output from the same tile sweep (an extra output, not an extra
+     launch) -- the 'exact' normalization's rsqrt(||phi||^2) factors
+     fold into the host-side scale tables below, so exact-normalized
+     steps stay at two launches;
   2. ``reconstruct_apply_packed`` -- theta' = theta - (eta*c_hat_k) @ P_k
 
 regardless of compartment count.  The ragged (segment, dir_block,
@@ -216,8 +221,10 @@ def reconstruct_apply_packed(
     """One launch: theta' = theta - scale @ P for ALL segments, fused.
 
     ``scale_packed`` ((d_packed,) f32) must already fold in learning rate
-    and normalization AND be zero on padding slots (multiply by
-    ``layout.coord_valid``) -- padded basis rows are generated and would
+    and normalization -- including the 'exact' per-direction factor
+    rsqrt(max(sq, 1e-30)) built from the projection launch's second
+    output -- AND be zero on padding slots (multiply by
+    ``layout.coord_valid``); padded basis rows are generated and would
     otherwise contribute phantom directions.  ``theta_packed`` is the
     (q_packed,) f32 packed parameter buffer; the update never exists in
     HBM, only the new parameters are written.  With a tile-keyed ``prng``
@@ -296,7 +303,10 @@ def reconstruct_apply_packed_workers(
     ``fold_seed(step_seed, k + 1)``).  ``scale_gathered``:
     (k_workers, d_packed) f32 -- each worker's packed coordinates with
     learning rate (folding the 1/K mean) and normalization applied,
-    zero on padding slots.  ``theta_packed``: (q_packed,) f32.
+    zero on padding slots; under 'exact' normalization row k folds
+    worker k's per-direction rsqrt row-norm factors, gathered by the
+    widened coords+norms collective (``core.distributed``).
+    ``theta_packed``: (q_packed,) f32.
     """
     prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block

@@ -9,6 +9,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
       --shape train_4k [--multi-pod] [--mode rbd|sgd|sharedseed] \
       [--rbd-mode shared_basis|independent_bases] [--packed auto|on|off] \
+      [--normalization rsqrt_dim|exact|none|orthonormal] \
       [--prng-impl threefry|hw|hw_emulated] [--out reports/dryrun]
   PYTHONPATH=src python -m repro.launch.dryrun --all
 """
@@ -21,10 +22,8 @@ os.environ["XLA_FLAGS"] = (
 )
 
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import gzip  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
 import time  # noqa: E402
 from typing import Any  # noqa: E402
 
@@ -72,6 +71,7 @@ def model_flops(cfg, shape: InputShape) -> float:
 def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                        rbd_mode: str = "shared_basis",
                        packed: str = "auto",
+                       normalization: str = "rsqrt_dim",
                        prng_impl: str = "threefry"):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
@@ -90,7 +90,8 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     """
     cfg = model.cfg
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"), mode=rbd_mode,
-                        packed=packed, prng_impl=prng_impl)
+                        packed=packed, normalization=normalization,
+                        prng_impl=prng_impl)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
     transform = train_step_lib.make_transform(model, rbd_cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -214,7 +215,8 @@ def should_skip(cfg, shape: InputShape) -> str | None:
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "rbd", rbd_mode: str = "shared_basis",
-            packed: str = "auto", prng_impl: str = "threefry",
+            packed: str = "auto", normalization: str = "rsqrt_dim",
+            prng_impl: str = "threefry",
             out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
@@ -238,6 +240,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         fn, args_shape = build_train_inputs(model, shape, mode, mesh,
                                             rbd_mode=rbd_mode,
                                             packed=packed,
+                                            normalization=normalization,
                                             prng_impl=prng_impl)
     elif shape.kind == "prefill":
         fn, args_shape = build_prefill_inputs(model, shape)
@@ -330,6 +333,12 @@ def main():
                          "subspace (Algorithm 1)")
     ap.add_argument("--packed", default="auto",
                     choices=["auto", "on", "off"])
+    ap.add_argument("--normalization", default="rsqrt_dim",
+                    choices=["rsqrt_dim", "exact", "none", "orthonormal"],
+                    help="basis-row normalization; 'exact' keeps the "
+                         "packed two-launch step with ONE widened "
+                         "coords+norms collective (the printed plan "
+                         "reason shows the routing)")
     ap.add_argument("--prng-impl", default="threefry",
                     choices=["threefry", "hw", "hw_emulated"],
                     help="basis-generation PRNG backend (hw degrades to "
@@ -353,6 +362,7 @@ def main():
         try:
             r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
                         rbd_mode=args.rbd_mode, packed=args.packed,
+                        normalization=args.normalization,
                         prng_impl=args.prng_impl, out_dir=args.out)
             if "skipped" in r:
                 print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")

@@ -205,7 +205,8 @@ def _collect_collectives(jaxpr, sites) -> None:
 
 def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
                                kinds=("pmean", "psum"),
-                               n_launches: int | None = 2) -> None:
+                               n_launches: int | None = 2,
+                               widened: bool = False) -> None:
     """Assert the packed sharedseed communication contract on ``fn``'s
     traced program, for BOTH exchange modes:
 
@@ -218,10 +219,20 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
       buffer;
     * nothing D-sized (``n_params`` elements) crosses the wire.
 
+    ``widened=True`` asserts the 'exact'-normalization flavor of the
+    contract: the one collective carries the concatenated
+    (2 * d_packed,) coords+norms buffer (``core.distributed.
+    widen_coord_buffer``), so the expected payload doubles while the
+    collective COUNT stays at one.  Pass ``payload`` as the plain
+    ``d_packed`` either way; the doubling happens here.
+
     This is the acceptance gate for the paper's communication claim in
     its strongest form: d (or K*d) floats per step, two launches, no
-    gradient all-reduce, for every optimizer x mode combination.
+    gradient all-reduce, for every optimizer x mode x normalization
+    combination.
     """
+    if widened:
+        payload = 2 * payload
     if n_launches is not None:
         got = count_pallas_calls(fn, *args)
         assert got == n_launches, (
@@ -235,7 +246,8 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
     assert kind in kinds, (f"exchange primitive {kind!r} not in {kinds}",
                            sites)
     assert n == payload, (
-        f"exchange payload {n} != packed coordinate buffer {payload}")
+        f"exchange payload {n} != packed coordinate buffer {payload}"
+        + (" (widened coords+norms)" if widened else ""))
     assert all(n != n_params for _, n in sites), (
         f"a D-sized ({n_params}) collective exists", sites)
 

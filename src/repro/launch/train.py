@@ -30,9 +30,7 @@ Usage (examples; on the CPU container use --fake-devices N):
 from __future__ import annotations
 
 import argparse
-import functools
 import os
-import sys
 import time
 
 
@@ -63,6 +61,14 @@ def main(argv=None):
     ap.add_argument("--adam-b2", type=float, default=0.999)
     ap.add_argument("--adam-eps", type=float, default=1e-8)
     ap.add_argument("--rbd-dim", type=int, default=1024)
+    ap.add_argument("--normalization", default="rsqrt_dim",
+                    choices=["rsqrt_dim", "exact", "none", "orthonormal"],
+                    help="basis-row normalization; 'exact' (true row "
+                         "norms, the paper's best configurations) stays "
+                         "on the packed two-launch step -- the exchange "
+                         "widens to one (2d,) coords+norms collective; "
+                         "'orthonormal' falls back per-leaf with a "
+                         "printed reason")
     ap.add_argument("--rbd-backend", default="jnp",
                     choices=["jnp", "pallas"])
     ap.add_argument("--packed", default="auto",
@@ -95,6 +101,7 @@ def main(argv=None):
         cfg, mode=args.mode, rbd_mode=args.rbd_mode, data=args.data,
         model_axis=args.model, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rbd_dim=args.rbd_dim,
+        normalization=args.normalization,
         rbd_backend=args.rbd_backend, packed=args.packed,
         prng_impl=args.prng_impl,
         optimizer=args.optimizer, weight_decay=args.weight_decay,
@@ -106,7 +113,8 @@ def main(argv=None):
 
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  data=1, model_axis=1, steps=10, batch=8, seq=128,
-                 lr=0.125, rbd_dim=1024, rbd_backend="jnp",
+                 lr=0.125, rbd_dim=1024, normalization="rsqrt_dim",
+                 rbd_backend="jnp",
                  packed="auto", prng_impl="threefry",
                  optimizer="sgd", weight_decay=0.0,
                  momentum_beta=0.9, nesterov=False, adam_b1=0.9,
@@ -125,6 +133,7 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
 
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"),
                         total_dim=rbd_dim, mode=rbd_mode,
+                        normalization=normalization,
                         backend=rbd_backend, packed=packed,
                         prng_impl=prng_impl)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,

@@ -11,7 +11,6 @@ formulation (and the jnp oracle for a future Pallas flash kernel).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -134,7 +133,7 @@ def flash_attention(
         q_pos = iq * q_block + jnp.arange(q_block) + q_offset
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lse, acc = carry
             kblk, vblk, ik = ki
             k_pos = ik * kv_block + jnp.arange(kv_block)
             s = _block_scores(qblk, kblk, scale)  # (B, KV, G, qb, kb)
@@ -151,23 +150,23 @@ def flash_attention(
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(axis=-1)
+            lse_new = lse * alpha + p.sum(axis=-1)
             acc = acc * alpha[..., None] + jnp.einsum(
                 "bkgqs,bskh->bkgqh", p, vblk.astype(jnp.float32)
             )
-            return (m_new, l_new, acc), None
+            return (m_new, lse_new, acc), None
 
         init = (
             jnp.full((b, kv, g, q_block), NEG_INF, jnp.float32),
             jnp.zeros((b, kv, g, q_block), jnp.float32),
             jnp.zeros((b, kv, g, q_block, hd), jnp.float32),
         )
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, init,
             (kp.swapaxes(0, 1), vp.swapaxes(0, 1),
              jnp.arange(nk)),
         )
-        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, qb, hd)
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]  # (B, KV, G, qb, hd)
         return None, out.transpose(0, 3, 1, 2, 4)      # (B, qb, KV, G, hd)
 
     _, blocks = jax.lax.scan(

@@ -12,11 +12,9 @@ Positions: fixed sinusoidal for the encoder, learned for the decoder
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn

@@ -21,8 +21,7 @@ trade-off), conv/state caches for recurrent blocks.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -458,7 +457,10 @@ def decode_step(cfg: ModelConfig, params, cache, token):
     if cfg.hybrid_attn_every > 0:
         n_g = cfg.n_layers // cfg.hybrid_attn_every
         per_g = cfg.hybrid_attn_every
-        regroup = lambda a: a.reshape((n_g, per_g) + a.shape[1:])
+
+        def regroup(a):
+            return a.reshape((n_g, per_g) + a.shape[1:])
+
         grouped_lp = jax.tree_util.tree_map(regroup, params["layers"])
         gflags = regroup(flags)
         gcaches = [regroup(cache[k]) for k in cache_keys]

@@ -13,8 +13,6 @@ synthetic image datasets in ``repro.data.synthetic``.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

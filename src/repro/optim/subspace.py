@@ -40,8 +40,17 @@ Execution strategy is a single static decision
 * ``full_space``     -- classic full-space optimizer state: RBD
                         disabled, weight decay (couples updates to
                         full-space params), or the ineligible
-                        independent_bases configs (unpacked, 'exact'/
+                        independent_bases configs (unpacked,
                         'orthonormal' normalization, model-sharded).
+
+'exact' normalization is a first-class ``fused_packed`` citizen for
+BOTH modes: the projection launch already emits per-direction squared
+row norms as a second (d_packed,) output, and the per-step exchange
+WIDENS to one concatenated (2*d_packed,) coords+norms buffer (a single
+pmean or all-gather -- see ``core.distributed``) so every worker can
+fold the exact per-direction scales into the reconstruct-apply scale
+tables.  Optimizer state stays on the COORDINATE buffer alone ((d,) or
+(K, d)); the norms ride the wire but never enter the state.
 
 ``independent_bases`` mode (paper Algorithm 1, the headline distributed
 result) now ALSO takes the ``fused_packed`` strategy: every worker
@@ -149,18 +158,27 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     "independent_bases per-leaf exchange -> K per-worker "
                     "bases, full-space optimizer state (use_packed joins "
                     "the K*d coordinate space)")
-            if normalization not in projector.STATIC_FACTOR_NORMALIZATIONS:
+            if normalization == "orthonormal":
                 return ExecutionPlan(
                     "full_space", False,
-                    f"independent_bases with {normalization} normalization "
-                    "needs every worker's row norms -> per-leaf full-space "
-                    "path")
+                    "independent_bases with orthonormal normalization "
+                    "materializes a QR basis per worker -> per-leaf "
+                    "full-space path")
             if model_sharded:
                 return ExecutionPlan(
                     "full_space", False,
                     "independent_bases with model-axis param sharding -> "
                     "per-leaf full-space path (the packed-resident buffer "
                     "would replicate the params)")
+            if normalization == "exact":
+                return ExecutionPlan(
+                    "fused_packed", True,
+                    "packed independent_bases with exact row norms: "
+                    "project on own basis (norms in-kernel) -> one "
+                    "widened (2d,) coords+norms all-gather -> (K, d) "
+                    "joint-coordinate optimizer -> K-worker "
+                    "reconstruct-apply with per-worker exact scales; "
+                    "packed-resident TrainState")
             return ExecutionPlan(
                 "fused_packed", True,
                 "packed independent_bases: project on own basis -> one "
@@ -182,6 +200,14 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                 "model-axis param sharding is incompatible with the "
                 "packed-resident buffer -> per-leaf XLA-fused stages")
         if use_packed:
+            if normalization == "exact":
+                return ExecutionPlan(
+                    "fused_packed", True,
+                    "packed two-launch step with exact row norms "
+                    "(in-kernel, second projection output; the sharedseed "
+                    "exchange is one widened (2d,) coords+norms pmean): "
+                    "project -> (d,)-state coordinate optimizer -> "
+                    "reconstruct-apply; packed-resident TrainState")
             return ExecutionPlan(
                 "fused_packed", True,
                 "packed two-launch step: project -> (d,)-state coordinate "
@@ -380,7 +406,11 @@ class SubspaceOptimizer:
         apply.  With ``axis_name`` set, ONE pmean of the packed (d,)
         coordinate buffer is the entire per-step exchange -- for sgd,
         momentum AND adam (the state update is deterministic on the
-        post-pmean coordinates, so worker states stay replicated)."""
+        post-pmean coordinates, so worker states stay replicated).
+        Under 'exact' normalization the one pmean WIDENS to the
+        concatenated (2d,) coords+norms buffer (the row norms come out
+        of the projection launch as its second output), so the exchange
+        count never changes with the normalization."""
         if self.joint_subspace:
             return self._packed_independent_step(params, grads, rbd_state,
                                                  opt_state, eplan)
@@ -393,7 +423,11 @@ class SubspaceOptimizer:
             grads, plan, seed, backend=t.backend, layout=layout,
             return_norms=True, prepacked=True, prng=prng)
         if self.axis_name is not None:
-            coords = jax.lax.pmean(coords, axis_name=self.axis_name)
+            from repro.core import distributed
+
+            coords, sq = distributed.shared_basis_packed_exchange(
+                coords, sq, self.axis_name,
+                widened=(plan.normalization == "exact"))
         coords, opt_state = self._optimizer().update(coords, opt_state)
         new_params = projector.reconstruct_apply_packed(
             coords, plan, seed, params, self.learning_rate,
@@ -418,18 +452,28 @@ class SubspaceOptimizer:
         ``k_workers > 1``) ``grads`` is the stacked (K, q_packed) buffer
         of per-worker gradients and the "gather" is a vmapped local
         projection -- bit-compatible with the shard_map exchange.
+
+        Under 'exact' normalization every worker's squared row norms
+        ride the SAME single all-gather (widened to (2d,) per worker --
+        the K-worker reconstruction folds each worker's exact scales
+        from its gathered norms row); the optimizer state stays on the
+        (K, d) coordinate buffer alone.
         """
         t = self.transform
         plan = t.plan
         layout = plan.packed()
         prng = eplan.prng_impl
+        exact = (plan.normalization == "exact")
         seed = t.step_seed(rbd_state.step)
+        gathered_sq = None
         if self.axis_name is not None:
             from repro.core import distributed
 
             gathered = distributed.independent_bases_coords(
                 t, grads, rbd_state, self.axis_name, layout=layout,
-                prng=prng)
+                prng=prng, return_norms=exact)
+            if exact:
+                gathered, gathered_sq = gathered
             if gathered.shape[0] != self.k_workers:
                 raise ValueError(
                     f"k_workers={self.k_workers} does not match the "
@@ -444,12 +488,15 @@ class SubspaceOptimizer:
             gathered = jax.lax.map(
                 lambda sg: projector.project_packed(
                     sg[1], plan, sg[0], backend=t.backend, layout=layout,
-                    prepacked=True, prng=prng), (wseeds, grads))
+                    prepacked=True, prng=prng, return_norms=exact),
+                (wseeds, grads))
+            if exact:
+                gathered, gathered_sq = gathered
         gathered, opt_state = self._optimizer().update(gathered, opt_state)
         new_params = projector.reconstruct_apply_packed_workers(
             gathered, plan, seed, params,
             self.learning_rate / self.k_workers, backend=t.backend,
-            layout=layout, prepacked=True, prng=prng)
+            row_sq=gathered_sq, layout=layout, prepacked=True, prng=prng)
         return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
                 self._delta_aux(params, new_params))
 

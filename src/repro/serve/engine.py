@@ -8,8 +8,6 @@ training-time technique and plays no role at serving (DESIGN.md
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -120,8 +120,9 @@ def param_specs(params_shape: Any, mesh, cfg=None) -> Any:
     heads = (cfg.n_heads, cfg.n_kv_heads) if cfg is not None else None
     flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
     specs = [
-        _spec_for(_leaf_name(p), len(l.shape), l.shape, model_size, heads)
-        for p, l in flat
+        _spec_for(_leaf_name(p), len(leaf.shape), leaf.shape, model_size,
+                  heads)
+        for p, leaf in flat
     ]
     return jax.tree_util.tree_unflatten(treedef, specs)
 

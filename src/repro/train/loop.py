@@ -6,7 +6,6 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.models.registry import Model

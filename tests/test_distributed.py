@@ -4,6 +4,7 @@ into the rest of the suite."""
 
 import json
 import os
+import shutil
 import subprocess
 import sys
 import textwrap
@@ -212,12 +213,22 @@ _SCRIPT = textwrap.dedent("""
 
 
 @pytest.fixture(scope="module")
-def results():
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
+def results(tmp_path_factory):
+    # HERMETIC subprocess: snapshot src/ into a temp copy and point
+    # PYTHONPATH + cwd at the snapshot BEFORE spawning.  The child
+    # imports the tree at its own pace, so running it against the live
+    # working tree means a concurrent edit to src/ (another test lane,
+    # an editor, a bot) lands in a half-old half-new import set and
+    # fails the whole tier-1 pass with unrelated tracebacks.
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    snap = str(tmp_path_factory.mktemp("hermetic_src"))
+    shutil.copytree(
+        src, os.path.join(snap, "src"),
+        ignore=shutil.ignore_patterns("__pycache__", "*.pyc"))
+    env = dict(os.environ, PYTHONPATH=os.path.join(snap, "src"))
     proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=560)
+                          cwd=snap, capture_output=True, text=True,
+                          timeout=560)
     assert proc.returncode == 0, proc.stderr[-2000:]
     return json.loads(proc.stdout.strip().splitlines()[-1])
 

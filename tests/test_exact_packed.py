@@ -1,0 +1,338 @@
+"""Exact normalization as a first-class ``fused_packed`` strategy (PR 5).
+
+The projection megakernel accumulates squared row norms alongside the
+coordinates (a second output, not an extra launch), the sharedseed pmean
+and the K-worker all-gather widen to ONE concatenated coords+norms
+buffer, and the reconstruct-apply megakernels fold the exact
+per-direction scale into their scale tables.  Covered here:
+
+* kernel-vs-oracle BIT-exactness across ragged tails and all five
+  distributions, single-worker and K-worker;
+* packed-exact vs legacy per-leaf ``'exact'`` numerical agreement
+  (shared_basis and the Algorithm 1 joint subspace);
+* the widened communication contract (2 launches, exactly one widened
+  collective, nothing D-sized) for sgd/momentum/adam x
+  shared_basis/independent_bases;
+* plan routing: only ``'orthonormal'`` remains a reason-coded fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RBDConfig
+from repro.core import distributed, make_plan, projector, rng
+from repro.core.rbd import RandomBasesTransform
+from repro.optim import transforms as opt
+from repro.optim.subspace import SubspaceOptimizer, plan_from_flags
+
+DISTRIBUTIONS = ("normal", "uniform", "bernoulli", "rademacher", "sparse")
+
+
+def _params():
+    # ragged on purpose: sizes that do not divide the block sizes, a
+    # scalar leaf, a stacked leaf (same fixture family as test_packed_step)
+    return {
+        "w": jnp.ones((48, 20)),
+        "layers": {"k": jnp.ones((3, 40, 10))},
+        "s": jnp.ones(()),
+        "odd": jnp.ones((7, 73)),
+        "long": jnp.ones((700,)),
+    }
+
+
+def _grads(params, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.tree_util.tree_map(lambda p: jax.random.normal(k, p.shape), params)
+
+
+def _plan(params, dist="normal"):
+    return make_plan(
+        params,
+        96,
+        granularity="layer",
+        is_stacked=lambda n: n.startswith("layers"),
+        distribution=dist,
+        normalization="exact",
+    )
+
+
+def _run_fused(sub, params, grad_seq):
+    plan = sub.transform.plan
+    layout = plan.packed()
+    stored = sub.prepare_params(params)
+    rbd_state = sub.init_rbd_state(params)
+    opt_state = sub.init_opt_state(params)
+    for g in grad_seq:
+        gp = projector.pack_tree(g, plan, layout)
+        stored, rbd_state, opt_state, _ = sub.step(stored, gp, rbd_state, opt_state)
+    return stored
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-oracle bit-exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("distribution", DISTRIBUTIONS)
+def test_packed_exact_kernel_bitexact_vs_oracle(distribution):
+    """Interpret-mode megakernels with exact per-direction scales are
+    BIT-exact against the packed jnp oracle, across every distribution
+    and the ragged-tail fixture."""
+    params = _params()
+    plan = _plan(params, dist=distribution)
+    grad_seq = [_grads(params, key=k) for k in range(2)]
+    outs = {}
+    for backend in ("pallas", "jnp"):
+        t = RandomBasesTransform(plan, base_seed=11, redraw=True, backend=backend)
+        sub = SubspaceOptimizer(
+            transform=t, learning_rate=0.3, use_packed=True, params_template=params
+        )
+        assert sub.plan_execution().strategy == "fused_packed"
+        outs[backend] = _run_fused(sub, params, grad_seq)
+    np.testing.assert_array_equal(np.asarray(outs["pallas"]), np.asarray(outs["jnp"]))
+
+
+@pytest.mark.parametrize("distribution", DISTRIBUTIONS)
+def test_packed_exact_workers_bitexact_vs_oracle(distribution):
+    """K-worker joint reconstruct-apply with per-worker exact scales
+    (gathered row norms) is bit-exact kernel-vs-oracle through full
+    simulation steps."""
+    params = _params()
+    plan = _plan(params, dist=distribution)
+    layout = plan.packed()
+    k = 3
+    grad_seq = [[_grads(params, key=5 * i + w) for w in range(k)] for i in range(2)]
+    outs = {}
+    for backend in ("pallas", "jnp"):
+        t = RandomBasesTransform(plan, base_seed=7, redraw=True, backend=backend)
+        sub = SubspaceOptimizer(
+            transform=t,
+            learning_rate=0.3,
+            use_packed=True,
+            mode="independent_bases",
+            k_workers=k,
+            params_template=params,
+        )
+        assert sub.plan_execution().strategy == "fused_packed"
+        stored = sub.prepare_params(params)
+        st_r = sub.init_rbd_state(params)
+        st_o = sub.init_opt_state(params)
+        for gs in grad_seq:
+            gp = jnp.stack([projector.pack_tree(g, plan, layout) for g in gs])
+            stored, st_r, st_o, _ = sub.step(stored, gp, st_r, st_o)
+        outs[backend] = stored
+    np.testing.assert_array_equal(np.asarray(outs["pallas"]), np.asarray(outs["jnp"]))
+
+
+# ---------------------------------------------------------------------------
+# packed exact == legacy per-leaf exact
+# ---------------------------------------------------------------------------
+
+
+def test_packed_exact_matches_per_leaf_reference():
+    """The packed two-launch exact step equals the legacy per-leaf exact
+    sequence (project with norms -> reconstruct -> apply), across steps."""
+    params = _params()
+    plan = _plan(params)
+    t = RandomBasesTransform(plan, base_seed=3, redraw=True, backend="jnp")
+    sub = SubspaceOptimizer(
+        transform=t, learning_rate=0.3, use_packed=True, params_template=params
+    )
+    grad_seq = [_grads(params, key=k) for k in range(3)]
+    fused = sub.materialize_params(_run_fused(sub, params, grad_seq))
+
+    p = params
+    for i, g in enumerate(grad_seq):
+        seed = rng.fold_seed(3, jnp.uint32(i))
+        coords, norms = projector.project(g, plan, seed, return_norms=True)
+        delta = projector.reconstruct(coords, plan, seed, p, row_sq=norms)
+        p = opt.apply_updates(p, delta, sub.learning_rate)
+    for a, b in zip(jax.tree_util.tree_leaves(fused), jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_packed_independent_exact_matches_legacy_per_leaf():
+    """One packed independent_bases exact step reproduces the legacy
+    per-leaf Algorithm 1 math: K own-basis exact sketches, averaged."""
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed()
+    k = 3
+    lr = 0.5
+    t = RandomBasesTransform(plan, base_seed=9, redraw=True, backend="jnp")
+    sub = SubspaceOptimizer(
+        transform=t,
+        learning_rate=lr,
+        use_packed=True,
+        mode="independent_bases",
+        k_workers=k,
+        params_template=params,
+    )
+    assert sub.plan_execution().strategy == "fused_packed"
+    gs = [_grads(params, key=w) for w in range(k)]
+    gp = jnp.stack([projector.pack_tree(g, plan, layout) for g in gs])
+    stored = sub.prepare_params(params)
+    stored, _, _, _ = sub.step(
+        stored, gp, sub.init_rbd_state(params), sub.init_opt_state(params)
+    )
+    got = sub.materialize_params(stored)
+
+    base = t.step_seed(jnp.uint32(0))
+    sketch = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for w, g in enumerate(gs):
+        seed_w = rng.fold_seed(base, jnp.uint32(w + 1))
+        sk = projector.rbd_gradient(g, plan, seed_w)
+        sketch = jax.tree_util.tree_map(lambda a, b: a + b / k, sketch, sk)
+    ref = opt.apply_updates(params, sketch, lr)
+    for a, b in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_workers_exact_requires_gathered_norms():
+    """The K-worker megakernel cannot regenerate every worker's row norms
+    without extra launches -- exact mode demands the gathered norms that
+    rode the widened collective."""
+    params = _params()
+    plan = _plan(params)
+    layout = plan.packed()
+    coords = jnp.zeros((2, layout.d_packed), jnp.float32)
+    theta = projector.pack_tree(params, plan, layout)
+    with pytest.raises(ValueError, match="row norms"):
+        projector.reconstruct_apply_packed_workers(
+            coords, plan, rng.fold_seed(0), theta, 0.1, layout=layout, prepacked=True
+        )
+
+
+# ---------------------------------------------------------------------------
+# widened exchange primitives + plan routing
+# ---------------------------------------------------------------------------
+
+
+def test_widened_buffer_roundtrip():
+    d = 24
+    coords = jnp.arange(d, dtype=jnp.float32)
+    sq = jnp.arange(d, dtype=jnp.float32) + 100.0
+    buf = distributed.widen_coord_buffer(coords, sq)
+    assert buf.shape == (2 * d,)
+    c2, s2 = distributed.split_coord_buffer(buf, d)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(coords))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(sq))
+    kbuf = distributed.widen_coord_buffer(coords[None], sq[None])
+    assert kbuf.shape == (1, 2 * d)
+
+
+def test_exact_plan_routing_only_orthonormal_falls_back():
+    for mode in ("shared_basis", "independent_bases"):
+        ep = plan_from_flags(
+            mode=mode, axis_name="data", use_packed=True, normalization="exact"
+        )
+        assert ep.strategy == "fused_packed", (mode, ep)
+        assert "widened" in ep.reason, (mode, ep.reason)
+    ep = plan_from_flags(
+        mode="independent_bases",
+        axis_name="data",
+        use_packed=True,
+        normalization="orthonormal",
+    )
+    assert ep.strategy == "full_space"
+    assert "orthonormal" in ep.reason
+
+
+# ---------------------------------------------------------------------------
+# the widened communication contract (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm_setup(optimizer, backend, rbd_mode):
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig
+    from repro.data import synthetic
+    from repro.models import get_model
+
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    rbd = RBDConfig(
+        total_dim=256,
+        backend=backend,
+        packed="on",
+        mode=rbd_mode,
+        normalization="exact",
+    )
+    tcfg = TrainConfig(
+        model=cfg,
+        optimizer=optimizer,
+        rbd=rbd,
+        learning_rate=0.5,
+        steps=1,
+        batch_size=2 * jax.device_count(),
+        seq_len=16,
+    )
+    batch = next(synthetic.lm_batches(0, tcfg.batch_size, 16, cfg.vocab))
+    return model, tcfg, batch
+
+
+def _sharded_train_step(optimizer, rbd_mode):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import _make_mesh, shard_map_compat
+    from repro.train import step as steplib
+
+    n_dev = jax.device_count()
+    model, tcfg, batch = _tiny_lm_setup(optimizer, "pallas", rbd_mode)
+    init_state, train_step, sub = steplib.make_train_step(
+        model, tcfg, axis_name="data", k_workers=n_dev, return_optimizer=True
+    )
+    assert sub.plan_execution().strategy == "fused_packed"
+    state = init_state(jax.random.PRNGKey(0))
+    mesh = _make_mesh((n_dev,), ("data",))
+    repl = jax.tree_util.tree_map(lambda _: P(), state)
+    metrics_spec = {"ce": P(), "aux": P(), "loss": P(), "update_norm": P()}
+    fn = shard_map_compat(
+        train_step,
+        mesh=mesh,
+        in_specs=(repl, {"tokens": P("data"), "labels": P("data")}),
+        out_specs=(repl, metrics_spec),
+        manual_axes=("data",),
+    )
+    return fn, state, batch, sub
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_sharedseed_exact_widened_contract(optimizer):
+    """shared_basis + exact: exactly TWO pallas launches and exactly ONE
+    non-scalar collective -- the pmean of the widened (2*d_packed,)
+    coords+norms buffer -- and nothing D-sized, for every optimizer."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(optimizer, "shared_basis")
+    assert_coordinate_exchange(
+        fn,
+        state,
+        batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("pmean", "psum"),
+        n_launches=2,
+        widened=True,
+    )
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+def test_independent_exact_widened_contract(optimizer):
+    """independent_bases + exact: two launches, ONE widened all-gather
+    carrying each worker's coords+norms, no D-sized collective."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    fn, state, batch, sub = _sharded_train_step(optimizer, "independent_bases")
+    assert_coordinate_exchange(
+        fn,
+        state,
+        batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=("all_gather",),
+        n_launches=2,
+        widened=True,
+    )

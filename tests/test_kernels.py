@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import rng
-from repro.kernels import ops, ref, rbd_project, rbd_reconstruct
+from repro.kernels import ops, ref, rbd_project
 
 SHAPES = [(100, 4), (513, 8), (1000, 20), (4096, 64), (700, 250),
           (2048, 1), (128, 128)]

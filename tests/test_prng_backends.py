@@ -18,8 +18,8 @@ import pytest
 
 from repro.configs.base import RBDConfig
 from repro.core import make_plan, projector, rng
-from repro.core.rbd import RandomBasesTransform, rbd_step
-from repro.optim.subspace import SubspaceOptimizer, plan_from_flags
+from repro.core.rbd import rbd_step
+from repro.optim.subspace import plan_from_flags
 
 PB, DB = 128, 8
 DISTS = ["normal", "uniform", "bernoulli", "rademacher", "sparse"]

@@ -3,7 +3,6 @@ iteration 10): the TPU-native MXU formulation must match the recurrence
 exactly, including segment carry-in."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -97,10 +97,16 @@ def test_plan_execution_reason_codes():
               use_packed=True), "fused_packed", "independent_bases"),
         (dict(mode="independent_bases", k_workers=4, use_packed=True),
          "fused_packed", "joint-coordinate"),
-        # ...except where a static normalization factor does not exist
+        # 'exact' is first-class now: norms ride the widened collective
         (dict(mode="independent_bases", axis_name="data",
-              use_packed=True, normalization="exact"), "full_space",
-         "row norms"),
+              use_packed=True, normalization="exact"), "fused_packed",
+         "widened"),
+        (dict(use_packed=True, normalization="exact"), "fused_packed",
+         "exact row norms"),
+        # ...only orthonormal still lacks a factor-style scale
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True, normalization="orthonormal"),
+         "full_space", "orthonormal"),
         (dict(mode="independent_bases", axis_name="data",
               use_packed=True, model_sharded=True), "full_space",
          "model-axis"),
