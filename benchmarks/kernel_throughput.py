@@ -222,6 +222,35 @@ def fused_step_benchmark(quick: bool = True):
             f"packed_step_{opt_name}_v5e_modeled", n_launches,
             12.0 * d_total + state_bytes[opt_name]))
 
+    # resilience-guarded step (core.resilience): the non-finite guard,
+    # the divergence sentinel and the replay capture all stay INSIDE the
+    # packed two-launch program -- the guard reads only the (d,)-sized
+    # coordinate/norm buffers (a NaN/Inf anywhere in the gradient
+    # poisons its projection, so no D-sized scan is needed), the
+    # sentinel checksum rides the exchange as ONE extra scalar, and the
+    # replay capture is an aux output of buffers already resident.  HBM
+    # adds the (d,) coords+norms aux write-out on top of the momentum
+    # row's budget.  This row pins all of that under the regression
+    # gate: 2 launches, no hidden HBM growth.
+    from repro.core import resilience
+
+    sub_g = SubspaceOptimizer(transform=t, optimizer="momentum",
+                              learning_rate=lr, use_packed=True,
+                              guard=resilience.GuardConfig(),
+                              sentinel_every=4, capture_coords=True)
+    stored_g = sub_g.prepare_params(params)
+    g_packed_g = projector.pack_tree(grads, plan, layout)
+    st_rbd_g = sub_g.init_rbd_state(params)
+    st_opt_g = sub_g.init_opt_state(params)
+    n_launches = count_pallas_calls(
+        lambda p, g: sub_g.step(p, g, st_rbd_g, st_opt_g,
+                                resilience.guard_init())[0],
+        stored_g, g_packed_g)
+    assert n_launches == 2, ("packed_guarded", n_launches)
+    rows.append(modeled_row(
+        "packed_guarded_v5e_modeled", n_launches,
+        12.0 * d_total + state_bytes["momentum"] + 8.0 * layout.d_packed))
+
     # packed independent_bases (paper Algorithm 1): the K-worker JOINT
     # subspace is still exactly two launches PER WORKER -- one own-basis
     # projection + one K-worker reconstruct-apply megakernel -- and its

@@ -4,6 +4,20 @@ Works on any pytree of arrays (TrainState included).  Arrays are pulled
 to host (fully addressable) -- for the multi-pod launcher each host saves
 its addressable shards under its process index; restore reassembles
 against a template pytree (shape/dtype checked).
+
+Durability contract (the resilience layer's snapshots ride on this):
+
+* ``save`` is ATOMIC: both the .npz and its .json sidecar are written
+  to ``*.tmp``, fsync'd, then ``os.replace``d into place -- a crash can
+  leave a stale tmp file but never a half-written checkpoint under the
+  final name.  The npz lands BEFORE the sidecar, so sidecar presence
+  commits the pair.
+* The sidecar carries a CRC32 per array; ``restore`` verifies every
+  array against it and falls back to the next-older intact checkpoint
+  (with a warning) instead of crashing on a corrupt one.
+* ``latest_step`` only counts checkpoints whose sidecar exists, parses,
+  and matches -- a stray ``ckpt_*.npz`` with no metadata is skipped
+  with a warning, never silently trusted.
 """
 
 from __future__ import annotations
@@ -11,12 +25,20 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 _SEP = "::"
+
+# everything a torn/corrupt npz-or-sidecar pair can throw at us while
+# loading; json.JSONDecodeError subclasses ValueError
+_CORRUPTION_ERRORS = (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                      EOFError)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -29,38 +51,106 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
+def _array_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _write_atomic(path: str, write_fn) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(directory: str, tree: Any, step: int) -> str:
     os.makedirs(directory, exist_ok=True)
     arrays = _flatten(tree)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrays)
+    base = os.path.join(directory, f"ckpt_{step:08d}")
     meta = {
         "step": step,
         "keys": sorted(arrays),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "crc32": {k: _array_crc(v) for k, v in arrays.items()},
     }
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
-    return path
+    # npz first, sidecar second: the sidecar's arrival commits the pair
+    # (an npz without a sidecar is treated as a partial write)
+    _write_atomic(base + ".npz", lambda f: np.savez(f, **arrays))
+    _write_atomic(base + ".json",
+                  lambda f: f.write(json.dumps(meta).encode("utf-8")))
+    return base + ".npz"
+
+
+def valid_steps(directory: str) -> list[int]:
+    """Steps whose npz + sidecar pair is structurally valid (both files
+    present, sidecar parses and matches the step).  Stray or partial
+    entries are skipped with a warning.  Full per-array CRC
+    verification happens at ``restore`` time."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for f in sorted(os.listdir(directory)):
+        m = re.match(r"ckpt_(\d+)\.npz$", f)
+        if not m:
+            continue
+        step = int(m.group(1))
+        sidecar = os.path.join(directory, f"ckpt_{step:08d}.json")
+        if not os.path.exists(sidecar):
+            warnings.warn(
+                f"{directory}/ckpt_{step:08d}.npz has no .json sidecar "
+                "(partial write?) -- skipped", stacklevel=2)
+            continue
+        try:
+            with open(sidecar) as fh:
+                meta = json.load(fh)
+            if int(meta.get("step", -1)) != step or "keys" not in meta:
+                raise ValueError("sidecar step/keys mismatch")
+        except _CORRUPTION_ERRORS as e:
+            warnings.warn(
+                f"{directory}/ckpt_{step:08d}.json is corrupt ({e}) -- "
+                "skipped", stacklevel=2)
+            continue
+        steps.append(step)
+    return steps
 
 
 def latest_step(directory: str) -> int | None:
-    if not os.path.isdir(directory):
-        return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(directory)
-        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
-    ]
+    steps = valid_steps(directory)
     return max(steps) if steps else None
 
 
-def restore(directory: str, template: Any, step: int | None = None) -> Any:
-    step = step if step is not None else latest_step(directory)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+def _load_verified(directory: str, step: int) -> dict[str, np.ndarray]:
+    """Load one checkpoint with full verification: sidecar matches the
+    npz key set and every array passes its CRC32.  Raises ValueError on
+    any mismatch (callers decide whether to fall back or crash)."""
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(base + ".json") as fh:
+        meta = json.load(fh)
+    if int(meta.get("step", -1)) != step:
+        raise ValueError(f"sidecar step {meta.get('step')} != {step}")
+    try:
+        data = np.load(base + ".npz")
+        if set(data.files) != set(meta["keys"]):
+            raise ValueError("npz/sidecar key sets differ")
+        crcs = meta.get("crc32", {})  # absent in pre-resilience ckpts
+        out = {}
+        for k in data.files:
+            arr = data[k]
+            if k in crcs and _array_crc(arr) != int(crcs[k]):
+                raise ValueError(f"array {k!r} failed its CRC32 check")
+            out[k] = arr
+    except ValueError:
+        raise
+    except _CORRUPTION_ERRORS as e:
+        # zipfile/npy-level damage (bad zip CRC, torn member, ...):
+        # normalize to the documented ValueError contract
+        raise ValueError(f"corrupt npz payload: {e}") from e
+    return out
+
+
+def _unflatten(template: Any, data: dict[str, np.ndarray]) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in flat:
@@ -75,3 +165,28 @@ def restore(directory: str, template: Any, step: int | None = None) -> Any:
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
                       else arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore(directory: str, template: Any, step: int | None = None) -> Any:
+    """Restore the given step (verified, raising on corruption) or --
+    with ``step=None`` -- the NEWEST checkpoint that passes
+    verification, warning and falling back to older ones past any
+    corrupt/partial entry."""
+    if step is not None:
+        return _unflatten(template, _load_verified(directory, step))
+    last_err: Exception | None = None
+    for s in sorted(valid_steps(directory), reverse=True):
+        try:
+            data = _load_verified(directory, s)
+        except _CORRUPTION_ERRORS as e:
+            warnings.warn(
+                f"checkpoint step {s} in {directory} is corrupt ({e}); "
+                "falling back to an older one", stacklevel=2)
+            last_err = e
+            continue
+        return _unflatten(template, data)
+    if last_err is not None:
+        raise FileNotFoundError(
+            f"no intact checkpoint in {directory} "
+            f"(last error: {last_err})")
+    raise FileNotFoundError(f"no checkpoints in {directory}")

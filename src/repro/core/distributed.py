@@ -76,7 +76,7 @@ def split_coord_buffer(buf, d_packed: int):
 
 
 def shared_basis_packed_exchange(coords, sq, axis_name, *,
-                                 widened: bool = False):
+                                 widened: bool = False, rider=None):
     """The packed sharedseed exchange: ONE pmean per step.
 
     With ``widened=False`` (static-factor normalizations) only the
@@ -88,12 +88,30 @@ def shared_basis_packed_exchange(coords, sq, axis_name, *,
     basis), so their mean is a no-op up to summation rounding, and
     post-exchange every worker holds the identical (coords, sq) pair
     its reconstruct-apply scale table is built from.
+
+    ``rider``: optional f32 SCALAR that rides the same collective as
+    one extra trailing element (the resilience sentinel's state
+    checksum -- see ``core.resilience.state_checksum``, whose
+    integer-valued construction makes the pmean bit-exact when all
+    workers agree).  When set, the return grows to
+    ``(coords, sq, rider_mean)``; the collective count stays at ONE.
     """
-    if not widened:
-        return jax.lax.pmean(coords, axis_name=axis_name), sq
-    buf = jax.lax.pmean(widen_coord_buffer(coords, sq),
-                        axis_name=axis_name)
-    return split_coord_buffer(buf, coords.shape[-1])
+    if rider is None:
+        if not widened:
+            return jax.lax.pmean(coords, axis_name=axis_name), sq
+        buf = jax.lax.pmean(widen_coord_buffer(coords, sq),
+                            axis_name=axis_name)
+        return split_coord_buffer(buf, coords.shape[-1])
+    d = coords.shape[-1]
+    body = widen_coord_buffer(coords, sq) if widened \
+        else coords.astype(jnp.float32)
+    buf = jax.lax.pmean(
+        jnp.concatenate(
+            [body, jnp.reshape(rider, (1,)).astype(jnp.float32)], axis=-1),
+        axis_name=axis_name)
+    if widened:
+        return buf[..., :d], buf[..., d:2 * d], buf[..., 2 * d]
+    return buf[..., :d], sq, buf[..., d]
 
 
 def shared_basis_coords(
@@ -152,6 +170,7 @@ def independent_bases_coords(
     prepacked: bool = True,
     prng="threefry",
     return_norms: bool = False,
+    rider=None,
 ):
     """The PACKED independent-bases exchange primitive (Algorithm 1 on
     the packed representation): project the worker's prepacked gradient
@@ -172,24 +191,41 @@ def independent_bases_coords(
     cost K extra generation passes.  Returns the gathered
     ((K, d_packed), (K, d_packed)) pair instead of one (K, d_packed)
     array.
+
+    ``rider``: optional f32 SCALAR riding the same all-gather as one
+    extra trailing element per worker (the resilience sentinel's state
+    checksum).  When set, the return is the triple
+    ``(coords, sq_or_None, riders)`` with ``riders`` the gathered (K,)
+    checksum vector; still exactly one collective.
     """
     from repro.core import projector
 
     plan = transform.plan
     layout = layout if layout is not None else plan.packed()
     my_seed = worker_seed(transform, state, axis_name)
-    if not return_norms:
+    if rider is None and not return_norms:
         coords = projector.project_packed(
             local_grads, plan, my_seed, backend=transform.backend,
             layout=layout, prepacked=prepacked, prng=prng)
         return jax.lax.all_gather(coords, axis_name=axis_name)
-    coords, sq = projector.project_packed(
+    proj = projector.project_packed(
         local_grads, plan, my_seed, backend=transform.backend,
         layout=layout, prepacked=prepacked, prng=prng,
-        return_norms=True)
-    gathered = jax.lax.all_gather(widen_coord_buffer(coords, sq),
-                                  axis_name=axis_name)
-    return split_coord_buffer(gathered, layout.d_packed)
+        return_norms=return_norms)
+    coords, sq = proj if return_norms else (proj, None)
+    body = widen_coord_buffer(coords, sq) if return_norms \
+        else coords.astype(jnp.float32)
+    if rider is None:
+        gathered = jax.lax.all_gather(body, axis_name=axis_name)
+        return split_coord_buffer(gathered, layout.d_packed)
+    buf = jnp.concatenate(
+        [body, jnp.reshape(rider, (1,)).astype(jnp.float32)], axis=-1)
+    gathered = jax.lax.all_gather(buf, axis_name=axis_name)
+    d = layout.d_packed
+    g_coords = gathered[..., :d]
+    g_sq = gathered[..., d:2 * d] if return_norms else None
+    riders = gathered[..., -1]
+    return g_coords, g_sq, riders
 
 
 def independent_bases_update(

@@ -1,0 +1,817 @@
+"""Coordinate-replay resilience: micro-checkpoints, step guards, a
+replica-divergence sentinel and seeded fault injection for the packed
+two-launch RBD step.
+
+The paper's on-demand basis regeneration (section 4.2) makes one
+optimizer step fully determined by ``(base_seed, step, coordinate
+buffer)`` -- kilobytes, not gigabytes.  This module exploits that
+compactness for fault tolerance:
+
+* :class:`ReplayLog` -- an append-only, CRC-framed log of the
+  post-exchange packed coordinate buffer (+ squared row norms when the
+  step has them).  Full theta snapshots become SPARSE (every N steps);
+  :func:`recover` restores the newest valid snapshot and replays the
+  logged d-dimensional updates through the exact same
+  ``SubspaceOptimizer.apply_exchanged`` code path the live step uses,
+  so the resumed state is bit-identical to the uninterrupted run -- no
+  gradient recomputation, on either backend.
+
+* non-finite step guard -- :func:`guard_transition` plus the
+  ``REASON_*`` codes.  The optimizer checks the (d,)-sized coordinate
+  buffer (a NaN/Inf anywhere in the D-sized gradient propagates into
+  the dense projection -- ``nan*0 == nan`` and ``inf*0 == nan`` -- so
+  the check never reads D-sized data), rejects the step with params and
+  optimizer state bit-untouched, counts the event, and backs off the
+  EFFECTIVE learning rate by scaling the post-optimizer coordinates
+  (mathematically identical to an LR change for every optimizer, so
+  state semantics never fork between workers).
+
+* replica-divergence sentinel -- :func:`state_checksum` folds the
+  replicated coordinate-space state into a 16-bit integer-valued f32
+  scalar that survives a pmean bit-exactly for any worker count <= 256
+  (the sum stays below 2**24 and the division is exact whenever all
+  inputs agree), so it rides the existing coordinate exchange as ONE
+  extra scalar -- never an extra collective.  Repair is
+  :func:`resync_from_worker0` (reason-coded re-broadcast); CI runs the
+  hard-failure mode (:class:`ReplicaDivergenceError`).
+
+* :class:`FaultPlan` -- a deterministic, seedable fault-injection
+  harness: NaN/Inf into the packed gradient, corruption of a received
+  collective payload, or a host-side kill
+  (:class:`SimulatedWorkerKill`), driven through both the sequential
+  K-worker simulation and the fake-device mesh so every failure path is
+  CPU-testable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import struct
+import warnings
+import zlib
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# reason codes (every recovery path is reason-coded; CI asserts on these)
+# ---------------------------------------------------------------------------
+
+REASON_OK = 0
+REASON_NONFINITE_LOCAL = 1  # local projection produced NaN/Inf coords
+REASON_NONFINITE_EXCHANGE = 2  # post-exchange buffer non-finite
+REASON_REPLICA_DIVERGENCE = 3  # sentinel checksums disagree
+REASON_CKPT_CORRUPT = 4  # snapshot failed CRC/sidecar validation
+REASON_LOG_TRUNCATED = 5  # torn replay-log tail dropped
+REASON_RESYNC = 6  # state re-broadcast from worker 0
+REASON_WORKER_KILLED = 7  # simulated kill (fault harness)
+
+_REASON_NAMES = {
+    REASON_OK: "ok",
+    REASON_NONFINITE_LOCAL: "nonfinite_local",
+    REASON_NONFINITE_EXCHANGE: "nonfinite_exchange",
+    REASON_REPLICA_DIVERGENCE: "replica_divergence",
+    REASON_CKPT_CORRUPT: "ckpt_corrupt",
+    REASON_LOG_TRUNCATED: "log_truncated",
+    REASON_RESYNC: "resync_from_worker0",
+    REASON_WORKER_KILLED: "worker_killed",
+}
+
+
+def reason_name(code) -> str:
+    return _REASON_NAMES.get(int(code), f"unknown({int(code)})")
+
+
+class ReplicaDivergenceError(RuntimeError):
+    """Hard-failure mode of the divergence sentinel (CI default)."""
+
+
+class SimulatedWorkerKill(RuntimeError):
+    """Raised by the fault harness to simulate a mid-run worker death."""
+
+
+# ---------------------------------------------------------------------------
+# non-finite step guard
+# ---------------------------------------------------------------------------
+
+
+class GuardConfig(NamedTuple):
+    """LR-backoff policy of the non-finite step guard.  All three values
+    are powers of two times small integers so the f32 scale arithmetic
+    (and the ``scale == 1.0`` fixed point) is exact."""
+
+    backoff: float = 0.5  # scale multiplier on a rejected step
+    recovery: float = 1.25  # scale multiplier on an accepted step
+    min_scale: float = 0.015625  # floor (1/64) of the effective-LR scale
+
+
+class GuardState(NamedTuple):
+    nonfinite_count: jax.Array  # i32, total rejected steps
+    lr_scale: jax.Array  # f32, effective-LR multiplier in (0, 1]
+    last_reason: jax.Array  # i32, REASON_* of the last step
+
+
+def guard_init() -> GuardState:
+    return GuardState(
+        nonfinite_count=jnp.zeros((), jnp.int32),
+        lr_scale=jnp.ones((), jnp.float32),
+        last_reason=jnp.zeros((), jnp.int32),
+    )
+
+
+def guard_transition(cfg: GuardConfig, state: GuardState, reason) -> GuardState:
+    """jit-compatible guard update: reject (reason != OK) backs the
+    effective-LR scale off by ``cfg.backoff`` (floored at
+    ``cfg.min_scale``) and counts the event; accept recovers the scale
+    by ``cfg.recovery`` (capped at exactly 1.0, which is a fixed point
+    -- a healthy run multiplies its coordinates by exactly 1.0, i.e.
+    bit-identically to no guard at all)."""
+    reason = jnp.asarray(reason, jnp.int32)
+    ok = reason == REASON_OK
+    scale = jnp.where(
+        ok,
+        jnp.minimum(state.lr_scale * jnp.float32(cfg.recovery), jnp.float32(1.0)),
+        jnp.maximum(
+            state.lr_scale * jnp.float32(cfg.backoff), jnp.float32(cfg.min_scale)
+        ),
+    )
+    count = state.nonfinite_count + jnp.where(ok, 0, 1).astype(jnp.int32)
+    return GuardState(nonfinite_count=count, lr_scale=scale, last_reason=reason)
+
+
+def all_finite(*arrays) -> jax.Array:
+    """Scalar bool: every element of every non-None array is finite."""
+    ok = jnp.bool_(True)
+    for a in arrays:
+        if a is not None:
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(a)))
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# replica-divergence sentinel
+# ---------------------------------------------------------------------------
+
+
+def state_checksum(tree) -> jax.Array:
+    """16-bit wraparound checksum of a pytree, as an integer-valued f32.
+
+    Float leaves contribute their exact bit patterns (bitcast, not
+    value), so any single-ULP divergence flips the sum.  The 16-bit
+    fold keeps worker sums below 2**24: a pmean over K <= 256 workers
+    is exact in f32 whenever all inputs agree, so ``pmean(c) != c`` is
+    a sound divergence test with zero false positives."""
+    total = jnp.zeros((), jnp.uint32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        x = jnp.asarray(leaf)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            bits = jax.lax.bitcast_convert_type(
+                x.astype(jnp.float32), jnp.uint32
+            )
+        else:
+            bits = x.astype(jnp.uint32)
+        total = total + jnp.sum(bits, dtype=jnp.uint32)
+    folded = (total ^ (total >> jnp.uint32(16))) & jnp.uint32(0xFFFF)
+    return folded.astype(jnp.float32)
+
+
+def sentinel_rider(opt_state, packed_params) -> jax.Array:
+    """The scalar that rides the coordinate exchange: checksum of the
+    replicated coordinate-space optimizer state when it has array
+    leaves (momentum/adam), else of the packed parameter buffer (sgd is
+    stateless, but its params must stay replicated all the same)."""
+    if jax.tree_util.tree_leaves(opt_state):
+        return state_checksum(opt_state)
+    return state_checksum(packed_params)
+
+
+def sentinel_check(local, exchanged, step, every: int) -> jax.Array:
+    """Scalar bool: this step is a sentinel step (``step % every == 0``)
+    AND the exchanged checksum(s) disagree with the local one.
+    ``exchanged`` is the pmean'd scalar (shared_basis) or the gathered
+    (K,) vector (independent_bases)."""
+    on = (jnp.asarray(step, jnp.uint32) % jnp.uint32(every)) == 0
+    if jnp.ndim(exchanged):
+        mismatch = jnp.any(exchanged != local)
+    else:
+        mismatch = exchanged != local
+    return jnp.logical_and(on, mismatch)
+
+
+def resync_from_worker0(tree, axis_name):
+    """Reason-coded repair (REASON_RESYNC): every worker adopts worker
+    0's copy of ``tree``.  This is a state-sized all-gather -- call it
+    from a repair program AFTER the sentinel fires, never inside the
+    step (the per-step exchange stays at one collective)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.all_gather(x, axis_name=axis_name)[0], tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# seeded fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("nan_grad", "inf_grad", "corrupt_collective", "kill")
+
+
+class FaultEvent(NamedTuple):
+    step: int  # rbd step index at which the fault fires
+    kind: str  # one of FAULT_KINDS
+    worker: int = 0  # targeted worker (axis index / stacked row)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault schedule.  The jit-compatible injectors key
+    on the traced rbd step counter, so the same compiled program runs
+    faulted and clean steps; ``kill`` events are host-side
+    (:meth:`kill_steps` + :class:`SimulatedWorkerKill`)."""
+
+    events: tuple = ()
+
+    @classmethod
+    def single(cls, step: int, kind: str, worker: int = 0) -> "FaultPlan":
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        return cls((FaultEvent(step, kind, worker),))
+
+    @classmethod
+    def from_seed(
+        cls,
+        seed: int,
+        n_steps: int,
+        *,
+        kinds=FAULT_KINDS,
+        n_events: int = 3,
+        k_workers: int = 1,
+    ) -> "FaultPlan":
+        """Seeded random schedule over ``n_steps`` steps x ``k_workers``
+        workers -- the chaos lane derives its scenarios from here so
+        every failure is reproducible from one integer."""
+        r = random.Random(int(seed))
+        events = sorted(
+            FaultEvent(
+                r.randrange(n_steps), r.choice(tuple(kinds)), r.randrange(k_workers)
+            )
+            for _ in range(n_events)
+        )
+        return cls(tuple(events))
+
+    def of(self, *kinds: str) -> tuple:
+        return tuple(e for e in self.events if e.kind in kinds)
+
+    def without(self, *kinds: str) -> "FaultPlan":
+        """A copy without the given kinds (the resume harness drops the
+        already-fired ``kill`` so recovery does not re-die)."""
+        return FaultPlan(tuple(e for e in self.events if e.kind not in kinds))
+
+    def kill_steps(self) -> tuple:
+        return tuple(e.step for e in self.of("kill"))
+
+
+def inject_grad_faults(plan, step, packed_grads, worker_index=None):
+    """jit-compatible NaN/Inf injection into the packed gradient buffer
+    (element 0), keyed on the traced rbd ``step``.  ``worker_index``
+    targets one shard_map worker (``lax.axis_index``); with the
+    sequential simulation's stacked (K, q) gradients the event's worker
+    row is hit instead."""
+    if plan is None:
+        return packed_grads
+    g = packed_grads
+    step = jnp.asarray(step, jnp.uint32)
+    for ev in plan.of("nan_grad", "inf_grad"):
+        bad = jnp.float32(jnp.nan if ev.kind == "nan_grad" else jnp.inf)
+        hit = step == jnp.uint32(ev.step)
+        if worker_index is not None:
+            hit = jnp.logical_and(
+                hit, jnp.asarray(worker_index, jnp.uint32) == jnp.uint32(ev.worker)
+            )
+            g = g.at[0].set(jnp.where(hit, bad, g[0]))
+        elif g.ndim == 2:
+            g = g.at[ev.worker, 0].set(jnp.where(hit, bad, g[ev.worker, 0]))
+        else:
+            g = g.at[0].set(jnp.where(hit, bad, g[0]))
+    return g
+
+
+def inject_collective_faults(plan, step, coords, worker_index):
+    """jit-compatible corruption of a RECEIVED collective payload: on
+    the event's step, the targeted worker's post-exchange coordinate
+    buffer gets an Inf in element 0 (as if its incoming link flipped
+    bits).  Other workers see clean data -- the canonical divergence
+    seed the sentinel exists to catch."""
+    if plan is None:
+        return coords
+    step = jnp.asarray(step, jnp.uint32)
+    widx = jnp.asarray(worker_index, jnp.uint32)
+    for ev in plan.of("corrupt_collective"):
+        hit = jnp.logical_and(
+            step == jnp.uint32(ev.step), widx == jnp.uint32(ev.worker)
+        )
+        coords = coords.at[..., 0].set(
+            jnp.where(hit, jnp.float32(jnp.inf), coords[..., 0])
+        )
+    return coords
+
+
+# ---------------------------------------------------------------------------
+# coordinate replay log (append-only, CRC-framed)
+# ---------------------------------------------------------------------------
+
+
+class ReplayRecord(NamedTuple):
+    step: int  # rbd step index the record reproduces
+    reason: int  # REASON_* the guard assigned to that step
+    lr_scale: float  # informational (replay re-derives it)
+    coords: Optional[np.ndarray]  # post-exchange coords; None = rejected
+    row_sq: Optional[np.ndarray]  # squared row norms (when the step has them)
+
+
+class RecoveryEvent(NamedTuple):
+    step: int
+    reason: int
+    detail: str = ""
+
+
+class ReplayLog:
+    """Append-only CRC-framed coordinate log.
+
+    Layout: ``MAGIC | u32 meta_len | meta_json | u32 crc32(meta)`` then
+    per record ``REC | body | u32 crc32(body)`` with
+    ``body = u32 step | u32 reason | f32 lr_scale | u32 nbytes |
+    payload``.  The payload is the f32 bytes of the post-exchange
+    coordinate buffer (concatenated with its squared row norms when the
+    step carries them); a rejected step logs an EMPTY payload -- its
+    replay applies the same sanitized zeros the live step applied.
+    Reading stops (with a warning) at the first torn or corrupt frame;
+    appending to an existing log truncates that torn tail first."""
+
+    MAGIC = b"RBDRLOG1"
+    REC = b"REC0"
+
+    def __init__(self, path: str, *, meta: Optional[dict] = None, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        if os.path.exists(path) and os.path.getsize(path):
+            existing, _, end, truncated = self._read_raw(path)
+            if truncated:
+                warnings.warn(
+                    f"{path}: torn tail truncated before append", stacklevel=2
+                )
+            self.meta = existing
+            self._fh = open(path, "r+b")
+            self._fh.truncate(end)
+            self._fh.seek(end)
+        else:
+            if meta is None:
+                raise ValueError("a new replay log needs meta")
+            self.meta = dict(meta)
+            blob = json.dumps(self.meta, sort_keys=True).encode("utf-8")
+            self._fh = open(path, "wb")
+            self._fh.write(
+                self.MAGIC
+                + struct.pack("<I", len(blob))
+                + blob
+                + struct.pack("<I", zlib.crc32(blob))
+            )
+            self._flush()
+
+    def append(self, step: int, reason: int, lr_scale: float, coords=None, row_sq=None):
+        parts = []
+        if coords is not None:
+            parts.append(
+                np.asarray(jax.device_get(coords), np.float32).tobytes()
+            )
+            if row_sq is not None:
+                parts.append(
+                    np.asarray(jax.device_get(row_sq), np.float32).tobytes()
+                )
+        payload = b"".join(parts)
+        body = struct.pack(
+            "<IIfI", int(step), int(reason), float(lr_scale), len(payload)
+        )
+        body += payload
+        self._fh.write(self.REC + body + struct.pack("<I", zlib.crc32(body)))
+        self._flush()
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _flush(self):
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+
+    # -- reading ------------------------------------------------------------
+
+    @classmethod
+    def _read_raw(cls, path: str):
+        """(meta, [(step, reason, lr_scale, payload_bytes)], end_offset,
+        truncated) -- stops at the first bad frame."""
+        with open(path, "rb") as fh:
+            blob = fh.read()
+        hdr = len(cls.MAGIC)
+        if len(blob) < hdr + 4 or not blob.startswith(cls.MAGIC):
+            raise ValueError(f"{path}: not a replay log (bad magic)")
+        (mlen,) = struct.unpack_from("<I", blob, hdr)
+        off = hdr + 4
+        meta_raw = blob[off : off + mlen]
+        off += mlen
+        if len(meta_raw) != mlen or off + 4 > len(blob):
+            raise ValueError(f"{path}: corrupt replay-log header")
+        (mcrc,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        if zlib.crc32(meta_raw) != mcrc:
+            raise ValueError(f"{path}: replay-log header CRC mismatch")
+        meta = json.loads(meta_raw.decode("utf-8"))
+        raw, end, truncated = [], off, False
+        n = len(blob)
+        while off < n:
+            try:
+                if blob[off : off + 4] != cls.REC:
+                    raise ValueError("bad record magic")
+                body_off = off + 4
+                step, reason, lr_scale, nbytes = struct.unpack_from(
+                    "<IIfI", blob, body_off
+                )
+                payload_off = body_off + 16
+                crc_off = payload_off + nbytes
+                if crc_off + 4 > n:
+                    raise ValueError("short record")
+                (crc,) = struct.unpack_from("<I", blob, crc_off)
+                if zlib.crc32(blob[body_off:crc_off]) != crc:
+                    raise ValueError("record CRC mismatch")
+            except (struct.error, ValueError):
+                truncated = True
+                break
+            raw.append((step, reason, lr_scale, blob[payload_off:crc_off]))
+            off = crc_off + 4
+            end = off
+        return meta, raw, end, truncated
+
+    @classmethod
+    def read(cls, path: str):
+        """(meta, [ReplayRecord], truncated) -- truncated=True means a
+        torn/corrupt tail was dropped (warned, reason-coded upstream)."""
+        meta, raw, _, truncated = cls._read_raw(path)
+        if truncated:
+            warnings.warn(
+                f"{path}: torn replay-log tail ignored "
+                f"({len(raw)} valid records kept)",
+                stacklevel=2,
+            )
+        shape = tuple(meta["coords_shape"])
+        has_norms = bool(meta.get("has_norms", True))
+        count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        records = []
+        for step, reason, lr_scale, payload in raw:
+            coords = row_sq = None
+            if payload:
+                flat = np.frombuffer(payload, np.float32)
+                expected = count * (2 if has_norms else 1)
+                if flat.size != expected:
+                    raise ValueError(
+                        f"{path}: record {step} payload has {flat.size} "
+                        f"floats, meta expects {expected}"
+                    )
+                coords = flat[:count].reshape(shape)
+                if has_norms:
+                    row_sq = flat[count:].reshape(shape)
+            records.append(ReplayRecord(step, reason, lr_scale, coords, row_sq))
+        return meta, records, truncated
+
+
+def replay_meta(sub_opt) -> dict:
+    """Replay-log metadata for a SubspaceOptimizer's packed step."""
+    t = sub_opt.transform
+    plan = t.plan
+    d = plan.packed().d_packed
+    joint = sub_opt.joint_subspace
+    return {
+        "format": 1,
+        "base_seed": int(t.base_seed),
+        "optimizer": sub_opt.optimizer,
+        "mode": sub_opt.mode,
+        "normalization": plan.normalization,
+        "k_workers": int(sub_opt.k_workers),
+        "d_packed": int(d),
+        "coords_shape": [int(sub_opt.k_workers), int(d)] if joint else [int(d)],
+        "has_norms": bool(
+            (not joint) or plan.normalization == "exact"
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# recovery: restore snapshot + replay coordinates (no gradients)
+# ---------------------------------------------------------------------------
+
+
+def replay_records(sub_opt, state, records):
+    """Apply logged coordinate records on top of ``state`` through
+    ``SubspaceOptimizer.apply_exchanged`` -- the SAME post-exchange code
+    path the live step runs, so replay is bit-exact by construction.
+    Returns ``(new_state, n_applied)``."""
+    if not records:
+        return state, 0
+    guarded = sub_opt.guard is not None
+    has_norms = (not sub_opt.joint_subspace) or (
+        sub_opt.transform.plan.normalization == "exact"
+    )
+
+    def apply_fn(params, coords, sq, rbd, opt_state, guard, reason):
+        return sub_opt.apply_exchanged(
+            params, coords, sq, rbd, opt_state, guard_state=guard, reason=reason
+        )
+
+    apply_jit = jax.jit(apply_fn)
+    params = state.params
+    rbd = state.rbd_state
+    opt_state = state.opt_state
+    guard = getattr(state, "guard", ())
+    zeros = None
+    n = 0
+    for rec in records:
+        if rec.coords is None:
+            if not guarded:
+                raise ValueError(
+                    "rejected-step record in an unguarded replay "
+                    f"(step {rec.step}, reason {reason_name(rec.reason)})"
+                )
+            if zeros is None:
+                zeros = jnp.zeros_like(sub_opt._coord_template())
+            coords = zeros
+            sq = jnp.ones_like(zeros) if has_norms else None
+        else:
+            coords = jnp.asarray(rec.coords)
+            sq = jnp.asarray(rec.row_sq) if rec.row_sq is not None else None
+        reason = jnp.int32(rec.reason) if guarded else None
+        params, rbd, opt_state, guard = apply_jit(
+            params, coords, sq, rbd, opt_state, guard, reason
+        )
+        n += 1
+    new_state = state._replace(
+        params=params, rbd_state=rbd, opt_state=opt_state, step=state.step + n
+    )
+    if hasattr(state, "guard"):
+        new_state = new_state._replace(guard=guard)
+    return new_state, n
+
+
+def recover(cfg, sub_opt, template_state):
+    """Restore the newest VALID snapshot under ``cfg.directory`` and
+    replay the coordinate log forward.  ``template_state`` is the fresh
+    init state (it doubles as the restore template and as the replay
+    base when the log starts at step 0 and no snapshot exists yet).
+    Returns ``(state, info)``; ``state`` is None when there is nothing
+    to recover.  Every degraded path lands a reason-coded
+    :class:`RecoveryEvent` in ``info['events']``."""
+    from repro.checkpoint import io as ckpt_io
+
+    info = {
+        "snapshot_step": None,
+        "replayed": 0,
+        "truncated": False,
+        "events": [],
+    }
+    if not cfg.directory:
+        return None, info
+    snap_dir = os.path.join(cfg.directory, "snapshots")
+    log_path = os.path.join(cfg.directory, "replay.log")
+    steps = ckpt_io.valid_steps(snap_dir) if os.path.isdir(snap_dir) else []
+    if os.path.isdir(snap_dir):
+        n_skipped = len(
+            [f for f in os.listdir(snap_dir) if f.endswith(".npz")]
+        ) - len(steps)
+        if n_skipped > 0:
+            info["events"].append(
+                RecoveryEvent(
+                    max(steps) if steps else -1,
+                    REASON_CKPT_CORRUPT,
+                    f"{n_skipped} corrupt/partial snapshot(s) skipped",
+                )
+            )
+    state = None
+    for s in sorted(steps, reverse=True):
+        # newest intact snapshot wins; a structurally valid pair that
+        # fails payload/CRC verification is reason-coded and skipped --
+        # the log replays the extra distance from an older snapshot
+        try:
+            state = ckpt_io.restore(snap_dir, template_state, s)
+        except (ValueError, OSError) as e:
+            info["events"].append(
+                RecoveryEvent(
+                    s,
+                    REASON_CKPT_CORRUPT,
+                    f"snapshot step {s} failed verification ({e}); "
+                    "falling back to an older one",
+                )
+            )
+            continue
+        info["snapshot_step"] = s
+        break
+    records = []
+    if os.path.exists(log_path):
+        _, records, truncated = ReplayLog.read(log_path)
+        info["truncated"] = truncated
+        if truncated:
+            info["events"].append(
+                RecoveryEvent(
+                    records[-1].step if records else -1,
+                    REASON_LOG_TRUNCATED,
+                    "torn replay-log tail dropped",
+                )
+            )
+    if state is None:
+        if not records:
+            return None, info
+        # log exists but no usable snapshot: replay from the fresh init
+        state = template_state
+    base = int(state.step)
+    todo = [r for r in records if r.step >= base]
+    run = []
+    for i, rec in enumerate(todo):
+        if rec.step != base + i:
+            info["events"].append(
+                RecoveryEvent(
+                    rec.step,
+                    REASON_LOG_TRUNCATED,
+                    f"non-contiguous record (expected step {base + i}); "
+                    "replay stops here",
+                )
+            )
+            break
+        run.append(rec)
+    state, n = replay_records(sub_opt, state, run)
+    info["replayed"] = n
+    return state, info
+
+
+# ---------------------------------------------------------------------------
+# config + host-side monitor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """One switchboard for every resilience feature.  ``directory``
+    turns on the replay log + sparse snapshots; ``guard`` the
+    non-finite step guard; ``sentinel_every`` the divergence sentinel
+    (0 = off); ``fault_plan`` the injection harness (tests/chaos CI
+    only)."""
+
+    directory: Optional[str] = None
+    snapshot_every: int = 50
+    guard: Optional[GuardConfig] = None
+    sentinel_every: int = 0
+    on_divergence: str = "fail"  # "fail" (CI) | "repair" (launcher resyncs)
+    fault_plan: Optional[FaultPlan] = None
+    fsync: bool = True
+
+    @property
+    def any_enabled(self) -> bool:
+        return bool(
+            self.directory
+            or self.guard
+            or self.sentinel_every
+            or self.fault_plan
+        )
+
+
+class ResilienceMonitor:
+    """Host-side companion of the guarded train step: appends replay
+    records, writes sparse snapshots, accumulates reason-coded
+    :class:`RecoveryEvent`s, and raises
+    :class:`ReplicaDivergenceError` in the hard-failure mode.  Call
+    :meth:`observe` after every step with the post-step state and the
+    step's metrics dict."""
+
+    def __init__(self, cfg: ResilienceConfig, sub_opt):
+        self.cfg = cfg
+        self.sub_opt = sub_opt
+        self.events: list = []
+        self.log: Optional[ReplayLog] = None
+        if cfg.directory:
+            os.makedirs(self.snapshot_dir, exist_ok=True)
+            self.log = ReplayLog(
+                os.path.join(cfg.directory, "replay.log"),
+                meta=replay_meta(sub_opt),
+                fsync=cfg.fsync,
+            )
+
+    @property
+    def snapshot_dir(self) -> str:
+        return os.path.join(self.cfg.directory, "snapshots")
+
+    def should_kill(self, step: int) -> bool:
+        plan = self.cfg.fault_plan
+        return plan is not None and any(
+            e.step == step for e in plan.of("kill")
+        )
+
+    def snapshot(self, state) -> str:
+        """RAW packed TrainState snapshot (params stay packed: replay
+        operates on the stored representation)."""
+        from repro.checkpoint import io as ckpt_io
+
+        return ckpt_io.save(
+            self.snapshot_dir, jax.device_get(state), int(state.step)
+        )
+
+    def observe(self, state, metrics) -> list:
+        """Returns the new RecoveryEvents for this step (also kept on
+        ``self.events``)."""
+        step = int(state.step) - 1
+        new: list = []
+        reason = int(metrics.get("guard_reason", REASON_OK))
+        lr_scale = float(metrics.get("guard_lr_scale", 1.0))
+        if reason != REASON_OK:
+            new.append(
+                RecoveryEvent(
+                    step,
+                    reason,
+                    f"step rejected ({reason_name(reason)}); "
+                    f"effective-lr scale -> {lr_scale:g}",
+                )
+            )
+        if self.log is not None:
+            if reason == REASON_OK:
+                self.log.append(
+                    step,
+                    reason,
+                    lr_scale,
+                    coords=metrics["replay_coords"],
+                    row_sq=metrics.get("replay_row_sq"),
+                )
+            else:
+                self.log.append(step, reason, lr_scale)
+            every = self.cfg.snapshot_every
+            if every and (step + 1) % every == 0:
+                self.snapshot(state)
+        if bool(metrics.get("sentinel_diverged", False)):
+            new.append(
+                RecoveryEvent(
+                    step,
+                    REASON_REPLICA_DIVERGENCE,
+                    "coordinate-state checksums disagree across workers",
+                )
+            )
+        self.events.extend(new)
+        if any(e.reason == REASON_REPLICA_DIVERGENCE for e in new):
+            if self.cfg.on_divergence == "fail":
+                raise ReplicaDivergenceError(
+                    f"replica divergence detected at step {step} "
+                    "(sentinel checksum mismatch)"
+                )
+        return new
+
+
+__all__ = [
+    "REASON_OK",
+    "REASON_NONFINITE_LOCAL",
+    "REASON_NONFINITE_EXCHANGE",
+    "REASON_REPLICA_DIVERGENCE",
+    "REASON_CKPT_CORRUPT",
+    "REASON_LOG_TRUNCATED",
+    "REASON_RESYNC",
+    "REASON_WORKER_KILLED",
+    "reason_name",
+    "ReplicaDivergenceError",
+    "SimulatedWorkerKill",
+    "GuardConfig",
+    "GuardState",
+    "guard_init",
+    "guard_transition",
+    "all_finite",
+    "state_checksum",
+    "sentinel_rider",
+    "sentinel_check",
+    "resync_from_worker0",
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultPlan",
+    "inject_grad_faults",
+    "inject_collective_faults",
+    "ReplayRecord",
+    "RecoveryEvent",
+    "ReplayLog",
+    "replay_meta",
+    "replay_records",
+    "recover",
+    "ResilienceConfig",
+    "ResilienceMonitor",
+]

@@ -72,7 +72,8 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                        rbd_mode: str = "shared_basis",
                        packed: str = "auto",
                        normalization: str = "rsqrt_dim",
-                       prng_impl: str = "threefry"):
+                       prng_impl: str = "threefry",
+                       guard: bool = False):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
     mode='sharedseed' wraps the step in shard_map (manual over the batch
@@ -97,6 +98,12 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     batch_shape = model.batch_specs(shape)
 
+    resilience = None
+    if guard:
+        from repro.core.resilience import GuardConfig, ResilienceConfig
+
+        resilience = ResilienceConfig(guard=GuardConfig())
+
     if mode == "sharedseed":
         from jax.sharding import PartitionSpec as P
 
@@ -109,7 +116,8 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
             k_workers *= mesh.shape[a]
         init_fn, inner, sub_opt = train_step_lib.make_train_step(
             model, tcfg, transform, axis_name=tuple(baxes),
-            k_workers=k_workers, return_optimizer=True)
+            k_workers=k_workers, return_optimizer=True,
+            resilience=resilience)
         _print_update_path(sub_opt)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         repl_state = jax.tree_util.tree_map(lambda _: P(), state_shape)
@@ -117,6 +125,9 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                                             batch_shape)
         metrics_spec = {k: P() for k in
                         ("ce", "aux", "loss", "update_norm")}
+        if sub_opt.guard is not None:
+            metrics_spec.update(guard_reason=P(), guard_count=P(),
+                                guard_lr_scale=P())
         step_fn = shard_map_compat(
             inner, mesh=mesh,
             in_specs=(repl_state, batch_spec),
@@ -128,7 +139,7 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     # pjit modes shard params over the production mesh's model axis
     init_fn, step_fn, sub_opt = train_step_lib.make_train_step(
         model, tcfg, transform, model_sharded=True,
-        return_optimizer=True)
+        return_optimizer=True, resilience=resilience)
     _print_update_path(sub_opt)
     state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     return step_fn, (state_shape, batch_shape)
@@ -140,6 +151,12 @@ def _print_update_path(sub_opt):
     print(f"      update path [{fused}]: {ep.strategy} -- {ep.reason}")
     if sub_opt.transform is not None:
         print(f"      prng impl: {ep.prng_impl} -- {ep.prng_reason}")
+    if sub_opt.resilience_active:
+        print("      resilience: "
+              f"guard={'on' if sub_opt.guard is not None else 'off'} "
+              f"sentinel_every={sub_opt.sentinel_every} "
+              f"capture={'on' if sub_opt.capture_coords else 'off'} -- "
+              "guarded step keeps two launches and one collective")
 
 
 def build_prefill_inputs(model, shape: InputShape):
@@ -193,6 +210,7 @@ def shardings_for(args_shape, mesh, cfg=None):
                 opt_state=jax.tree_util.tree_map(lambda _: P(),
                                                  arg.opt_state),
                 step=P(),
+                guard=jax.tree_util.tree_map(lambda _: P(), arg.guard),
             )
         elif isinstance(arg, dict) and ("len" in arg):       # cache
             specs = rules.cache_specs(arg, mesh)
@@ -216,7 +234,7 @@ def should_skip(cfg, shape: InputShape) -> str | None:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "rbd", rbd_mode: str = "shared_basis",
             packed: str = "auto", normalization: str = "rsqrt_dim",
-            prng_impl: str = "threefry",
+            prng_impl: str = "threefry", guard: bool = False,
             out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
@@ -241,7 +259,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                             rbd_mode=rbd_mode,
                                             packed=packed,
                                             normalization=normalization,
-                                            prng_impl=prng_impl)
+                                            prng_impl=prng_impl,
+                                            guard=guard)
     elif shape.kind == "prefill":
         fn, args_shape = build_prefill_inputs(model, shape)
     else:
@@ -343,6 +362,10 @@ def main():
                     choices=["threefry", "hw", "hw_emulated"],
                     help="basis-generation PRNG backend (hw degrades to "
                          "hw_emulated off-TPU with a printed reason)")
+    ap.add_argument("--guard", action="store_true",
+                    help="compile the non-finite-guarded step and print "
+                         "the resilience plan (the guard must keep the "
+                         "packed step at two launches + one collective)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="reports/dryrun")
     args = ap.parse_args()
@@ -363,7 +386,8 @@ def main():
             r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
                         rbd_mode=args.rbd_mode, packed=args.packed,
                         normalization=args.normalization,
-                        prng_impl=args.prng_impl, out_dir=args.out)
+                        prng_impl=args.prng_impl, guard=args.guard,
+                        out_dir=args.out)
             if "skipped" in r:
                 print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")
             else:

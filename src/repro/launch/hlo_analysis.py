@@ -206,7 +206,8 @@ def _collect_collectives(jaxpr, sites) -> None:
 def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
                                kinds=("pmean", "psum"),
                                n_launches: int | None = 2,
-                               widened: bool = False) -> None:
+                               widened: bool = False,
+                               extra: int = 0) -> None:
     """Assert the packed sharedseed communication contract on ``fn``'s
     traced program, for BOTH exchange modes:
 
@@ -230,9 +231,15 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
     its strongest form: d (or K*d) floats per step, two launches, no
     gradient all-reduce, for every optimizer x mode x normalization
     combination.
+
+    ``extra`` adds a fixed element count on top of the (possibly
+    widened) payload -- the divergence sentinel's checksum RIDES the
+    coordinate exchange as exactly one extra scalar per step
+    (``extra=1``), keeping the collective count at one.
     """
     if widened:
         payload = 2 * payload
+    payload += extra
     if n_launches is not None:
         got = count_pallas_calls(fn, *args)
         assert got == n_launches, (

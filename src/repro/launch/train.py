@@ -85,6 +85,30 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--guard", action="store_true",
+                    help="non-finite step guard: a NaN/Inf step is "
+                         "rejected (params and optimizer state untouched, "
+                         "reason-coded) and the effective LR backs off; "
+                         "detection reads only the (d,)-sized coordinate "
+                         "buffers and the step stays two launches")
+    ap.add_argument("--resilience-dir", default=None,
+                    help="directory for the coordinate replay log + "
+                         "sparse packed snapshots (micro-checkpoints); "
+                         "recovery = newest intact snapshot + replay of "
+                         "the logged d-dimensional updates")
+    ap.add_argument("--snapshot-every", type=int, default=50,
+                    help="sparse full-state snapshot period (steps)")
+    ap.add_argument("--sentinel-every", type=int, default=0,
+                    help="replica-divergence sentinel period (0 = off); "
+                         "the checksum rides the existing coordinate "
+                         "exchange as ONE extra scalar")
+    ap.add_argument("--on-divergence", default="fail",
+                    choices=["fail", "repair"],
+                    help="divergence response: hard failure (CI) or "
+                         "reason-coded re-broadcast from worker 0")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from --resilience-dir (snapshot + "
+                         "coordinate replay) before training")
     args = ap.parse_args(argv)
 
     if args.fake_devices:
@@ -97,6 +121,18 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(compute_dtype="float32")
+
+    resilience = None
+    if args.guard or args.resilience_dir or args.sentinel_every:
+        from repro.core.resilience import GuardConfig, ResilienceConfig
+
+        resilience = ResilienceConfig(
+            directory=args.resilience_dir,
+            snapshot_every=args.snapshot_every,
+            guard=GuardConfig() if args.guard else None,
+            sentinel_every=args.sentinel_every,
+            on_divergence=args.on_divergence)
+
     return run_training(
         cfg, mode=args.mode, rbd_mode=args.rbd_mode, data=args.data,
         model_axis=args.model, steps=args.steps, batch=args.batch,
@@ -108,7 +144,8 @@ def main(argv=None):
         momentum_beta=args.momentum_beta, nesterov=args.nesterov,
         adam_b1=args.adam_b1, adam_b2=args.adam_b2,
         adam_eps=args.adam_eps,
-        checkpoint_dir=args.checkpoint_dir)
+        checkpoint_dir=args.checkpoint_dir,
+        resilience=resilience, resume=args.resume)
 
 
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
@@ -118,7 +155,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  packed="auto", prng_impl="threefry",
                  optimizer="sgd", weight_decay=0.0,
                  momentum_beta=0.9, nesterov=False, adam_b1=0.9,
-                 adam_b2=0.999, adam_eps=1e-8, checkpoint_dir=None):
+                 adam_b2=0.999, adam_eps=1e-8, checkpoint_dir=None,
+                 resilience=None, resume=False):
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -159,12 +197,21 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     init_state, train_step, sub_opt = steplib.make_train_step(
         model, tcfg, transform, axis_name=axis_name,
         model_sharded=model_sharded, k_workers=k_workers,
-        return_optimizer=True)
+        return_optimizer=True, resilience=resilience)
     eplan = sub_opt.plan_execution()
     print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
     if rbd_cfg.enabled:
         print(f"prng impl: {eplan.prng_impl} -- {eplan.prng_reason}",
               flush=True)
+    if resilience is not None and resilience.any_enabled:
+        from repro.core import resilience as res_lib
+
+        print("resilience: "
+              f"guard={'on' if resilience.guard else 'off'} "
+              f"sentinel_every={resilience.sentinel_every} "
+              f"replay_log={'on' if resilience.directory else 'off'} "
+              f"snapshot_every={resilience.snapshot_every} "
+              f"on_divergence={resilience.on_divergence}", flush=True)
 
     # full state shape (params may be the packed buffer) drives the specs
     state_shape = jax.eval_shape(init_state, jax.random.PRNGKey(tcfg.seed))
@@ -196,6 +243,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                                          state_shape.rbd_state),
         opt_state=opt_specs,
         step=P(),
+        # GuardState scalars replicate (empty () when the guard is off)
+        guard=jax.tree_util.tree_map(lambda _: P(), state_shape.guard),
     )
 
     with mesh:
@@ -215,23 +264,85 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
             batch_spec = {"tokens": P("data"), "labels": P("data")}
             repl = jax.tree_util.tree_map(lambda _: P(), state_specs,
                                           is_leaf=lambda x: isinstance(x, P))
+            # post-exchange metrics are worker-invariant: replicate them
+            # (resilience keys exist only when statically enabled, so the
+            # plain config's out_specs -- and program -- are unchanged)
+            metrics_spec = {"ce": P(), "aux": P(), "loss": P(),
+                            "update_norm": P()}
+            if sub_opt.guard is not None:
+                metrics_spec.update(guard_reason=P(), guard_count=P(),
+                                    guard_lr_scale=P())
+            if sub_opt.sentinel_every:
+                metrics_spec["sentinel_diverged"] = P()
+            if sub_opt.capture_coords:
+                metrics_spec["replay_coords"] = P()
+                if (not sub_opt.joint_subspace
+                        or rbd_cfg.normalization == "exact"):
+                    metrics_spec["replay_row_sq"] = P()
             step_fn = jax.jit(shard_map_compat(
                 train_step, mesh=mesh,
                 in_specs=(repl, batch_spec),
-                out_specs=(repl,
-                           jax.tree_util.tree_map(lambda _: P(), {
-                               "ce": 0, "aux": 0, "loss": 0,
-                               "update_norm": 0})),
+                out_specs=(repl, metrics_spec),
                 manual_axes=("data",),
             ))
+            if (resilience is not None and resilience.any_enabled
+                    and resilience.on_divergence == "repair"):
+                # reason-coded repair: re-broadcast every state buffer
+                # from worker 0 (a separate program, run only on
+                # detection -- the per-step exchange stays ONE collective)
+                resync_fn = jax.jit(shard_map_compat(
+                    lambda s: res_lib.resync_from_worker0(s, "data"),
+                    mesh=mesh, in_specs=(repl,), out_specs=repl,
+                    manual_axes=("data",)))
+            else:
+                resync_fn = None
         else:
             step_fn = jax.jit(train_step)
+            resync_fn = None
+
+        monitor = None
+        start = 0
+        if resilience is not None and resilience.any_enabled:
+            if resume and resilience.directory:
+                recovered, info = res_lib.recover(resilience, sub_opt,
+                                                  jax.device_get(state))
+                if recovered is not None:
+                    state = recovered
+                    start = int(state.step)
+                    print(f"recovered to step {start} (snapshot "
+                          f"{info['snapshot_step']}, replayed "
+                          f"{info['replayed']} records)", flush=True)
+                    for ev in info["events"]:
+                        print(f"[resilience] step {ev.step}: "
+                              f"{res_lib.reason_name(ev.reason)} -- "
+                              f"{ev.detail}", flush=True)
+            monitor = res_lib.ResilienceMonitor(resilience, sub_opt)
 
         stream = synthetic.lm_batches(tcfg.seed, batch, seq, cfg.vocab)
+        for _ in range(start):
+            next(stream)  # keep the data stream step-aligned on resume
         t0 = time.time()
-        for i in range(steps):
+        for i in range(start, steps):
+            if monitor is not None and monitor.should_kill(i):
+                raise res_lib.SimulatedWorkerKill(
+                    f"fault plan kills step {i}")
             b = next(stream)
             state, metrics = step_fn(state, b)
+            if monitor is not None:
+                events = monitor.observe(state, metrics)
+                for ev in events:
+                    print(f"[resilience] step {ev.step}: "
+                          f"{res_lib.reason_name(ev.reason)} -- "
+                          f"{ev.detail}", flush=True)
+                if resync_fn is not None and any(
+                        e.reason == res_lib.REASON_REPLICA_DIVERGENCE
+                        for e in events):
+                    state = resync_fn(state)
+                    monitor.events.append(res_lib.RecoveryEvent(
+                        i, res_lib.REASON_RESYNC,
+                        "state re-broadcast from worker 0"))
+                    print(f"[resilience] step {i}: resync -- state "
+                          "re-broadcast from worker 0", flush=True)
             print(f"step {i} loss={float(metrics['loss']):.4f} "
                   f"wall={time.time() - t0:.1f}s", flush=True)
 

@@ -230,7 +230,25 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
 
 
 class _Aux(NamedTuple):
+    """Step byproducts.  Fields default to () so the aux pytree only
+    grows when the corresponding resilience feature is enabled -- the
+    unguarded step's traced program (and its metrics out_specs) stays
+    byte-identical to the pre-resilience one."""
+
     update_norm: jax.Array
+    coords: Any = ()      # post-exchange coordinate buffer (replay capture)
+    row_sq: Any = ()      # its squared row norms, when the step has them
+    guard: Any = ()       # new GuardState (non-finite step guard on)
+    reason: Any = ()      # i32 REASON_* code of this step (guard on)
+    diverged: Any = ()    # bool sentinel verdict (sentinel on)
+
+
+def _all_finite(*arrays):
+    ok = jnp.bool_(True)
+    for a in arrays:
+        if a is not None:
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(a)))
+    return ok
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -268,6 +286,13 @@ class SubspaceOptimizer:
     log_update_norm: bool = True
     params_template: Any = None       # pytree of shapes/dtypes; required
                                       # for the packed-resident strategy
+    # -- resilience hooks (core.resilience; all default OFF, and the
+    #    traced step program is unchanged while they stay off) --
+    guard: Any = None                 # GuardConfig -> non-finite step guard
+    sentinel_every: int = 0           # divergence-sentinel cadence (0=off)
+    capture_coords: bool = False      # emit post-exchange coords on aux
+                                      # (the replay log's per-step record)
+    fault_plan: Any = None            # FaultPlan (tests / chaos CI only)
 
     @classmethod
     def from_config(cls, tcfg, transform=None, axis_name=None,
@@ -384,24 +409,125 @@ class SubspaceOptimizer:
 
     # -- the update ---------------------------------------------------------
 
-    def step(self, params, grads, rbd_state, opt_state):
+    @property
+    def resilience_active(self) -> bool:
+        return bool(self.guard is not None or self.sentinel_every
+                    or self.capture_coords or self.fault_plan is not None)
+
+    def step(self, params, grads, rbd_state, opt_state, guard_state=()):
         """One optimizer step.  Returns
         ``(new_params, new_rbd_state, new_opt_state, aux)`` with
         ``aux.update_norm`` the full-space update norm (zeros when
         ``log_update_norm`` is off).  ``params``/``grads`` are in the
-        stored representation."""
+        stored representation.  ``guard_state`` threads the non-finite
+        step guard's GuardState when ``guard`` is configured (the new
+        state comes back on ``aux.guard``)."""
         eplan = self.plan_execution()
+        if self.resilience_active and eplan.strategy != "fused_packed":
+            raise ValueError(
+                "resilience features (guard/sentinel/replay capture/"
+                "fault injection) require the packed two-launch "
+                f"strategy; this config plans {eplan.strategy!r} -- "
+                + eplan.reason)
         if eplan.strategy == "full_space":
             return self._full_space_step(params, grads, rbd_state,
                                          opt_state)
         if eplan.strategy == "fused_packed":
             return self._packed_step(params, grads, rbd_state, opt_state,
-                                     eplan)
+                                     eplan, guard_state)
         return self._per_leaf_step(params, grads, rbd_state, opt_state,
                                    fused=(eplan.strategy
                                           == "fused_per_leaf"))
 
-    def _packed_step(self, params, grads, rbd_state, opt_state, eplan):
+    def apply_exchanged(self, params, coords, sq, rbd_state, opt_state,
+                        guard_state=(), reason=None):
+        """The POST-EXCHANGE half of the packed step: [guard
+        transition + sanitize] -> coordinate-space optimizer ->
+        reconstruct-apply.  Both the live step and coordinate replay
+        (``core.resilience.replay_records``) run THIS code path, which
+        is what makes restore+replay bit-exact by construction -- no
+        numerical contract to maintain between two implementations.
+
+        ``coords``/``sq`` are the post-exchange buffers ((d_packed,) or
+        the gathered (K, d_packed); ``sq`` may be None on the joint
+        path under static-factor normalizations).  ``reason`` is this
+        step's REASON_* code (i32, traced); with a guard configured, a
+        non-OK reason zeroes the applied update and freezes the
+        optimizer state bit-exactly while still advancing the basis
+        schedule.  Returns ``(new_params, new_rbd_state, new_opt_state,
+        new_guard_state)``."""
+        eplan = self.plan_execution()
+        if eplan.strategy != "fused_packed":
+            raise ValueError(
+                "apply_exchanged is the packed two-launch step's "
+                f"post-exchange half; this config plans {eplan.strategy!r}")
+        return self._apply_exchanged(params, coords, sq, rbd_state,
+                                     opt_state, guard_state, reason, eplan)
+
+    def _apply_exchanged(self, params, coords, sq, rbd_state, opt_state,
+                         guard_state, reason, eplan):
+        t = self.transform
+        plan = t.plan
+        layout = plan.packed()
+        prng = eplan.prng_impl
+        seed = t.step_seed(rbd_state.step)
+        gain = None
+        ok = None
+        new_guard = guard_state
+        if self.guard is not None:
+            from repro.core import resilience
+
+            if reason is None:
+                reason = jnp.zeros((), jnp.int32)
+            reason = jnp.asarray(reason, jnp.int32)
+            ok = reason == resilience.REASON_OK
+            new_guard = resilience.guard_transition(self.guard, guard_state,
+                                                    reason)
+            # sanitize BEFORE the optimizer so NaN/Inf never reach the
+            # state buffers; sq -> 1 keeps the 'exact' rsqrt finite
+            coords = jnp.where(ok, coords, jnp.zeros_like(coords))
+            if sq is not None:
+                sq = jnp.where(ok, sq, jnp.ones_like(sq))
+            # rejected step applies a gain of exactly 0 (theta - 0 is
+            # bit-exact); accepted steps scale by the effective-LR
+            # backoff (1.0 in a healthy run -- multiplying by 1.0 is
+            # bit-exact, so the guarded healthy step matches the
+            # unguarded one)
+            gain = jnp.where(ok, new_guard.lr_scale, jnp.float32(0.0))
+        coords_u, new_opt = self._optimizer().update(coords, opt_state)
+        if gain is not None:
+            coords_u = coords_u * gain
+            # freeze the optimizer state on rejected steps (momentum/
+            # adam must not absorb the sanitized zeros' decay)
+            new_opt = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+        if self.joint_subspace:
+            new_params = projector.reconstruct_apply_packed_workers(
+                coords_u, plan, seed, params,
+                self.learning_rate / self.k_workers, backend=t.backend,
+                row_sq=sq, layout=layout, prepacked=True, prng=prng)
+        else:
+            new_params = projector.reconstruct_apply_packed(
+                coords_u, plan, seed, params, self.learning_rate,
+                backend=t.backend, row_sq=sq, layout=layout, prepacked=True,
+                prng=prng)
+        return (new_params, RBDState(step=rbd_state.step + 1), new_opt,
+                new_guard)
+
+    def _resilience_aux(self, params, new_params, coords, sq, new_guard,
+                        reason, diverged) -> _Aux:
+        base = self._delta_aux(params, new_params)
+        return base._replace(
+            coords=coords if self.capture_coords else (),
+            row_sq=(sq if (self.capture_coords and sq is not None)
+                    else ()),
+            guard=new_guard if self.guard is not None else (),
+            reason=reason if self.guard is not None else (),
+            diverged=diverged,
+        )
+
+    def _packed_step(self, params, grads, rbd_state, opt_state, eplan,
+                     guard_state=()):
         """Two launches: project || (d,)-state optimizer || reconstruct-
         apply.  With ``axis_name`` set, ONE pmean of the packed (d,)
         coordinate buffer is the entire per-step exchange -- for sgd,
@@ -410,10 +536,19 @@ class SubspaceOptimizer:
         Under 'exact' normalization the one pmean WIDENS to the
         concatenated (2d,) coords+norms buffer (the row norms come out
         of the projection launch as its second output), so the exchange
-        count never changes with the normalization."""
+        count never changes with the normalization.
+
+        Resilience hooks (all static, OFF by default): the non-finite
+        guard reason-codes the step from the (d,)-sized buffers (a bad
+        gradient element provably poisons the projected coordinates, so
+        no D-sized check is ever needed); the divergence sentinel's
+        checksum RIDES the existing exchange as one extra scalar; fault
+        injection corrupts the received payload post-exchange.  None of
+        them adds a launch or a collective."""
         if self.joint_subspace:
             return self._packed_independent_step(params, grads, rbd_state,
-                                                 opt_state, eplan)
+                                                 opt_state, eplan,
+                                                 guard_state)
         t = self.transform
         plan = t.plan
         layout = plan.packed()
@@ -422,22 +557,60 @@ class SubspaceOptimizer:
         coords, sq = projector.project_packed(
             grads, plan, seed, backend=t.backend, layout=layout,
             return_norms=True, prepacked=True, prng=prng)
+        local_ok = (_all_finite(coords, sq) if self.guard is not None
+                    else None)
+        rider = rider_out = None
+        if self.sentinel_every:
+            from repro.core import resilience
+
+            rider = resilience.sentinel_rider(opt_state, params)
         if self.axis_name is not None:
             from repro.core import distributed
 
-            coords, sq = distributed.shared_basis_packed_exchange(
+            out = distributed.shared_basis_packed_exchange(
                 coords, sq, self.axis_name,
-                widened=(plan.normalization == "exact"))
-        coords, opt_state = self._optimizer().update(coords, opt_state)
-        new_params = projector.reconstruct_apply_packed(
-            coords, plan, seed, params, self.learning_rate,
-            backend=t.backend, row_sq=sq, layout=layout, prepacked=True,
-            prng=prng)
-        return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
-                self._delta_aux(params, new_params))
+                widened=(plan.normalization == "exact"), rider=rider)
+            if rider is None:
+                coords, sq = out
+            else:
+                coords, sq, rider_out = out
+        elif rider is not None:
+            rider_out = rider   # single process: trivially in agreement
+        if self.fault_plan is not None:
+            from repro.core import resilience
+
+            widx = (jax.lax.axis_index(self.axis_name)
+                    if self.axis_name is not None else 0)
+            coords = resilience.inject_collective_faults(
+                self.fault_plan, rbd_state.step, coords, widx)
+        reason = None
+        if self.guard is not None:
+            from repro.core import resilience
+
+            reason = jnp.where(
+                local_ok,
+                jnp.where(_all_finite(coords, sq),
+                          resilience.REASON_OK,
+                          resilience.REASON_NONFINITE_EXCHANGE),
+                resilience.REASON_NONFINITE_LOCAL).astype(jnp.int32)
+        diverged = ()
+        if rider_out is not None:
+            from repro.core import resilience
+
+            diverged = resilience.sentinel_check(
+                rider, rider_out, rbd_state.step, self.sentinel_every)
+        new_params, new_rbd, new_opt, new_guard = self._apply_exchanged(
+            params, coords, sq, rbd_state, opt_state, guard_state, reason,
+            eplan)
+        if not self.resilience_active:
+            return (new_params, new_rbd, new_opt,
+                    self._delta_aux(params, new_params))
+        return (new_params, new_rbd, new_opt,
+                self._resilience_aux(params, new_params, coords, sq,
+                                     new_guard, reason, diverged))
 
     def _packed_independent_step(self, params, grads, rbd_state,
-                                 opt_state, eplan):
+                                 opt_state, eplan, guard_state=()):
         """Packed independent_bases (paper Algorithm 1): still exactly
         two launches.  Launch 1 projects the local prepacked gradient
         onto THIS worker's basis; ONE all-gather of the (d_packed,)
@@ -465,20 +638,41 @@ class SubspaceOptimizer:
         prng = eplan.prng_impl
         exact = (plan.normalization == "exact")
         seed = t.step_seed(rbd_state.step)
+        guard_on = self.guard is not None
+        rider = riders = None
+        if self.sentinel_every:
+            from repro.core import resilience
+
+            rider = resilience.sentinel_rider(opt_state, params)
         gathered_sq = None
+        local_ok = None
+        widx = 0
         if self.axis_name is not None:
             from repro.core import distributed
 
-            gathered = distributed.independent_bases_coords(
+            widx = jax.lax.axis_index(self.axis_name)
+            out = distributed.independent_bases_coords(
                 t, grads, rbd_state, self.axis_name, layout=layout,
-                prng=prng, return_norms=exact)
-            if exact:
-                gathered, gathered_sq = gathered
+                prng=prng, return_norms=exact, rider=rider)
+            if rider is not None:
+                gathered, gathered_sq, riders = out
+            elif exact:
+                gathered, gathered_sq = out
+            else:
+                gathered = out
             if gathered.shape[0] != self.k_workers:
                 raise ValueError(
                     f"k_workers={self.k_workers} does not match the "
                     f"'{self.axis_name}' mesh axis size "
                     f"{gathered.shape[0]}")
+            if guard_on:
+                # own-row check only LABELS the reason (LOCAL vs
+                # EXCHANGE); the accept/reject decision comes from the
+                # whole gathered buffer below, which every worker sees
+                # identically -- so the guarded update stays replicated
+                local_ok = _all_finite(gathered[widx],
+                                       None if gathered_sq is None
+                                       else gathered_sq[widx])
         else:
             # lax.map, not vmap: the scan body is the UNBATCHED per-worker
             # projection -- the same program each shard_map worker runs --
@@ -492,13 +686,41 @@ class SubspaceOptimizer:
                 (wseeds, grads))
             if exact:
                 gathered, gathered_sq = gathered
-        gathered, opt_state = self._optimizer().update(gathered, opt_state)
-        new_params = projector.reconstruct_apply_packed_workers(
-            gathered, plan, seed, params,
-            self.learning_rate / self.k_workers, backend=t.backend,
-            row_sq=gathered_sq, layout=layout, prepacked=True, prng=prng)
-        return (new_params, RBDState(step=rbd_state.step + 1), opt_state,
-                self._delta_aux(params, new_params))
+            if guard_on:
+                local_ok = _all_finite(gathered, gathered_sq)
+            if rider is not None:
+                riders = jnp.broadcast_to(rider, (self.k_workers,))
+        if self.fault_plan is not None:
+            from repro.core import resilience
+
+            gathered = resilience.inject_collective_faults(
+                self.fault_plan, rbd_state.step, gathered, widx)
+        reason = None
+        if guard_on:
+            from repro.core import resilience
+
+            reason = jnp.where(
+                local_ok,
+                jnp.where(_all_finite(gathered, gathered_sq),
+                          resilience.REASON_OK,
+                          resilience.REASON_NONFINITE_EXCHANGE),
+                resilience.REASON_NONFINITE_LOCAL).astype(jnp.int32)
+        diverged = ()
+        if riders is not None:
+            from repro.core import resilience
+
+            diverged = resilience.sentinel_check(
+                rider, riders, rbd_state.step, self.sentinel_every)
+        new_params, new_rbd, new_opt, new_guard = self._apply_exchanged(
+            params, gathered, gathered_sq, rbd_state, opt_state,
+            guard_state, reason, eplan)
+        if not self.resilience_active:
+            return (new_params, new_rbd, new_opt,
+                    self._delta_aux(params, new_params))
+        return (new_params, new_rbd, new_opt,
+                self._resilience_aux(params, new_params, gathered,
+                                     gathered_sq, new_guard, reason,
+                                     diverged))
 
     def _per_leaf_step(self, params, grads, rbd_state, opt_state, *,
                        fused: bool):

@@ -23,21 +23,63 @@ def train(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
     verbose: bool = True,
+    resilience=None,
+    resume: bool = False,
 ):
     """Simple single-process loop (examples / paper-repro experiments).
-    The multi-pod path lives in repro.launch.train."""
+    The multi-pod path lives in repro.launch.train.
+
+    ``resilience``: optional :class:`repro.core.resilience.
+    ResilienceConfig`.  With a directory configured the loop appends
+    every step's post-exchange coordinates to the replay log, writes
+    sparse packed snapshots, and -- with ``resume=True`` -- recovers
+    from the newest intact snapshot plus coordinate replay before
+    training (skipping the already-consumed batches so the data stream
+    stays aligned).  With resilience enabled the loop returns
+    ``(state, history, monitor)`` -- reason-coded recovery events live
+    on the monitor -- otherwise the classic ``(state, history)``."""
     init_state, train_step, sub_opt = make_train_step(
-        model, tcfg, return_optimizer=True)
+        model, tcfg, return_optimizer=True, resilience=resilience)
     state = init_state(jax.random.PRNGKey(tcfg.seed))
     train_step = jax.jit(train_step)
 
+    monitor = None
+    start = 0
+    if resilience is not None and resilience.any_enabled:
+        from repro.core import resilience as res_lib
+
+        recovery_events = []
+        if resume and resilience.directory:
+            recovered, info = res_lib.recover(resilience, sub_opt, state)
+            recovery_events = info["events"]
+            if recovered is not None:
+                state = recovered
+                start = int(state.step)
+                if verbose:
+                    print(f"recovered to step {start} "
+                          f"(snapshot {info['snapshot_step']}, "
+                          f"replayed {info['replayed']} records)")
+                for _ in range(start):
+                    next(data)  # keep the data stream step-aligned
+        monitor = res_lib.ResilienceMonitor(resilience, sub_opt)
+        monitor.events.extend(recovery_events)
+
     history = []
     t0 = time.time()
-    for step in range(tcfg.steps):
+    for step in range(start, tcfg.steps):
+        if monitor is not None and monitor.should_kill(step):
+            raise res_lib.SimulatedWorkerKill(f"fault plan kills step {step}")
         batch = next(data)
         state, metrics = train_step(state, batch)
+        if monitor is not None:
+            events = monitor.observe(state, metrics)
+            if verbose:
+                for ev in events:
+                    print(f"  [resilience] step {ev.step}: "
+                          f"{res_lib.reason_name(ev.reason)} -- {ev.detail}")
         if verbose and (step % log_every == 0 or step == tcfg.steps - 1):
-            m = {k: float(v) for k, v in metrics.items()}
+            m = {k: float(v) for k, v in metrics.items()
+                 if getattr(v, "ndim", 0) == 0}
             m.update(step=step, wall=time.time() - t0)
             history.append(m)
             print(f"step {step:5d} loss {m['loss']:.4f} "
@@ -61,4 +103,6 @@ def train(
             # independent of the packed-resident execution strategy)
             ckpt.save(checkpoint_dir, state._replace(
                 params=sub_opt.materialize_params(state.params)), step)
+    if monitor is not None:
+        return state, history, monitor
     return state, history

@@ -36,6 +36,9 @@ class TrainState(NamedTuple):
     rbd_state: Any          # RBDState or ()
     opt_state: Any          # coordinate-space ((d,)-shaped) or full-space
     step: jax.Array
+    guard: Any = ()         # resilience.GuardState when the non-finite
+                            # guard is on; () keeps the pytree (and every
+                            # pre-resilience checkpoint) unchanged
 
 
 def softmax_cross_entropy(logits, labels):
@@ -76,7 +79,8 @@ def make_subspace_optimizer(
         transform: Optional[rbd_lib.RandomBasesTransform] = None,
         axis_name=None, *,
         model_sharded: bool = False,
-        k_workers: int = 1) -> subspace.SubspaceOptimizer:
+        k_workers: int = 1,
+        resilience=None) -> subspace.SubspaceOptimizer:
     """The one update-path object for a (model, TrainConfig) pair.
 
     ``model_sharded``: the caller shards params over a model axis --
@@ -84,12 +88,23 @@ def make_subspace_optimizer(
     ``k_workers``: size of the shard_map data axis -- the static worker
     count of the independent_bases joint subspace (ignored by
     shared_basis mode).
+    ``resilience``: optional :class:`repro.core.resilience.
+    ResilienceConfig`; enables the non-finite step guard, the
+    divergence sentinel, coordinate capture (for the replay log, when a
+    directory is configured) and fault injection on the optimizer.
     """
     if transform is None and tcfg.rbd.enabled:
         transform = make_transform(model, tcfg.rbd)
     sub_opt = subspace.SubspaceOptimizer.from_config(
         tcfg, transform=transform, axis_name=axis_name,
         model_sharded=model_sharded, k_workers=k_workers)
+    if resilience is not None and resilience.any_enabled:
+        sub_opt = dataclasses.replace(
+            sub_opt,
+            guard=resilience.guard,
+            sentinel_every=resilience.sentinel_every,
+            capture_coords=bool(resilience.directory),
+            fault_plan=resilience.fault_plan)
     if sub_opt.plan_execution().packed_resident:
         # only the packed-resident strategy materializes params from the
         # packed buffer, so only it pays the model.init shape trace
@@ -113,7 +128,8 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     axis_name: Optional[str] = None, *,
                     model_sharded: bool = False,
                     k_workers: int = 1,
-                    return_optimizer: bool = False):
+                    return_optimizer: bool = False,
+                    resilience=None):
     """Returns (init_state_fn, train_step_fn) -- plus the
     :class:`SubspaceOptimizer` when ``return_optimizer`` is set (the
     loop/launcher use it to materialize packed-resident params for eval,
@@ -126,11 +142,24 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     (disables the packed-resident strategy with a reason code).
     ``k_workers``: the shard_map data-axis size -- required by
     independent_bases mode (static joint-subspace worker count).
+    ``resilience``: optional ResilienceConfig (see
+    :func:`make_subspace_optimizer`).  With it, ``TrainState.guard``
+    carries the guard state and the metrics dict grows reason-coded
+    entries (``guard_reason``, ``guard_count``, ``guard_lr_scale``,
+    ``sentinel_diverged``) plus the post-exchange coordinate buffers
+    (``replay_coords``/``replay_row_sq``) the replay log persists --
+    each key present only when its feature is statically enabled, so
+    the unconfigured step's traced program is byte-identical to the
+    pre-resilience one.
     """
     loss_fn = make_loss_fn(model, model.cfg.router_aux_coef)
     sub_opt = make_subspace_optimizer(model, tcfg, transform, axis_name,
                                       model_sharded=model_sharded,
-                                      k_workers=k_workers)
+                                      k_workers=k_workers,
+                                      resilience=resilience)
+    guard_on = sub_opt.guard is not None
+    if guard_on or sub_opt.fault_plan is not None:
+        from repro.core import resilience as res_lib
 
     def init_state(key) -> TrainState:
         params = model.init(key)
@@ -139,6 +168,7 @@ def make_train_step(model: Model, tcfg: TrainConfig,
             rbd_state=sub_opt.init_rbd_state(params),
             opt_state=sub_opt.init_opt_state(params),
             step=jnp.zeros((), jnp.int32),
+            guard=res_lib.guard_init() if guard_on else (),
         )
 
     def train_step(state: TrainState, batch):
@@ -151,11 +181,29 @@ def make_train_step(model: Model, tcfg: TrainConfig,
         if axis_name is not None:
             loss = jax.lax.pmean(loss, axis_name)
 
+        if sub_opt.fault_plan is not None:
+            grads = res_lib.inject_grad_faults(
+                sub_opt.fault_plan, state.rbd_state.step, grads,
+                worker_index=(jax.lax.axis_index(axis_name)
+                              if axis_name is not None else None))
+
         params, rbd_state, opt_state, aux = sub_opt.step(
-            state.params, grads, state.rbd_state, state.opt_state)
+            state.params, grads, state.rbd_state, state.opt_state,
+            state.guard)
         metrics = dict(metrics, loss=loss, update_norm=aux.update_norm)
+        if guard_on:
+            metrics["guard_reason"] = aux.reason
+            metrics["guard_count"] = aux.guard.nonfinite_count
+            metrics["guard_lr_scale"] = aux.guard.lr_scale
+        if sub_opt.sentinel_every:
+            metrics["sentinel_diverged"] = aux.diverged
+        if sub_opt.capture_coords:
+            metrics["replay_coords"] = aux.coords
+            if not isinstance(aux.row_sq, tuple):  # () = step has no norms
+                metrics["replay_row_sq"] = aux.row_sq
+        new_guard = aux.guard if guard_on else state.guard
         return TrainState(params, rbd_state, opt_state,
-                          state.step + 1), metrics
+                          state.step + 1, new_guard), metrics
 
     if return_optimizer:
         return init_state, train_step, sub_opt

@@ -1,0 +1,323 @@
+"""Seeded chaos lane: fault injection against the guarded train step.
+
+Single-device portions (kill-and-resume through the host loop, grad
+fault injection, repair-policy plumbing) run in the plain tier-1 job.
+The replica-divergence scenarios need a real mesh axis and activate
+under the CI ``chaos`` lane, which runs this file with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Every recovery path exercised here must come back reason-coded: an
+event whose reason ``reason_name`` cannot decode fails the lane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import RBDConfig, TrainConfig
+from repro.core import resilience
+from repro.data import synthetic
+from repro.models import get_model
+from repro.train import loop
+from repro.train import step as steplib
+
+N_DEV = jax.device_count()
+
+needs_mesh = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="replica divergence needs >= 2 devices (CI chaos lane runs 8)",
+)
+
+
+def _assert_reason_coded(events):
+    for ev in events:
+        assert "unknown" not in resilience.reason_name(ev.reason), ev
+
+
+def _tiny_lm(
+    optimizer="momentum", backend="jnp", rbd_mode="shared_basis", batch_size=2, steps=6
+):
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        model=cfg,
+        optimizer=optimizer,
+        rbd=RBDConfig(total_dim=256, backend=backend, packed="on", mode=rbd_mode),
+        learning_rate=0.5,
+        steps=steps,
+        batch_size=batch_size,
+        seq_len=16,
+    )
+    return cfg, model, tcfg
+
+
+def _batches(cfg, tcfg):
+    return synthetic.lm_batches(0, tcfg.batch_size, tcfg.seq_len, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume through the host loop (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_kill_and_resume_bit_exact(tmp_path):
+    """The flagship chaos scenario: a NaN gradient at step 1 (rejected,
+    reason-coded, logged as an empty record), a worker kill at step 4,
+    then recovery = newest snapshot + coordinate replay + the remaining
+    steps.  Final params, optimizer state and guard state are
+    bit-identical to the same run without the kill."""
+    cfg, model, tcfg = _tiny_lm()
+    plan = resilience.FaultPlan(
+        (
+            resilience.FaultEvent(1, "nan_grad"),
+            resilience.FaultEvent(4, "kill"),
+        )
+    )
+
+    def rcfg(directory, fault_plan):
+        return resilience.ResilienceConfig(
+            directory=str(directory),
+            snapshot_every=2,
+            guard=resilience.GuardConfig(),
+            sentinel_every=2,
+            fault_plan=fault_plan,
+        )
+
+    # reference: same faults minus the kill, straight through
+    ref_state, _, ref_mon = loop.train(
+        model,
+        tcfg,
+        _batches(cfg, tcfg),
+        resilience=rcfg(tmp_path / "ref", plan.without("kill")),
+        verbose=False,
+    )
+    _assert_reason_coded(ref_mon.events)
+    assert any(e.reason == resilience.REASON_NONFINITE_LOCAL for e in ref_mon.events)
+
+    # crash run: killed before step 4
+    with pytest.raises(resilience.SimulatedWorkerKill):
+        loop.train(
+            model,
+            tcfg,
+            _batches(cfg, tcfg),
+            resilience=rcfg(tmp_path / "run", plan),
+            verbose=False,
+        )
+
+    # resume: the kill already fired; recover, replay, finish
+    res_state, _, res_mon = loop.train(
+        model,
+        tcfg,
+        _batches(cfg, tcfg),
+        resilience=rcfg(tmp_path / "run", plan.without("kill")),
+        resume=True,
+        verbose=False,
+    )
+    _assert_reason_coded(res_mon.events)
+
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.params), np.asarray(res_state.params)
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref_state.opt_state),
+        jax.tree_util.tree_leaves(res_state.opt_state),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(ref_state.step) == int(res_state.step) == tcfg.steps
+    np.testing.assert_array_equal(
+        np.asarray(ref_state.guard.lr_scale),
+        np.asarray(res_state.guard.lr_scale),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gradient fault injection primitives
+# ---------------------------------------------------------------------------
+
+
+def test_inject_grad_faults_keyed_on_step_and_worker():
+    plan = resilience.FaultPlan.single(2, "nan_grad")
+    g = jnp.ones((8,))
+    clean = resilience.inject_grad_faults(plan, jnp.uint32(1), g)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(g))
+    hit = resilience.inject_grad_faults(plan, jnp.uint32(2), g)
+    assert np.isnan(np.asarray(hit)[0]) and np.isfinite(np.asarray(hit)[1:]).all()
+
+    # 2-D packed grads: only the victim worker's row is poisoned
+    plan = resilience.FaultPlan.single(0, "inf_grad", worker=1)
+    g2 = jnp.ones((3, 8))
+    hit2 = np.asarray(resilience.inject_grad_faults(plan, jnp.uint32(0), g2))
+    assert np.isinf(hit2[1, 0])
+    assert np.isfinite(np.delete(hit2, 1, axis=0)).all()
+
+    # shard mode: each worker checks its own index
+    miss = resilience.inject_grad_faults(
+        plan, jnp.uint32(0), g, worker_index=jnp.uint32(0)
+    )
+    np.testing.assert_array_equal(np.asarray(miss), np.asarray(g))
+    hit3 = resilience.inject_grad_faults(
+        plan, jnp.uint32(0), g, worker_index=jnp.uint32(1)
+    )
+    assert np.isinf(np.asarray(hit3)[0])
+
+
+def test_inject_collective_faults_targets_one_worker():
+    plan = resilience.FaultPlan.single(3, "corrupt_collective", worker=2)
+    c = jnp.ones((4,))
+    miss = resilience.inject_collective_faults(plan, jnp.uint32(3), c, jnp.uint32(1))
+    np.testing.assert_array_equal(np.asarray(miss), np.asarray(c))
+    hit = np.asarray(
+        resilience.inject_collective_faults(plan, jnp.uint32(3), c, jnp.uint32(2))
+    )
+    assert np.isinf(hit[0]) and np.isfinite(hit[1:]).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded chaos: the guarded contract and replica divergence on a mesh
+# ---------------------------------------------------------------------------
+
+
+def _sharded_guarded_step(optimizer, rbd_mode, backend, rescfg):
+    from repro.launch.mesh import _make_mesh, shard_map_compat
+
+    cfg, model, tcfg = _tiny_lm(
+        optimizer, backend=backend, rbd_mode=rbd_mode, batch_size=2 * N_DEV
+    )
+    batch = next(_batches(cfg, tcfg))
+    init_state, train_step, sub = steplib.make_train_step(
+        model,
+        tcfg,
+        axis_name="data",
+        k_workers=N_DEV,
+        return_optimizer=True,
+        resilience=rescfg,
+    )
+    assert sub.resilience_active
+    state = init_state(jax.random.PRNGKey(0))
+
+    metrics_spec = {"ce": P(), "aux": P(), "loss": P(), "update_norm": P()}
+    if sub.guard is not None:
+        metrics_spec.update(guard_reason=P(), guard_count=P(), guard_lr_scale=P())
+    if sub.sentinel_every:
+        metrics_spec["sentinel_diverged"] = P()
+
+    mesh = _make_mesh((N_DEV,), ("data",))
+    repl = jax.tree_util.tree_map(lambda _: P(), state)
+    fn = shard_map_compat(
+        train_step,
+        mesh=mesh,
+        in_specs=(repl, {"tokens": P("data"), "labels": P("data")}),
+        out_specs=(repl, metrics_spec),
+        manual_axes=("data",),
+    )
+    return fn, state, batch, sub
+
+
+@pytest.mark.parametrize(
+    "rbd_mode,kinds",
+    [("shared_basis", ("pmean", "psum")), ("independent_bases", ("all_gather",))],
+)
+def test_guarded_step_keeps_two_launches_one_collective(rbd_mode, kinds):
+    """Acceptance gate: with guard + sentinel enabled the step still
+    compiles to exactly TWO pallas_calls and ONE collective; the
+    sentinel checksum rides that collective as one extra scalar."""
+    from repro.launch.hlo_analysis import assert_coordinate_exchange
+
+    rescfg = resilience.ResilienceConfig(
+        guard=resilience.GuardConfig(), sentinel_every=2
+    )
+    fn, state, batch, sub = _sharded_guarded_step("adam", rbd_mode, "pallas", rescfg)
+    assert_coordinate_exchange(
+        fn,
+        state,
+        batch,
+        payload=sub.transform.plan.packed().d_packed,
+        n_params=sub.transform.plan.total_params,
+        kinds=kinds,
+        n_launches=2,
+        extra=1,
+    )
+
+
+@needs_mesh
+def test_corrupted_collective_trips_sentinel_hard_failure():
+    """A corrupted exchange payload on ONE worker makes that worker
+    reject the step while the others apply it -- silent replica
+    divergence.  The sentinel checksum (riding the next exchange)
+    catches it, and on_divergence='fail' escalates to
+    ReplicaDivergenceError with a reason-coded event."""
+    plan = resilience.FaultPlan.single(0, "corrupt_collective", worker=1)
+    rescfg = resilience.ResilienceConfig(
+        guard=resilience.GuardConfig(),
+        sentinel_every=1,
+        on_divergence="fail",
+        fault_plan=plan,
+    )
+    fn, state, batch, sub = _sharded_guarded_step(
+        "momentum", "shared_basis", "jnp", rescfg
+    )
+    fn = jax.jit(fn)
+    monitor = resilience.ResilienceMonitor(rescfg, sub)
+
+    # step 0: pre-step checksums still agree; worker 1's exchanged
+    # buffer is corrupted, worker 1 alone rejects -> states fork
+    state, metrics = fn(state, batch)
+    assert not bool(metrics["sentinel_diverged"])
+    monitor.observe(state, metrics)
+
+    # step 1: the rider disagrees across the mesh -> hard failure
+    state, metrics = fn(state, batch)
+    assert bool(metrics["sentinel_diverged"])
+    with pytest.raises(resilience.ReplicaDivergenceError):
+        monitor.observe(state, metrics)
+    _assert_reason_coded(monitor.events)
+    assert monitor.events[-1].reason == resilience.REASON_REPLICA_DIVERGENCE
+
+
+@needs_mesh
+def test_resync_from_worker0_repairs_divergence():
+    """The repair program: every worker adopts worker 0's copy."""
+    from repro.launch.mesh import _make_mesh, shard_map_compat
+
+    mesh = _make_mesh((N_DEV,), ("data",))
+    tree = {
+        "m": jnp.arange(N_DEV * 3, dtype=jnp.float32).reshape(N_DEV, 3),
+        "v": jnp.arange(N_DEV, dtype=jnp.float32).reshape(N_DEV, 1) + 10.0,
+    }
+    fn = shard_map_compat(
+        lambda t: resilience.resync_from_worker0(t, "data"),
+        mesh=mesh,
+        in_specs=(P("data"),),
+        out_specs=P("data"),
+        manual_axes=("data",),
+    )
+    out = jax.device_get(fn(tree))
+    for key in tree:
+        want = np.tile(np.asarray(tree[key][:1]), (N_DEV, 1))
+        np.testing.assert_array_equal(out[key], want)
+
+
+def test_repair_policy_reports_without_raising():
+    """on_divergence='repair' turns the hard failure into a reason-coded
+    event the launcher answers with resync_from_worker0 (which it then
+    records as REASON_RESYNC)."""
+    rescfg = resilience.ResilienceConfig(
+        guard=resilience.GuardConfig(), sentinel_every=1, on_divergence="repair"
+    )
+    cfg, model, tcfg = _tiny_lm(steps=1)
+    init_state, train_step, sub = steplib.make_train_step(
+        model, tcfg, return_optimizer=True, resilience=rescfg
+    )
+    monitor = resilience.ResilienceMonitor(rescfg, sub)
+    state = init_state(jax.random.PRNGKey(0))
+    fake = {
+        "guard_reason": jnp.int32(resilience.REASON_OK),
+        "guard_lr_scale": jnp.float32(1.0),
+        "sentinel_diverged": jnp.asarray(True),
+    }
+    events = monitor.observe(state._replace(step=jnp.int32(1)), fake)
+    assert [e.reason for e in events] == [resilience.REASON_REPLICA_DIVERGENCE]
+    _assert_reason_coded(monitor.events)

@@ -1,0 +1,685 @@
+"""Coordinate-replay resilience (PR 6).
+
+The RBD identity -- one optimizer step is fully determined by
+``(base_seed, step, coordinate buffer)`` -- makes fault tolerance
+kilobyte-sized.  Covered here:
+
+* non-finite step guard: healthy guarded steps are BIT-exact against the
+  unguarded program; rejected steps leave params and optimizer state
+  bit-untouched while the basis schedule advances; effective-LR backoff
+  and recovery follow the exact-arithmetic GuardConfig policy;
+* replica-divergence sentinel primitives: bit-pattern checksums flip on
+  single-ULP divergence and stay integer-valued f32 (exact under pmean);
+* ReplayLog: CRC-framed roundtrip, torn-tail truncation on read AND on
+  reopen-for-append, header validation;
+* atomic + verifiable checkpoints (checkpoint/io.py): sidecar CRC32
+  verification, skip-and-warn on stray/partial/corrupt entries,
+  newest-intact fallback;
+* recovery: restore snapshot + replay the logged coordinates through the
+  SAME ``apply_exchanged`` path the live step runs -- resumed state is
+  bit-identical to the uninterrupted run for sgd/momentum/adam x
+  shared_basis/independent_bases on both backends.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import make_plan, projector, resilience
+from repro.core.rbd import RandomBasesTransform
+from repro.optim.subspace import SubspaceOptimizer
+from repro.train.step import TrainState
+
+# ---------------------------------------------------------------------------
+# fixtures (ragged fixture family of test_exact_packed / test_packed_step)
+# ---------------------------------------------------------------------------
+
+
+def _params():
+    return {
+        "w": jnp.ones((48, 20)),
+        "layers": {"k": jnp.ones((3, 40, 10))},
+        "s": jnp.ones(()),
+        "odd": jnp.ones((7, 73)),
+        "long": jnp.ones((700,)),
+    }
+
+
+def _grads(params, key=0):
+    k = jax.random.PRNGKey(key)
+    return jax.tree_util.tree_map(lambda p: jax.random.normal(k, p.shape), params)
+
+
+def _plan(params, normalization="exact"):
+    return make_plan(
+        params,
+        96,
+        granularity="layer",
+        is_stacked=lambda n: n.startswith("layers"),
+        normalization=normalization,
+    )
+
+
+def _sub(
+    params,
+    plan,
+    *,
+    optimizer="momentum",
+    backend="jnp",
+    mode="shared_basis",
+    k_workers=1,
+    guarded=True,
+    capture=True,
+    sentinel_every=0,
+    fault_plan=None,
+):
+    t = RandomBasesTransform(plan, base_seed=11, redraw=True, backend=backend)
+    return SubspaceOptimizer(
+        transform=t,
+        learning_rate=0.3,
+        use_packed=True,
+        optimizer=optimizer,
+        mode=mode,
+        k_workers=k_workers,
+        params_template=params,
+        guard=resilience.GuardConfig() if guarded else None,
+        capture_coords=capture,
+        sentinel_every=sentinel_every,
+        fault_plan=fault_plan,
+    )
+
+
+def _packed_grads(sub, params, key=0):
+    plan = sub.transform.plan
+    g = projector.pack_tree(_grads(params, key), plan, plan.packed())
+    if sub.joint_subspace:
+        g = jnp.stack(
+            [
+                projector.pack_tree(_grads(params, 7 * key + w), plan, plan.packed())
+                for w in range(sub.k_workers)
+            ]
+        )
+    return g
+
+
+def _init_state(sub, params):
+    return TrainState(
+        params=sub.prepare_params(params),
+        rbd_state=sub.init_rbd_state(params),
+        opt_state=sub.init_opt_state(params),
+        step=jnp.zeros((), jnp.int32),
+        guard=resilience.guard_init() if sub.guard is not None else (),
+    )
+
+
+def _metrics_from_aux(sub, aux):
+    m = {}
+    if sub.guard is not None:
+        m["guard_reason"] = aux.reason
+        m["guard_lr_scale"] = aux.guard.lr_scale
+    if sub.capture_coords:
+        m["replay_coords"] = aux.coords
+        if not isinstance(aux.row_sq, tuple):
+            m["replay_row_sq"] = aux.row_sq
+    if sub.sentinel_every:
+        m["sentinel_diverged"] = aux.diverged
+    return m
+
+
+def _drive(sub, state, grad_keys, monitor=None, step_fn=None):
+    """Mini host loop at the SubspaceOptimizer level: run one step per
+    gradient key, feeding the monitor exactly what train/loop.py would."""
+    params = _params()
+    step_fn = step_fn if step_fn is not None else jax.jit(sub.step)
+    for key in grad_keys:
+        g = _packed_grads(sub, params, key)
+        if sub.fault_plan is not None:
+            # the train-step layer's grad-fault hook (grad faults fire
+            # BEFORE projection; collective faults fire inside the step)
+            g = resilience.inject_grad_faults(sub.fault_plan, jnp.uint32(key), g)
+        p, r, o, aux = step_fn(
+            state.params, g, state.rbd_state, state.opt_state, state.guard
+        )
+        new_guard = aux.guard if sub.guard is not None else state.guard
+        state = TrainState(p, r, o, state.step + 1, new_guard)
+        if monitor is not None:
+            monitor.observe(state, _metrics_from_aux(sub, aux))
+    return state
+
+
+def _assert_states_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# non-finite step guard
+# ---------------------------------------------------------------------------
+
+
+def test_guard_transition_backoff_recovery_and_floor():
+    cfg = resilience.GuardConfig()
+    st = resilience.guard_init()
+    st = resilience.guard_transition(cfg, st, resilience.REASON_NONFINITE_LOCAL)
+    assert float(st.lr_scale) == 0.5
+    assert int(st.nonfinite_count) == 1
+    assert int(st.last_reason) == resilience.REASON_NONFINITE_LOCAL
+    # recovery multiplies by 1.25, capped at exactly 1.0 (a fixed point)
+    st = resilience.guard_transition(cfg, st, resilience.REASON_OK)
+    assert float(st.lr_scale) == 0.625
+    for _ in range(10):
+        st = resilience.guard_transition(cfg, st, resilience.REASON_OK)
+    assert float(st.lr_scale) == 1.0
+    assert int(st.nonfinite_count) == 1
+    # repeated rejects floor at min_scale
+    for _ in range(20):
+        st = resilience.guard_transition(cfg, st, resilience.REASON_NONFINITE_EXCHANGE)
+    assert float(st.lr_scale) == cfg.min_scale
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+@pytest.mark.parametrize("mode,k", [("shared_basis", 1), ("independent_bases", 3)])
+def test_guarded_healthy_step_bitexact_vs_unguarded(optimizer, mode, k):
+    """gain = 1.0 multiply is bit-exact, so a healthy guarded run never
+    forks numerically from the unguarded program."""
+    params = _params()
+    plan = _plan(params)
+    guarded = _sub(params, plan, optimizer=optimizer, mode=mode, k_workers=k)
+    plain = _sub(
+        params,
+        plan,
+        optimizer=optimizer,
+        mode=mode,
+        k_workers=k,
+        guarded=False,
+        capture=False,
+    )
+    assert not plain.resilience_active
+    s_g = _drive(guarded, _init_state(guarded, params), range(3))
+    s_p = _drive(plain, _init_state(plain, params), range(3))
+    np.testing.assert_array_equal(np.asarray(s_g.params), np.asarray(s_p.params))
+    _assert_states_equal(s_g.opt_state, s_p.opt_state)
+    assert float(s_g.guard.lr_scale) == 1.0
+    assert int(s_g.guard.nonfinite_count) == 0
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_nonfinite_step_rejected_bit_untouched(optimizer, backend):
+    """A NaN gradient propagates into the projected coordinates, the
+    guard rejects, and params + optimizer state come back bit-identical
+    -- while the basis schedule still advances."""
+    params = _params()
+    plan = _plan(params)
+    sub = _sub(params, plan, optimizer=optimizer, backend=backend)
+    state = _init_state(sub, params)
+    g = _packed_grads(sub, params, 0).at[3].set(jnp.nan)
+    p, r, o, aux = jax.jit(sub.step)(
+        state.params, g, state.rbd_state, state.opt_state, state.guard
+    )
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(state.params))
+    _assert_states_equal(o, state.opt_state)
+    assert int(aux.reason) == resilience.REASON_NONFINITE_LOCAL
+    assert int(aux.guard.nonfinite_count) == 1
+    assert float(aux.guard.lr_scale) == 0.5
+    assert int(r.step) == 1
+
+
+def test_inf_row_rejects_joint_sim_step():
+    params = _params()
+    plan = _plan(params)
+    sub = _sub(params, plan, mode="independent_bases", k_workers=3)
+    state = _init_state(sub, params)
+    g = _packed_grads(sub, params, 0).at[1, 0].set(jnp.inf)
+    p, r, o, aux = jax.jit(sub.step)(
+        state.params, g, state.rbd_state, state.opt_state, state.guard
+    )
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(state.params))
+    assert int(aux.reason) == resilience.REASON_NONFINITE_LOCAL
+
+
+def test_resilience_requires_packed_strategy():
+    params = _params()
+    plan = _plan(params, normalization="orthonormal")
+    sub = _sub(params, plan)
+    assert sub.plan_execution().strategy != "fused_packed"
+    state = _init_state(sub, params)
+    with pytest.raises(ValueError, match="packed two-launch"):
+        sub.step(
+            state.params,
+            _packed_grads(sub, params, 0),
+            state.rbd_state,
+            state.opt_state,
+            state.guard,
+        )
+
+
+# ---------------------------------------------------------------------------
+# sentinel primitives
+# ---------------------------------------------------------------------------
+
+
+def test_state_checksum_integer_valued_and_ulp_sensitive():
+    tree = {"m": jnp.linspace(-1.0, 1.0, 97), "n": jnp.zeros((5,))}
+    c = resilience.state_checksum(tree)
+    v = float(c)
+    assert v == int(v) and 0 <= v < 65536
+    bumped = dict(tree, m=tree["m"].at[11].set(jnp.nextafter(tree["m"][11], 2.0)))
+    assert float(resilience.state_checksum(bumped)) != v
+    # value-based checks would call -0.0 == 0.0; the bitcast does not
+    signed = dict(tree, n=tree["n"].at[0].set(-0.0))
+    assert float(resilience.state_checksum(signed)) != v
+
+
+def test_sentinel_check_fires_only_on_schedule():
+    local = jnp.float32(7.0)
+    bad = jnp.float32(9.0)
+    assert bool(resilience.sentinel_check(local, bad, 0, 2))
+    assert not bool(resilience.sentinel_check(local, bad, 1, 2))
+    assert not bool(resilience.sentinel_check(local, local, 0, 2))
+    gathered = jnp.array([7.0, 7.0, 9.0], jnp.float32)
+    assert bool(resilience.sentinel_check(local, gathered, 4, 2))
+
+
+def test_sentinel_rider_prefers_opt_state():
+    params = jnp.arange(8.0, dtype=jnp.float32)
+    mom = {"m": jnp.ones((4,), jnp.float32)}
+    assert float(resilience.sentinel_rider(mom, params)) == float(
+        resilience.state_checksum(mom)
+    )
+    # sgd has no state leaves: the packed params are the checksum target
+    assert float(resilience.sentinel_rider((), params)) == float(
+        resilience.state_checksum(params)
+    )
+
+
+# ---------------------------------------------------------------------------
+# replay log framing
+# ---------------------------------------------------------------------------
+
+
+def _log_meta(d=4):
+    return {
+        "format": 1,
+        "coords_shape": [d],
+        "has_norms": True,
+    }
+
+
+def test_replay_log_roundtrip(tmp_path):
+    path = str(tmp_path / "replay.log")
+    c0 = np.arange(4, dtype=np.float32)
+    s0 = np.full(4, 2.0, np.float32)
+    with resilience.ReplayLog(path, meta=_log_meta()) as log:
+        log.append(0, resilience.REASON_OK, 1.0, coords=c0, row_sq=s0)
+        log.append(1, resilience.REASON_NONFINITE_LOCAL, 0.5)  # rejected
+        log.append(2, resilience.REASON_OK, 0.625, coords=c0 + 1, row_sq=s0)
+    meta, records, truncated = resilience.ReplayLog.read(path)
+    assert not truncated
+    assert meta["coords_shape"] == [4]
+    assert [r.step for r in records] == [0, 1, 2]
+    np.testing.assert_array_equal(records[0].coords, c0)
+    np.testing.assert_array_equal(records[0].row_sq, s0)
+    assert records[1].coords is None and records[1].row_sq is None
+    assert records[1].reason == resilience.REASON_NONFINITE_LOCAL
+    np.testing.assert_array_equal(records[2].coords, c0 + 1)
+
+
+def test_replay_log_torn_tail_dropped_and_truncated_on_reopen(tmp_path):
+    path = str(tmp_path / "replay.log")
+    c = np.ones(4, np.float32)
+    with resilience.ReplayLog(path, meta=_log_meta()) as log:
+        log.append(0, 0, 1.0, coords=c, row_sq=c)
+        log.append(1, 0, 1.0, coords=c, row_sq=c)
+    whole = os.path.getsize(path)
+    with open(path, "r+b") as fh:
+        fh.truncate(whole - 3)  # tear the last record mid-frame
+    with pytest.warns(UserWarning, match="torn"):
+        _, records, truncated = resilience.ReplayLog.read(path)
+    assert truncated and [r.step for r in records] == [0]
+    # reopen-for-append truncates the torn tail, then extends cleanly
+    with pytest.warns(UserWarning, match="torn"):
+        log = resilience.ReplayLog(path)
+    with log:
+        log.append(1, 0, 1.0, coords=c + 1, row_sq=c)
+    _, records, truncated = resilience.ReplayLog.read(path)
+    assert not truncated
+    assert [r.step for r in records] == [0, 1]
+    np.testing.assert_array_equal(records[1].coords, c + 1)
+
+
+def test_replay_log_record_crc_detects_bitflip(tmp_path):
+    path = str(tmp_path / "replay.log")
+    c = np.ones(4, np.float32)
+    with resilience.ReplayLog(path, meta=_log_meta()) as log:
+        log.append(0, 0, 1.0, coords=c, row_sq=c)
+        log.append(1, 0, 1.0, coords=c, row_sq=c)
+    with open(path, "r+b") as fh:
+        data = bytearray(fh.read())
+        # flip one payload byte inside the FIRST record's frame
+        first_rec = data.index(b"REC0")
+        data[first_rec + 4 + 16 + 2] ^= 0x40
+        fh.seek(0)
+        fh.write(data)
+    with pytest.warns(UserWarning, match="torn"):
+        _, records, truncated = resilience.ReplayLog.read(path)
+    assert truncated and records == []
+
+
+def test_replay_log_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "not_a_log")
+    with open(path, "wb") as fh:
+        fh.write(b"something else entirely")
+    with pytest.raises(ValueError, match="bad magic"):
+        resilience.ReplayLog.read(path)
+
+
+def test_new_log_requires_meta(tmp_path):
+    with pytest.raises(ValueError, match="meta"):
+        resilience.ReplayLog(str(tmp_path / "x.log"))
+
+
+# ---------------------------------------------------------------------------
+# atomic + verifiable checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _tree(v=0.0):
+    return {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3) + v,
+        "b": {"c": np.float32(3.5) + v},
+    }
+
+
+def test_checkpoint_roundtrip_with_crc_sidecar(tmp_path):
+    d = str(tmp_path)
+    ckpt_io.save(d, _tree(), 3)
+    meta = json.load(open(os.path.join(d, "ckpt_00000003.json")))
+    assert meta["step"] == 3 and set(meta["crc32"]) == set(meta["keys"])
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    out = ckpt_io.restore(d, _tree(), 3)
+    _assert_states_equal(out, _tree())
+    assert ckpt_io.latest_step(d) == 3
+
+
+def test_stray_npz_without_sidecar_skipped(tmp_path):
+    d = str(tmp_path)
+    ckpt_io.save(d, _tree(), 1)
+    os.remove(os.path.join(d, "ckpt_00000001.json"))
+    ckpt_io.save(d, _tree(), 0)
+    with pytest.warns(UserWarning, match="sidecar"):
+        assert ckpt_io.latest_step(d) == 0
+
+
+def test_corrupt_npz_falls_back_to_older_checkpoint(tmp_path):
+    d = str(tmp_path)
+    ckpt_io.save(d, _tree(0.0), 1)
+    ckpt_io.save(d, _tree(5.0), 2)
+    with open(os.path.join(d, "ckpt_00000002.npz"), "r+b") as fh:
+        fh.seek(40)
+        fh.write(b"\xde\xad\xbe\xef" * 8)
+    with pytest.warns(UserWarning, match="corrupt"):
+        out = ckpt_io.restore(d, _tree())
+    _assert_states_equal(out, _tree(0.0))
+    # explicit-step restore of the damaged pair must raise, not degrade
+    with pytest.raises(ValueError):
+        ckpt_io.restore(d, _tree(), 2)
+
+
+def test_corrupt_sidecar_json_skipped(tmp_path):
+    d = str(tmp_path)
+    ckpt_io.save(d, _tree(0.0), 1)
+    ckpt_io.save(d, _tree(5.0), 2)
+    with open(os.path.join(d, "ckpt_00000002.json"), "w") as fh:
+        fh.write("{ not json")
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert ckpt_io.valid_steps(d) == [1]
+    with pytest.warns(UserWarning):
+        out = ckpt_io.restore(d, _tree())
+    _assert_states_equal(out, _tree(0.0))
+
+
+def test_crc_catches_silent_array_corruption(tmp_path):
+    """A bit flip that still yields a loadable npz fails the per-array
+    CRC (shape/dtype checks alone would accept it)."""
+    d = str(tmp_path)
+    ckpt_io.save(d, _tree(), 0)
+    base = os.path.join(d, "ckpt_00000000")
+    data = dict(np.load(base + ".npz"))
+    key = sorted(data)[0]
+    data[key] = data[key] + 1  # same shape/dtype, different bytes
+    with open(base + ".npz", "wb") as fh:
+        np.savez(fh, **data)
+    with pytest.raises(ValueError, match="CRC32"):
+        ckpt_io.restore(d, _tree(), 0)
+
+
+# ---------------------------------------------------------------------------
+# recovery = snapshot + coordinate replay, bit-exact on both backends
+# ---------------------------------------------------------------------------
+
+MATRIX = [
+    (opt, mode, k, backend)
+    for opt in ("sgd", "momentum", "adam")
+    for mode, k in (("shared_basis", 1), ("independent_bases", 3))
+    for backend in ("jnp", "pallas")
+]
+
+
+@pytest.mark.parametrize("optimizer,mode,k,backend", MATRIX)
+def test_resume_bit_exact(optimizer, mode, k, backend, tmp_path):
+    """Train, crash, restore + replay, continue: the final packed theta
+    AND optimizer state are bit-identical to the uninterrupted run.
+    snapshot_every=3 forces the recovery to replay log records on top of
+    a mid-run snapshot (not just reload the newest full state)."""
+    params = _params()
+    plan = _plan(params)
+    n_steps, crash_at = 5, 4
+    cfg = resilience.ResilienceConfig(
+        directory=str(tmp_path / "res"),
+        snapshot_every=3,
+        guard=resilience.GuardConfig(),
+    )
+    sub = _sub(
+        params, plan, optimizer=optimizer, mode=mode, k_workers=k, backend=backend
+    )
+    step_fn = jax.jit(sub.step)
+
+    # uninterrupted reference
+    ref = _drive(sub, _init_state(sub, params), range(n_steps), step_fn=step_fn)
+
+    # crashed run: monitor logs every step, dies before step `crash_at`
+    monitor = resilience.ResilienceMonitor(cfg, sub)
+    state = _drive(
+        sub, _init_state(sub, params), range(crash_at), monitor, step_fn=step_fn
+    )
+    monitor.log.close()
+    del state  # the crash loses all live state
+
+    # recover (snapshot 3 + one replayed record) and finish the run
+    recovered, info = resilience.recover(cfg, sub, _init_state(sub, params))
+    assert recovered is not None
+    assert info["snapshot_step"] == 3
+    assert info["replayed"] == crash_at - 3
+    assert int(recovered.step) == crash_at
+    done = _drive(sub, recovered, range(crash_at, n_steps), step_fn=step_fn)
+
+    np.testing.assert_array_equal(np.asarray(done.params), np.asarray(ref.params))
+    _assert_states_equal(done.opt_state, ref.opt_state)
+    _assert_states_equal(done.guard, ref.guard)
+
+
+def test_resume_replays_rejected_steps_bit_exact(tmp_path):
+    """A rejected (NaN) step logs an EMPTY payload; its replay applies
+    the same sanitized zeros + guard transition the live step did."""
+    params = _params()
+    plan = _plan(params)
+    fault = resilience.FaultPlan.single(1, "nan_grad")
+    cfg = resilience.ResilienceConfig(
+        directory=str(tmp_path / "res"),
+        snapshot_every=100,  # never: recovery must replay from scratch
+        guard=resilience.GuardConfig(),
+        fault_plan=fault,
+    )
+    sub = _sub(params, plan, optimizer="adam", fault_plan=fault)
+    step_fn = jax.jit(sub.step)
+
+    ref = _drive(sub, _init_state(sub, params), range(4), step_fn=step_fn)
+    assert int(ref.guard.nonfinite_count) == 1
+
+    monitor = resilience.ResilienceMonitor(cfg, sub)
+    _drive(sub, _init_state(sub, params), range(3), monitor, step_fn=step_fn)
+    monitor.log.close()
+    assert any(e.reason == resilience.REASON_NONFINITE_LOCAL for e in monitor.events)
+
+    recovered, info = resilience.recover(cfg, sub, _init_state(sub, params))
+    assert info["snapshot_step"] is None and info["replayed"] == 3
+    done = _drive(sub, recovered, range(3, 4), step_fn=step_fn)
+    np.testing.assert_array_equal(np.asarray(done.params), np.asarray(ref.params))
+    _assert_states_equal(done.opt_state, ref.opt_state)
+    assert int(done.guard.nonfinite_count) == 1
+
+
+def test_recover_skips_corrupt_snapshot_with_reason_code(tmp_path):
+    params = _params()
+    plan = _plan(params)
+    cfg = resilience.ResilienceConfig(
+        directory=str(tmp_path / "res"),
+        snapshot_every=2,
+        guard=resilience.GuardConfig(),
+    )
+    sub = _sub(params, plan)
+    monitor = resilience.ResilienceMonitor(cfg, sub)
+    ref = _drive(sub, _init_state(sub, params), range(5), monitor)
+    monitor.log.close()
+    # corrupt the NEWEST snapshot (step 4); recovery must fall back to
+    # the step-2 snapshot and replay the rest from the log
+    newest = os.path.join(monitor.snapshot_dir, "ckpt_00000004.npz")
+    with open(newest, "r+b") as fh:
+        fh.seek(30)
+        fh.write(b"\x00" * 64)
+    recovered, info = resilience.recover(cfg, sub, _init_state(sub, params))
+    assert info["snapshot_step"] == 2 and info["replayed"] == 3
+    assert any(e.reason == resilience.REASON_CKPT_CORRUPT for e in info["events"])
+    np.testing.assert_array_equal(np.asarray(recovered.params), np.asarray(ref.params))
+
+
+def test_recover_truncated_log_stops_at_tear(tmp_path):
+    params = _params()
+    plan = _plan(params)
+    cfg = resilience.ResilienceConfig(
+        directory=str(tmp_path / "res"),
+        snapshot_every=100,
+        guard=resilience.GuardConfig(),
+    )
+    sub = _sub(params, plan)
+    monitor = resilience.ResilienceMonitor(cfg, sub)
+    mid = _drive(sub, _init_state(sub, params), range(3), monitor)
+    size_3 = os.path.getsize(monitor.log.path)
+    _drive(sub, mid, range(3, 5), monitor)
+    monitor.log.close()
+    with open(monitor.log.path, "r+b") as fh:
+        fh.truncate(size_3 + 11)  # tear inside record 3
+    with pytest.warns(UserWarning, match="torn"):
+        recovered, info = resilience.recover(cfg, sub, _init_state(sub, params))
+    assert info["truncated"] and info["replayed"] == 3
+    assert any(e.reason == resilience.REASON_LOG_TRUNCATED for e in info["events"])
+    np.testing.assert_array_equal(np.asarray(recovered.params), np.asarray(mid.params))
+
+
+def test_recover_empty_directory_returns_none(tmp_path):
+    params = _params()
+    plan = _plan(params)
+    sub = _sub(params, plan)
+    cfg = resilience.ResilienceConfig(directory=str(tmp_path / "void"))
+    state, info = resilience.recover(cfg, sub, _init_state(sub, params))
+    assert state is None and info["replayed"] == 0 and info["events"] == []
+
+
+# ---------------------------------------------------------------------------
+# fault plan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_seeded_and_deterministic():
+    a = resilience.FaultPlan.from_seed(7, 50, n_events=4, k_workers=3)
+    b = resilience.FaultPlan.from_seed(7, 50, n_events=4, k_workers=3)
+    c = resilience.FaultPlan.from_seed(8, 50, n_events=4, k_workers=3)
+    assert a.events == b.events and a.events != c.events
+    assert len(a.events) == 4
+    for ev in a.events:
+        assert ev.kind in resilience.FAULT_KINDS
+        assert 0 <= ev.step < 50 and 0 <= ev.worker < 3
+    assert a.without("kill").of("kill") == ()
+    assert resilience.FaultPlan.single(3, "kill").kill_steps() == (3,)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        resilience.FaultPlan.single(0, "meteor_strike")
+
+
+def test_every_reason_code_has_a_name():
+    for code in range(8):
+        assert "unknown" not in resilience.reason_name(code)
+    assert "unknown" in resilience.reason_name(99)
+
+
+def test_guard_metrics_surface_through_train_step():
+    """make_train_step threads GuardState through TrainState and
+    surfaces reason-coded metrics -- and the unconfigured step's
+    TrainState keeps guard=() so old checkpoints restore unchanged."""
+    from repro.configs import get_config
+    from repro.configs.base import RBDConfig, TrainConfig
+    from repro.data import synthetic
+    from repro.models import get_model
+    from repro.train import step as steplib
+
+    cfg = get_config("qwen2-0.5b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        model=cfg,
+        optimizer="momentum",
+        rbd=RBDConfig(total_dim=128, backend="jnp", packed="on"),
+        learning_rate=0.5,
+        steps=1,
+        batch_size=2,
+        seq_len=16,
+    )
+    batch = next(synthetic.lm_batches(0, 2, 16, cfg.vocab))
+    rescfg = resilience.ResilienceConfig(guard=resilience.GuardConfig())
+
+    init_p, step_p = steplib.make_train_step(model, tcfg)
+    state_p = init_p(jax.random.PRNGKey(0))
+    assert state_p.guard == ()
+
+    init_g, step_g = steplib.make_train_step(model, tcfg, resilience=rescfg)
+    state_g = init_g(jax.random.PRNGKey(0))
+    assert isinstance(state_g.guard, resilience.GuardState)
+    state_g, metrics = jax.jit(step_g)(state_g, batch)
+    assert int(metrics["guard_reason"]) == resilience.REASON_OK
+    assert float(metrics["guard_lr_scale"]) == 1.0
+    assert int(metrics["guard_count"]) == 0
+    # healthy guarded params == unguarded params, bit-exact
+    state_p, metrics_p = jax.jit(step_p)(state_p, batch)
+    assert "guard_reason" not in metrics_p
+    np.testing.assert_array_equal(
+        np.asarray(state_g.params), np.asarray(state_p.params)
+    )
+
+
+def test_subspace_resilience_fields_default_off():
+    """dataclass defaults keep every pre-PR construction path inert."""
+    params = _params()
+    sub = _sub(params, _plan(params), guarded=False, capture=False)
+    assert sub.guard is None and sub.sentinel_every == 0
+    assert not sub.capture_coords and sub.fault_plan is None
+    assert not sub.resilience_active
+    replaced = dataclasses.replace(sub, sentinel_every=4)
+    assert replaced.resilience_active
