@@ -1,0 +1,326 @@
+"""Multi-tenant subspace-adapter serving benchmark.
+
+The paper's compression claim turned into a serving cost model: a
+tenant's fine-tune is (base_seed, coords) -- ``4*d + 4`` bytes --
+against ``4*D`` for a dense (LoRA-style materialized) delta.  This
+benchmark measures/models, on the tinyllama reduced config:
+
+* adapters-per-HBM-GB for the three residency tiers: payload-resident
+  (the registry), delta-cached (``serve.adapters.AdapterCache``), and
+  dense-delta baseline;
+* launch accounting: the fused multi-adapter apply is ONE
+  ``pallas_call`` per batch REGARDLESS of adapter count (asserted via
+  ``hlo_analysis.count_pallas_calls`` for B in {1, 4, 8}), and the
+  steady-state decode step contains ZERO extra pallas launches (the
+  personalization launch happens per ADMISSION, not per token);
+* modeled v5e per-tenant personalization cost for the three paths --
+  cache hit (HBM add), cache miss (fused in-kernel regeneration;
+  VPU-bound, near-zero resident bytes), and the dense-delta baseline
+  (same traffic as a hit but 4*D resident bytes per tenant forever);
+* a small end-to-end engine run (wall clock, informational).
+
+Machine-readable rows land in ``BENCH_serve_multi_adapter.json``;
+``--check BASELINE`` replays the regression gate CI runs: fused apply
+must stay at one launch, decode at zero, payload bytes must not grow
+>5%, and no baseline row may disappear.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.costmodel import GEN_OPS_PER_ELEM
+from repro.core import projector
+from repro.core.compartments import make_plan
+from repro.launch.hlo_analysis import count_pallas_calls
+from repro.models import get_model
+from repro.serve import apply as serve_apply
+from repro.serve.adapters import AdapterCache, AdapterRegistry, AdapterSpec
+from repro.serve.engine import MultiTenantEngine
+
+V5E_VPU = 4.9e12
+V5E_MXU = 1.97e14
+V5E_BW = 8.19e11
+LAUNCH_OVERHEAD_S = 3e-6
+HBM_GB = 1e9
+
+
+def _setup(total_dim: int = 256):
+    from repro.configs import get_config
+
+    cfg = get_config("tinyllama-1.1b").reduced(compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = make_plan(
+        params, total_dim, granularity="layer", is_stacked=model.is_stacked
+    )
+    return cfg, model, params, plan, plan.packed()
+
+
+def _specs(n: int, d: int, seed0: int = 1000):
+    rng = np.random.default_rng(0)
+    coords = [0.02 * rng.normal(size=d).astype(np.float32) for _ in range(n)]
+    return [AdapterSpec(f"tenant{i}", seed0 + i, coords[i]) for i in range(n)]
+
+
+def run(quick: bool = True):
+    cfg, model, params, plan, layout = _setup()
+    D, d, q = plan.total_params, layout.d_packed, layout.q_packed
+    payload = 4 * d + 4  # coords + base_seed (static-factor norm)
+    delta_bytes = 4 * q  # a materialized packed delta (f32)
+    dense_bytes = 4 * D  # dense-delta (LoRA-style) baseline
+
+    density = {
+        "stage": "serve_adapter_density",
+        "payload_bytes": payload,
+        "delta_cache_bytes": delta_bytes,
+        "dense_delta_bytes": dense_bytes,
+        "compression_x": dense_bytes / payload,
+        "adapters_per_hbm_gb": int(HBM_GB // payload),
+        "cached_deltas_per_hbm_gb": int(HBM_GB // delta_bytes),
+        "dense_deltas_per_hbm_gb": int(HBM_GB // dense_bytes),
+    }
+    density_rows = [density]
+    common.emit(density_rows, "adapter HBM density (tinyllama reduced)")
+
+    # -- launch accounting: ONE fused launch for ANY adapter count ----
+    theta = projector.pack_tree(params, plan, layout)
+
+    def fused(th, coords, seeds):
+        return projector.reconstruct_apply_packed_adapters(
+            coords, plan, seeds, th, backend="pallas", layout=layout, prepacked=True
+        )
+
+    launch_rows = []
+    for b in (1, 4, 8):
+        seeds, coords, _ = serve_apply.specs_to_batch(_specs(b, d), plan, layout)
+        n = count_pallas_calls(fused, theta, coords, seeds)
+        assert n == 1, f"fused apply must be ONE launch, got {n} at B={b}"
+        row = {"stage": f"serve_fused_apply_b{b}", "n_adapters": b}
+        row["launches_per_batch"] = n
+        launch_rows.append(row)
+
+    # steady-state decode: zero extra pallas launches per token (the
+    # personalization launch is per ADMISSION and counted above)
+    reg = AdapterRegistry()
+    for s in _specs(2, d):
+        reg.register(s)
+    mt = MultiTenantEngine(
+        model, params, plan, registry=reg, n_slots=2, max_len=32, layout=layout
+    )
+    n_dec = count_pallas_calls(
+        mt._vstep,
+        mt.slot_params,
+        mt.slot_cache,
+        mt._last_tokens,
+        mt._slot_keys,
+        mt._slot_temps,
+    )
+    assert n_dec == 0, f"decode step grew {n_dec} pallas launches"
+    launch_rows.append(
+        {"stage": "serve_decode_step", "n_adapters": 2, "launches_per_batch": n_dec}
+    )
+    common.emit(launch_rows, "serving launch accounting")
+
+    # -- modeled v5e per-tenant personalization cost ------------------
+    # generation work to regenerate one adapter's basis in-kernel
+    samples = sum(lp.n_stack * lp.dim * lp.size for lp in plan.leaves)
+    amortize_b = 8  # misses batched into one fused launch
+
+    def modeled(stage, hbm_bytes, resident, gen_samples=0, launches=0.0):
+        t_comp = (gen_samples * GEN_OPS_PER_ELEM) / V5E_VPU + 2 * gen_samples / V5E_MXU
+        t = max(t_comp, hbm_bytes / V5E_BW) + launches * LAUNCH_OVERHEAD_S
+        return {
+            "stage": stage,
+            "wall_us_per_tenant": t * 1e6,
+            "hbm_bytes_per_tenant": float(hbm_bytes),
+            "resident_bytes_per_tenant": float(resident),
+        }
+
+    # hit: read theta + read delta + write personalized row
+    hit = modeled("serve_hit_v5e_modeled", 12.0 * q, delta_bytes)
+    # miss: write personalized row + theta read amortized over the
+    # fused batch; basis regenerated on-VPU, nothing resident but the
+    # kilobyte payload
+    miss = modeled(
+        "serve_miss_v5e_modeled",
+        4.0 * q + 4.0 * q / amortize_b,
+        payload,
+        gen_samples=samples,
+        launches=1.0 / amortize_b,
+    )
+    # dense-delta baseline: identical apply traffic to a hit, but the
+    # full 4*D delta is resident per tenant forever
+    densed = modeled("serve_dense_v5e_modeled", 12.0 * q, dense_bytes)
+    overhead = {
+        "stage": "serve_miss_overhead",
+        "wall_us_per_tenant": miss["wall_us_per_tenant"],
+        "hbm_bytes_per_tenant": miss["hbm_bytes_per_tenant"],
+        "resident_bytes_per_tenant": miss["resident_bytes_per_tenant"],
+        "miss_over_dense_x": miss["wall_us_per_tenant"] / densed["wall_us_per_tenant"],
+    }
+    model_rows = [hit, miss, densed, overhead]
+    common.emit(model_rows[:3], "per-tenant personalization (v5e modeled)")
+    print(
+        f"cache-miss regeneration costs "
+        f"{overhead['miss_over_dense_x']:.2f}x a dense-delta apply "
+        f"while holding {payload}/{dense_bytes} resident bytes"
+    )
+
+    # -- measured: fused apply wall clock + tiny end-to-end run -------
+    wall_rows = []
+    seeds8, coords8, _ = serve_apply.specs_to_batch(_specs(8, d), plan, layout)
+
+    def fused_jnp(th, c, s):
+        return projector.reconstruct_apply_packed_adapters(
+            c, plan, s, th, layout=layout, prepacked=True
+        )
+
+    f = jax.jit(fused_jnp)
+    jax.block_until_ready(f(theta, coords8, seeds8))
+    reps = 1 if quick else 10
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(theta, coords8, seeds8))
+    wall = {
+        "stage": "serve_fused_apply_wall",
+        "wall_ms": (time.time() - t0) / reps * 1e3,
+        "tok_per_s": float("nan"),
+    }
+    wall_rows.append(wall)
+
+    cache = AdapterCache(budget_bytes=4 * delta_bytes)
+    mt = MultiTenantEngine(
+        model,
+        params,
+        plan,
+        registry=reg,
+        delta_cache=cache,
+        n_slots=2,
+        max_len=32,
+        layout=layout,
+    )
+    mt.submit(np.arange(4) % cfg.vocab, 4, adapter_id="tenant0")
+    mt.submit(
+        np.arange(4) % cfg.vocab, 4, adapter_id="tenant1", temperature=0.7, seed=1
+    )
+    t0 = time.time()
+    res = mt.run()
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in res.values())
+    wall_rows.append(
+        {"stage": "serve_engine_e2e", "wall_ms": dt * 1e3, "tok_per_s": n_tok / dt}
+    )
+    common.emit(wall_rows, "serving wall clock (CPU, incl. compile)")
+    print("engine stats:", mt.stats, "| cache:", cache.stats())
+
+    rows = density_rows + launch_rows + model_rows + wall_rows
+    _write_json(rows)
+    return rows
+
+
+def check_regression(rows, baseline_path):
+    """The CI serve-regression gate.  Violations (empty = pass):
+
+    * any ``serve_fused_apply_b*`` row with launches_per_batch != 1
+      (the one-launch-per-batch contract, for every adapter count);
+    * ``serve_decode_step`` with launches_per_batch != 0 (steady-state
+      decode must not grow pallas launches per token);
+    * ``payload_bytes`` growing >5% vs the baseline (the kilobyte
+      adapter story is the product -- payload growth is a regression);
+    * modeled per-tenant HBM bytes growing >5% on any modeled row;
+    * any baseline serve_ row disappearing (silently retires its
+      invariant).
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["stage"]: r for r in base["rows"]}
+    new_rows = {r["stage"]: r for r in rows}
+    violations = []
+    for stage, nr in new_rows.items():
+        launches = nr.get("launches_per_batch")
+        if stage.startswith("serve_fused_apply_b") and launches != 1:
+            violations.append(f"{stage}: launches_per_batch {launches} != 1")
+        if stage == "serve_decode_step" and launches != 0:
+            violations.append(f"{stage}: decode grew {launches} pallas launches")
+    for stage, br in base_rows.items():
+        nr = new_rows.get(stage)
+        if nr is None:
+            violations.append(f"{stage}: row disappeared from the benchmark")
+            continue
+        for field, tol in (("payload_bytes", 1.05), ("hbm_bytes_per_tenant", 1.05)):
+            b, n = br.get(field), nr.get(field)
+            if b is not None and n is not None and n > b * tol:
+                violations.append(
+                    f"{stage}: {field} {n:.0f} regressed >5% vs baseline {b:.0f}"
+                )
+    return violations
+
+
+def _write_json(rows, path=None):
+    if path is None:
+        path = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_serve_multi_adapter.json"
+        )
+    payload = {
+        "benchmark": "serve_multi_adapter",
+        "device": jax.devices()[0].device_kind,
+        "rows": [
+            {k: (None if isinstance(v, float) and v != v else v) for k, v in r.items()}
+            for r in rows
+        ],
+    }
+    with open(os.path.normpath(path), "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument(
+        "--smoke",
+        action="store_true",
+        help="quick mode (few timing reps) -- what CI runs",
+    )
+    grp.add_argument(
+        "--full", action="store_true", help="more timing reps for stable numbers"
+    )
+    ap.add_argument(
+        "--check",
+        metavar="BASELINE_JSON",
+        default=None,
+        help="serve-regression gate: compare fresh rows against this "
+        "committed baseline and exit non-zero on any violation",
+    )
+    args = ap.parse_args()
+    if args.check:
+        # snapshot the baseline BEFORE run() refreshes the JSON in place
+        import shutil
+        import tempfile
+
+        fd, baseline_copy = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            shutil.copyfile(args.check, baseline_copy)
+            rows = run(quick=args.smoke or not args.full)
+            violations = check_regression(rows, baseline_copy)
+        finally:
+            os.unlink(baseline_copy)
+        if violations:
+            print("SERVE REGRESSION GATE FAILED:")
+            for v in violations:
+                print("  -", v)
+            sys.exit(1)
+        print(f"serve-regression gate passed (baseline {args.check}, {len(rows)} rows)")
+    else:
+        run(quick=args.smoke or not args.full)

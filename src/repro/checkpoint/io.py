@@ -64,23 +64,32 @@ def _write_atomic(path: str, write_fn) -> None:
     os.replace(tmp, path)
 
 
-def save(directory: str, tree: Any, step: int) -> str:
-    os.makedirs(directory, exist_ok=True)
-    arrays = _flatten(tree)
-    base = os.path.join(directory, f"ckpt_{step:08d}")
+def _save_pair(base: str, arrays: dict[str, np.ndarray],
+               extra_meta: dict | None = None) -> str:
+    """Write ``base``.npz + ``base``.json with the full durability
+    contract (atomic tmp+fsync+rename, CRC32 per array, npz-first
+    commit order).  Shared by the step-numbered checkpoints and the
+    NAMED kilobyte-scale exports (serving adapters)."""
     meta = {
-        "step": step,
         "keys": sorted(arrays),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "crc32": {k: _array_crc(v) for k, v in arrays.items()},
     }
+    if extra_meta:
+        meta.update(extra_meta)
     # npz first, sidecar second: the sidecar's arrival commits the pair
     # (an npz without a sidecar is treated as a partial write)
     _write_atomic(base + ".npz", lambda f: np.savez(f, **arrays))
     _write_atomic(base + ".json",
                   lambda f: f.write(json.dumps(meta).encode("utf-8")))
     return base + ".npz"
+
+
+def save(directory: str, tree: Any, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    return _save_pair(os.path.join(directory, f"ckpt_{step:08d}"),
+                      _flatten(tree), {"step": step})
 
 
 def valid_steps(directory: str) -> list[int]:
@@ -121,15 +130,13 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def _load_verified(directory: str, step: int) -> dict[str, np.ndarray]:
-    """Load one checkpoint with full verification: sidecar matches the
-    npz key set and every array passes its CRC32.  Raises ValueError on
-    any mismatch (callers decide whether to fall back or crash)."""
-    base = os.path.join(directory, f"ckpt_{step:08d}")
+def _load_pair(base: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Load one npz+sidecar pair with full verification: sidecar matches
+    the npz key set and every array passes its CRC32.  Returns
+    (arrays, meta); raises ValueError on any mismatch (callers decide
+    whether to fall back or crash)."""
     with open(base + ".json") as fh:
         meta = json.load(fh)
-    if int(meta.get("step", -1)) != step:
-        raise ValueError(f"sidecar step {meta.get('step')} != {step}")
     try:
         data = np.load(base + ".npz")
         if set(data.files) != set(meta["keys"]):
@@ -147,7 +154,47 @@ def _load_verified(directory: str, step: int) -> dict[str, np.ndarray]:
         # zipfile/npy-level damage (bad zip CRC, torn member, ...):
         # normalize to the documented ValueError contract
         raise ValueError(f"corrupt npz payload: {e}") from e
-    return out
+    return out, meta
+
+
+def _load_verified(directory: str, step: int) -> dict[str, np.ndarray]:
+    """Step-numbered flavor of :func:`_load_pair` (sidecar step checked)."""
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    data, meta = _load_pair(base)
+    if int(meta.get("step", -1)) != step:
+        raise ValueError(f"sidecar step {meta.get('step')} != {step}")
+    return data
+
+
+def save_named(directory: str, tree: Any, name: str,
+               extra_meta: dict | None = None) -> str:
+    """Save a pytree under a NAME instead of a step number -- the
+    kilobyte-scale serving-adapter exports ride on this, reusing the
+    step checkpoints' atomic-write + CRC-sidecar discipline verbatim.
+    ``extra_meta`` lands in the JSON sidecar (strings/ints only)."""
+    if os.sep in name or "/" in name or name.startswith("."):
+        raise ValueError(f"invalid export name {name!r}")
+    os.makedirs(directory, exist_ok=True)
+    meta = {"name": name}
+    if extra_meta:
+        meta.update(extra_meta)
+    return _save_pair(os.path.join(directory, name), _flatten(tree), meta)
+
+
+def load_named(directory: str, name: str,
+               template: Any = None):
+    """Verified load of a named export.  With a ``template`` pytree the
+    arrays are reassembled into it (shape-checked); otherwise returns
+    the raw ``(arrays, meta)`` pair.  Raises ValueError on any CRC or
+    sidecar mismatch -- a named export is an explicit request, so there
+    is no older-entry fallback to hide corruption behind."""
+    data, meta = _load_pair(os.path.join(directory, name))
+    if meta.get("name", name) != name:
+        raise ValueError(
+            f"sidecar name {meta.get('name')!r} != {name!r}")
+    if template is not None:
+        return _unflatten(template, data)
+    return data, meta
 
 
 def _unflatten(template: Any, data: dict[str, np.ndarray]) -> Any:

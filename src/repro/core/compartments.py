@@ -360,6 +360,12 @@ class PackedLayout:
         the K-worker joint-subspace step of independent_bases mode."""
         return worker_recon_tables(self, k_workers)
 
+    def adapter_tables(self, n_adapters: int) -> "AdapterReconTables":
+        """Reconstruct-apply tile tables with an adapter axis (cached) --
+        the multi-tenant serving apply (one personalized parameter buffer
+        PER adapter from one base buffer, in one launch)."""
+        return adapter_recon_tables(self, n_adapters)
+
 
 class WorkerReconTables(NamedTuple):
     """Host-side tile tables for the K-worker joint reconstruct-apply
@@ -432,6 +438,71 @@ def worker_recon_tables(layout: PackedLayout,
         init=packed[4].astype(np.int32),
         gblk=packed[5].astype(np.int32),
         sblk=packed[6].astype(np.int32),
+    )
+
+
+class AdapterReconTables(NamedTuple):
+    """Host-side tile tables for the multi-ADAPTER reconstruct-apply
+    megakernel (the serving-side consumer of the packed machinery).
+
+    Where the K-worker tables accumulate every worker's delta into ONE
+    streamed theta block (a joint update), the adapter tables write one
+    personalized parameter row PER adapter: the output is
+    (n_adapters, q_packed) and each (adapter, pos-block) output block is
+    initialized from the SHARED base theta block, then accumulates that
+    adapter's directions innermost -- per adapter the tile sequence is
+    identical to the single-tenant reconstruct-apply, so per-row output
+    is bit-exact against it, and the B dense per-tenant deltas never
+    exist in HBM (only the personalized parameters are written).
+
+    ``seed_idx`` indexes the adapter-major per-segment seed table of
+    shape (n_adapters * n_segments,) (each adapter's segment seeds fold
+    from its OWN ``base_seed`` -- no shared schedule, unlike workers);
+    ``sblk`` indexes the row-major flattened (n_adapters * d_packed,)
+    stacked scale buffer; ``adp`` is the adapter (output-row) index.
+    """
+
+    seed_idx: np.ndarray
+    row0: np.ndarray
+    col0: np.ndarray
+    q: np.ndarray
+    init: np.ndarray       # 1 iff first dir-block visit of the block
+    gblk: np.ndarray       # block index into the SHARED base theta
+    sblk: np.ndarray
+    adp: np.ndarray        # output row (adapter index)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.seed_idx.shape[0])
+
+
+@functools.lru_cache(maxsize=32)
+def adapter_recon_tables(layout: PackedLayout,
+                         n_adapters: int) -> AdapterReconTables:
+    """Grow a layout's reconstruct-apply tables with an adapter axis.
+
+    Adapter-major: adapter a's tiles are the base ``rt_*`` table
+    verbatim (init flags included -- every adapter re-initializes its
+    own output row from the base theta), with its seed and scale
+    indices offset into the stacked per-adapter tables.
+    """
+    if n_adapters < 1:
+        raise ValueError(f"n_adapters must be >= 1, got {n_adapters}")
+    n_seg = layout.n_segments
+    d_blocks = layout.d_packed // layout.dir_block
+    n_t = layout.n_recon_tiles
+    reps = np.arange(n_adapters, dtype=np.int64)
+    return AdapterReconTables(
+        seed_idx=(reps[:, None] * n_seg
+                  + layout.rt_seg[None, :]).reshape(-1).astype(np.int32),
+        row0=np.tile(layout.rt_row0, n_adapters).astype(np.uint32),
+        col0=np.tile(layout.rt_col0, n_adapters).astype(np.uint32),
+        q=np.tile(layout.rt_q, n_adapters).astype(np.int32),
+        init=np.tile(layout.rt_init, n_adapters).astype(np.int32),
+        gblk=np.tile(layout.rt_gblk, n_adapters).astype(np.int32),
+        sblk=(reps[:, None] * d_blocks
+              + layout.rt_sblk[None, :]).reshape(-1).astype(np.int32),
+        adp=np.repeat(reps, n_t).astype(np.int32),
     )
 
 

@@ -673,6 +673,31 @@ def _reconstruct_apply_packed_workers_jnp(wseg_seeds, scale_gathered,
     return theta
 
 
+def _reconstruct_apply_packed_adapters_jnp(aseg_seeds, scale_batch,
+                                           theta_packed, layout,
+                                           n_adapters: int,
+                                           distribution: str,
+                                           prng="threefry"):
+    """jnp oracle for the multi-ADAPTER reconstruct-apply megakernel: a
+    lax.scan over adapters, each replaying the single-tenant tile scan
+    against the SAME shared base theta and emitting its own personalized
+    row.  Per adapter the accumulation order is identical to
+    :func:`_reconstruct_apply_packed_jnp`, so interpret-mode kernel
+    output is bit-exact against this row for row."""
+    seeds = aseg_seeds.reshape(n_adapters, layout.n_segments)
+    sc = scale_batch.astype(jnp.float32).reshape(n_adapters,
+                                                 layout.d_packed)
+    theta0 = theta_packed.astype(jnp.float32)
+
+    def body(carry, xs):
+        seeds_a, scale_a = xs
+        return carry, _reconstruct_apply_packed_jnp(
+            seeds_a, scale_a, theta0, layout, distribution, prng)
+
+    _, out = jax.lax.scan(body, None, (seeds, sc))
+    return out
+
+
 def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
                    layout=None, return_norms: bool = False,
                    prepacked: bool = False, prng="threefry"):
@@ -817,6 +842,73 @@ def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
     return unpack_tree(out, plan, layout, params)
 
 
+def adapter_segment_seeds(plan: Plan, adapter_seeds):
+    """(n_adapters * n_segments,) uint32 per-adapter segment seeds,
+    adapter-major.  Each adapter's segments fold from its OWN uint32
+    ``base_seed`` through the standard ``segment_seeds`` schedule -- the
+    seed half of the (seed, coords) adapter identity."""
+    return jax.vmap(
+        lambda s: segment_seeds(plan, s)
+    )(jnp.asarray(adapter_seeds, jnp.uint32)).reshape(-1)
+
+
+def reconstruct_apply_packed_adapters(coords_batch, plan: Plan,
+                                      adapter_seeds, params: Any, *,
+                                      eta=1.0, backend: str = "jnp",
+                                      row_sq=None, layout=None,
+                                      prepacked: bool = False,
+                                      prng="threefry"):
+    """Multi-tenant serving apply:
+
+        theta_a' = theta - eta * (c_hat_a @ P_a)   for a = 1..B
+
+    ONE launch produces every adapter's personalized parameter buffer
+    from the shared base, regenerating each adapter's basis in-kernel
+    from its own ``base_seed`` -- the B dense per-tenant deltas never
+    exist in HBM.  ``coords_batch`` is (n_adapters, d_packed) normalized
+    coordinates (the stored adapter payload); ``adapter_seeds`` is the
+    matching (n_adapters,) uint32 base seeds.  ``eta`` defaults to 1.0:
+    a serving adapter's coordinates already ARE the accumulated update.
+
+    Normalization follows the K-worker rules: static-factor norms need
+    nothing beyond the seeds; 'exact' needs each adapter's stored
+    per-direction squared row norms (``row_sq``, (n_adapters, d_packed)
+    -- kilobytes, exported alongside the coordinates); 'orthonormal' is
+    unsupported.
+
+    ``prepacked=True`` takes/returns packed buffers ((q_packed,) in,
+    (n_adapters, q_packed) out); otherwise ``params`` is a pytree and
+    the result is a stacked pytree with a leading adapter axis (ready
+    for a vmapped decode step).
+    """
+    if plan.normalization not in STATIC_FACTOR_NORMALIZATIONS \
+            and plan.normalization != "exact":
+        raise ValueError(
+            f"normalization {plan.normalization!r} is not supported by "
+            "the multi-adapter packed reconstruction (needs a "
+            "factor-style scale)")
+    if plan.normalization == "exact" and row_sq is None:
+        raise ValueError(
+            "'exact' normalization needs each adapter's stored row "
+            "norms (row_sq, (n_adapters, d_packed)); regenerating them "
+            "at serve time would cost B extra generation passes")
+    layout = layout if layout is not None else plan.packed()
+    n_adapters = int(coords_batch.shape[0])
+    aseg_seeds = adapter_segment_seeds(plan, adapter_seeds)
+    factor = jnp.atleast_2d(_packed_norm_factor(plan, layout, row_sq))
+    scale = (coords_batch.astype(jnp.float32) * factor
+             * jnp.float32(eta))
+    theta = (params.astype(jnp.float32) if prepacked
+             else pack_tree(params, plan, layout))
+    out = _get_backend(backend).reconstruct_apply_packed_adapters(
+        aseg_seeds, scale, theta, layout, n_adapters,
+        plan.distribution, prng)
+    if prepacked:
+        return out
+    return jax.vmap(
+        lambda row: unpack_tree(row, plan, layout, params))(out)
+
+
 # ---------------------------------------------------------------------------
 # backend dispatch (jnp reference vs Pallas kernels)
 # ---------------------------------------------------------------------------
@@ -829,6 +921,8 @@ class _JnpBackend:
     reconstruct_apply_packed = staticmethod(_reconstruct_apply_packed_jnp)
     reconstruct_apply_packed_workers = staticmethod(
         _reconstruct_apply_packed_workers_jnp)
+    reconstruct_apply_packed_adapters = staticmethod(
+        _reconstruct_apply_packed_adapters_jnp)
 
 
 @functools.cache
@@ -846,6 +940,8 @@ def _get_backend(name: str):
                 ops.reconstruct_apply_packed)
             reconstruct_apply_packed_workers = staticmethod(
                 ops.reconstruct_apply_packed_workers)
+            reconstruct_apply_packed_adapters = staticmethod(
+                ops.reconstruct_apply_packed_adapters)
 
         return _PallasBackend
     raise ValueError(f"unknown projector backend {name!r}")

@@ -105,3 +105,18 @@ def reconstruct_apply_packed_workers(wseg_seeds, scale_gathered,
         wseg_seeds, scale_gathered, theta_packed, layout, k_workers,
         distribution, interpret=_INTERPRET, prng=prng,
     )
+
+
+def reconstruct_apply_packed_adapters(aseg_seeds, scale_batch,
+                                      theta_packed, layout,
+                                      n_adapters: int,
+                                      distribution: str = "normal",
+                                      prng="threefry"):
+    """Multi-adapter serving apply (one personalized buffer per adapter
+    from one shared base), one launch regardless of adapter count."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.reconstruct_apply_packed_adapters(
+        aseg_seeds, scale_batch, theta_packed, layout, n_adapters,
+        distribution, interpret=_INTERPRET, prng=prng,
+    )

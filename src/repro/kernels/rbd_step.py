@@ -59,7 +59,8 @@ from repro.core import rng
 from repro.core.compartments import PackedLayout
 
 __all__ = ["project_packed", "reconstruct_apply_packed",
-           "reconstruct_apply_packed_workers"]
+           "reconstruct_apply_packed_workers",
+           "reconstruct_apply_packed_adapters"]
 
 
 def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
@@ -117,6 +118,43 @@ def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
     # mask positions past the segment's true size so padding slots of a
     # packed-RESIDENT theta keep their (zero) value in-stream -- no
     # separate masking pass over the parameter buffer exists
+    cols = jax.lax.broadcasted_iota(jnp.int32, (dir_block, pb), 1) \
+        + col0_ref[t].astype(jnp.int32)
+    block = jnp.where(cols < q_ref[t], block, 0.0)
+
+    s = s_ref[...].astype(jnp.float32)              # (1, dir_block)
+    part = jax.lax.dot_general(
+        s, block,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (1, pb)
+
+    @pl.when(init_ref[t] == 1)
+    def _():
+        out_ref[...] = theta_ref[...]
+
+    out_ref[...] -= part
+
+
+def _adapter_recon_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
+                          gblk_ref, sblk_ref, adp_ref, s_ref, theta_ref,
+                          out_ref, *, dir_block: int, distribution: str,
+                          prng_spec: rng.PrngSpec):
+    """Multi-adapter reconstruct-apply: the body of ``_recon_apply_kernel``
+    with one extra scalar-prefetch table (``adp``, consumed only by the
+    output BlockSpec index map).  Each (adapter, pos-block) output block
+    initializes from the SHARED base theta block and accumulates its
+    adapter's directions -- the dense per-tenant delta never exists."""
+    t = pl.program_id(0)
+    pb = out_ref.shape[1]
+
+    block = prng_spec.generate_tile(
+        seed_ref[t],
+        row0_ref[t].astype(jnp.uint32),
+        col0_ref[t].astype(jnp.uint32),
+        (dir_block, pb),
+        distribution,
+    )
     cols = jax.lax.broadcasted_iota(jnp.int32, (dir_block, pb), 1) \
         + col0_ref[t].astype(jnp.int32)
     block = jnp.where(cols < q_ref[t], block, 0.0)
@@ -347,3 +385,88 @@ def reconstruct_apply_packed_workers(
         theta,
     )
     return out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layout", "n_adapters", "distribution", "interpret",
+                     "prng"),
+)
+def reconstruct_apply_packed_adapters(
+    aseg_seeds,
+    scale_batch,
+    theta_packed,
+    layout: PackedLayout,
+    n_adapters: int,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    prng="threefry",
+):
+    """One launch: theta_a' = theta - scale_a @ P_a for ALL segments of
+    ALL B adapters -- the multi-tenant serving apply.
+
+    The K-worker megakernel folds every worker's delta into ONE joint
+    update; serving needs the opposite: B *separate* personalized
+    parameter buffers from one shared base.  The grid is the base
+    reconstruct-apply grid grown by an adapter axis
+    (``PackedLayout.adapter_tables``): adapter a's tiles replay the base
+    table verbatim (directions innermost, init flags intact) against
+    output ROW a of the (n_adapters, q_packed) result, each output block
+    initialized from the SHARED streamed base theta block.  Per adapter
+    the accumulation sequence is identical to the single-tenant
+    ``reconstruct_apply_packed``, so each output row is bit-exact
+    against it -- and the whole batch is ONE ``pallas_call`` regardless
+    of the number of distinct adapters.  The B dense per-tenant deltas
+    never exist in HBM: only the personalized parameters are written.
+
+    ``aseg_seeds``: (n_adapters * n_segments,) uint32 per-adapter
+    segment seeds, adapter-major -- each adapter's segments fold from
+    its OWN base seed (``projector.segment_seeds(plan, base_seed_a)``),
+    no shared schedule.  ``scale_batch``: (n_adapters, d_packed) f32 --
+    each adapter's packed coordinates with normalization applied, zero
+    on padding slots.  ``theta_packed``: (q_packed,) f32 shared base.
+    Returns (n_adapters, q_packed) f32.
+    """
+    prng_spec = rng.get_prng_spec(prng)
+    pb, db = layout.pos_block, layout.dir_block
+    at = layout.adapter_tables(n_adapters)
+    s = scale_batch.astype(jnp.float32).reshape(
+        1, n_adapters * layout.d_packed)
+    theta = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
+    seeds = _tile_seeds(aseg_seeds, at.seed_idx)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(at.n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, q, ini, gb, sb, ad:
+                         (0, sb[t])),
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb, ad:
+                         (0, gb[t])),
+        ],
+        out_specs=pl.BlockSpec((1, pb),
+                               lambda t, se, r0, c0, q, ini, gb, sb, ad:
+                               (ad[t], gb[t])),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _adapter_recon_kernel, dir_block=db, distribution=distribution,
+            prng_spec=prng_spec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_adapters, layout.q_packed),
+                                       jnp.float32),
+        interpret=interpret,
+    )(
+        seeds,
+        jnp.asarray(at.row0),
+        jnp.asarray(at.col0),
+        jnp.asarray(at.q),
+        jnp.asarray(at.init),
+        jnp.asarray(at.gblk),
+        jnp.asarray(at.sblk),
+        jnp.asarray(at.adp),
+        s,
+        theta,
+    )
+    return out

@@ -1,0 +1,173 @@
+"""Fused multi-adapter delta application for serving.
+
+One batch of requests touches B distinct adapters.  The training-side
+reconstruct-apply megakernel already regenerates bases in-kernel from
+seeds (``kernels/rbd_step.py``); serving reuses that trick with the B
+adapters playing the role of the K workers: ONE ``pallas_call`` streams
+the shared base ``theta`` through VMEM and writes every adapter's
+personalized parameter buffer
+
+    theta_a' = theta - c_hat_a @ P(base_seed_a)
+
+directly -- the dense per-tenant deltas never exist in HBM for
+cache-MISS tenants (their bases are regenerated from kilobytes of
+(seed, coords) state at VPU cost).  Cache-HIT tenants take the
+materialize-then-add fallback instead: their delta is already resident
+in the LRU cache (``serve.adapters.AdapterCache``) and applying it is a
+pure HBM-bound add.
+
+Exactness contract: the fused path is BIT-exact against the jnp oracle
+(``core.projector._reconstruct_apply_packed_adapters_jnp``, identical
+tile sequence) and against the single-tenant packed apply, row by row.
+The cached-delta path agrees with the fused path to f32 rounding: the
+delta accumulates ``(0 - p_1) - p_2 - ...`` over direction blocks
+while the fused path computes ``(theta - p_1) - p_2 - ...``, and the
+two round identically only when a compartment has a single direction
+block (then IEEE ``theta + (0 - p) == theta - p`` applies exactly).
+Each path is individually deterministic bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projector
+from repro.core.compartments import Plan
+from repro.serve.adapters import AdapterCache, AdapterSpec
+
+
+def specs_to_batch(specs: Sequence[AdapterSpec], plan: Plan, layout):
+    """Stack adapter payloads into the (seeds, coords[, row_sq]) batch
+    the fused apply consumes.  Under 'exact' normalization every spec
+    must carry its stored row norms (they are part of the exported
+    adapter payload); under static-factor norms row_sq is ignored."""
+    if not specs:
+        raise ValueError("specs_to_batch needs at least one adapter")
+    seeds = jnp.asarray([s.base_seed for s in specs], jnp.uint32)
+    coords = jnp.asarray(np.stack([s.coords for s in specs]), jnp.float32)
+    if coords.shape[1] != layout.d_packed:
+        raise ValueError(
+            f"adapter coords have d={coords.shape[1]}, layout expects "
+            f"d_packed={layout.d_packed}"
+        )
+    row_sq = None
+    if plan.normalization == "exact":
+        missing = [s.adapter_id for s in specs if s.row_sq is None]
+        if missing:
+            raise ValueError(
+                "'exact' normalization needs stored row norms; adapters "
+                f"without row_sq: {missing}"
+            )
+        row_sq = jnp.asarray(np.stack([s.row_sq for s in specs]), jnp.float32)
+    return seeds, coords, row_sq
+
+
+def apply_adapters_fused(
+    theta_packed,
+    specs: Sequence[AdapterSpec],
+    plan: Plan,
+    layout=None,
+    *,
+    backend: str = "jnp",
+    prng="threefry",
+):
+    """ONE launch: every adapter's personalized (q_packed,) buffer from
+    the shared base.  Returns (len(specs), q_packed) f32."""
+    layout = layout if layout is not None else plan.packed()
+    seeds, coords, row_sq = specs_to_batch(specs, plan, layout)
+    return projector.reconstruct_apply_packed_adapters(
+        coords,
+        plan,
+        seeds,
+        theta_packed,
+        backend=backend,
+        row_sq=row_sq,
+        layout=layout,
+        prepacked=True,
+        prng=prng,
+    )
+
+
+def materialize_deltas(
+    specs: Sequence[AdapterSpec],
+    plan: Plan,
+    layout=None,
+    *,
+    backend: str = "jnp",
+    prng="threefry",
+):
+    """Materialize dense packed deltas for cache FILLS: the fused apply
+    over a zero base gives ``delta_a = -(c_hat_a @ P_a)`` with the
+    kernel's own accumulation order, so ``theta + delta_a`` matches the
+    fused ``theta - c_hat_a @ P_a`` path to f32 rounding (bit-exact
+    when each compartment has one direction block; see module
+    docstring).  One launch for all B specs.
+    Returns (len(specs), q_packed) f32."""
+    layout = layout if layout is not None else plan.packed()
+    zeros = jnp.zeros((layout.q_packed,), jnp.float32)
+    return apply_adapters_fused(zeros, specs, plan, layout, backend=backend, prng=prng)
+
+
+def personalize(
+    theta_packed,
+    specs: Sequence[AdapterSpec],
+    plan: Plan,
+    layout=None,
+    *,
+    cache: AdapterCache | None = None,
+    backend: str = "jnp",
+    prng="threefry",
+    pin_misses: bool = False,
+):
+    """Per-tenant personalized buffers for a batch of DISTINCT adapters,
+    routing each through the cheapest path:
+
+    * cache HIT: ``theta + cached_delta`` -- HBM-bound add, no
+      generation;
+    * cache MISS: the fused regenerate-and-apply launch -- the delta
+      never exists in HBM.  With ``pin_misses=True`` the misses are
+      instead materialized (one launch over a zero base), inserted into
+      the cache (LRU evictions may fire), and applied by add, so the
+      same request takes the hit path next time with identical bits.
+
+    Returns ``(buffers, info)``: (len(specs), q_packed) f32 rows in
+    spec order, and a dict with per-call hit/miss counts and the number
+    of fused launches issued.
+    """
+    layout = layout if layout is not None else plan.packed()
+    theta = jnp.asarray(theta_packed, jnp.float32)
+    rows: list = [None] * len(specs)
+    misses: list[tuple[int, AdapterSpec]] = []
+    hits = 0
+    for i, spec in enumerate(specs):
+        delta = cache.get(spec.base_seed) if cache is not None else None
+        if delta is not None:
+            rows[i] = theta + delta
+            hits += 1
+        else:
+            misses.append((i, spec))
+    launches = 0
+    if misses:
+        miss_specs = [s for _, s in misses]
+        if pin_misses and cache is not None:
+            deltas = materialize_deltas(
+                miss_specs, plan, layout, backend=backend, prng=prng
+            )
+            launches = 1
+            for (i, spec), delta in zip(misses, deltas):
+                cache.put(spec.base_seed, delta)
+                rows[i] = theta + delta
+        else:
+            fused = apply_adapters_fused(
+                theta, miss_specs, plan, layout, backend=backend, prng=prng
+            )
+            launches = 1
+            for (i, _), row in zip(misses, fused):
+                rows[i] = row
+    info = {"hits": hits, "misses": len(misses), "fused_launches": launches}
+    if rows:
+        return jnp.stack(rows), info
+    return jnp.zeros((0, layout.q_packed), jnp.float32), info

@@ -1,22 +1,50 @@
-"""Batched serving engine: prefill + greedy/temperature decode.
+"""Serving engines: batched single-tenant and multi-tenant decode.
 
-Small but real: batched prompts, KV-cache reuse, jit'd decode step.  The
-dry-run lowers the same ``decode_step`` this engine drives; RBD is a
-training-time technique and plays no role at serving (DESIGN.md
-§Arch-applicability).
+Small but real: batched prompts, KV-cache reuse, jit'd decode step.
+RBD is trained offline but very much plays a role AT serving: a
+tenant's fine-tune is (base_seed, coords) -- kilobytes -- and
+:class:`MultiTenantEngine` turns those into per-slot personalized
+parameters on admission, regenerating each adapter's basis in-kernel
+through the fused multi-adapter apply (``serve.apply``) so B tenants
+cost ONE extra launch and zero resident dense deltas for cache misses.
+(The earlier claim here that "RBD plays no role at serving" predated
+the adapter subsystem.)
+
+Decode slots are padded: the decode launch always runs the full slot
+axis, and EOS-aware early stop plus continuous batching (``serve.
+scheduler``) retire finished requests immediately so they stop burning
+their slot.
 """
 
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import projector
 from repro.models import transformer
 from repro.models.registry import Model
+from repro.serve import apply as serve_apply
+from repro.serve.adapters import AdapterCache, AdapterRegistry
+from repro.serve.scheduler import Scheduler
+
+
+def sample_token(logits, key, temperature):
+    """(B, V) logits -> (B, 1) int32: greedy at temperature <= 0, else
+    categorical at the given temperature.  EVERY emitted token --
+    including the first one out of prefill -- goes through this one
+    path, so a temperature>0 request is sampled from token 0."""
+    greedy = jnp.argmax(logits, axis=-1)
+    sampled = jax.random.categorical(
+        key, logits / jnp.maximum(temperature, 1e-4))
+    tok = jnp.where(temperature <= 0.0, greedy, sampled)
+    return tok[:, None].astype(jnp.int32)
 
 
 class Engine:
+    """Single set of parameters, batched prompts."""
+
     def __init__(self, model: Model, params, max_len: int = 2048):
         self.model = model
         self.params = params
@@ -30,27 +58,220 @@ class Engine:
         @jax.jit
         def _step(params, cache, token, key, temperature):
             logits, cache = model.decode_step(params, cache, token)
-            logits = logits[:, -1, :]
-            greedy = jnp.argmax(logits, axis=-1)
-            sampled = jax.random.categorical(
-                key, logits / jnp.maximum(temperature, 1e-4))
-            tok = jnp.where(temperature <= 0.0, greedy, sampled)
-            return tok[:, None].astype(jnp.int32), cache
+            return sample_token(logits[:, -1, :], key, temperature), cache
 
         self._prefill = _prefill
         self._step = _step
+        self._sample = jax.jit(sample_token)
 
     def generate(self, prompts, n_tokens: int, *,
-                 temperature: float = 0.0, seed: int = 0):
-        """prompts: (B, S) int32 -> (B, n_tokens) int32 continuations."""
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: int | None = None, pad_id: int = 0):
+        """prompts: (B, S) int32 -> (B, n_tokens) int32 continuations.
+
+        The first token is sampled from the prefill logits through the
+        same temperature path as every later token.  With ``eos_id``
+        set, rows that emit EOS keep it, are right-padded with
+        ``pad_id`` from there on, and once every row has finished the
+        decode loop stops early.
+        """
         logits, cache = self._prefill(self.params, prompts)
-        token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(
-            jnp.int32)
-        out = [token]
+        temp = jnp.float32(temperature)
         key = jax.random.PRNGKey(seed)
-        for i in range(n_tokens - 1):
+        key, sub = jax.random.split(key)
+        token = self._sample(logits[:, -1, :], sub, temp)
+        out = [token]
+        done = (token[:, 0] == eos_id) if eos_id is not None else None
+        for _ in range(n_tokens - 1):
+            if done is not None and bool(done.all()):
+                break
             key, sub = jax.random.split(key)
-            token, cache = self._step(self.params, cache, token, sub,
-                                      jnp.float32(temperature))
+            token, cache = self._step(self.params, cache, token, sub, temp)
+            if done is not None:
+                token = jnp.where(done[:, None], jnp.int32(pad_id), token)
+                done = done | (token[:, 0] == eos_id)
             out.append(token)
-        return jnp.concatenate(out, axis=1)
+        res = jnp.concatenate(out, axis=1)
+        if res.shape[1] < n_tokens:
+            res = jnp.concatenate(
+                [res, jnp.full((res.shape[0], n_tokens - res.shape[1]),
+                               pad_id, jnp.int32)], axis=1)
+        return res
+
+
+class MultiTenantEngine:
+    """Continuous batching over ``n_slots`` padded decode slots, each
+    slot carrying its tenant's PERSONALIZED parameters.
+
+    Admission path (per tick, see :meth:`step`):
+
+    1. the scheduler fills free slots FIFO;
+    2. every admitted tenant's packed parameter row is produced --
+       cache hits by delta add, all misses together by ONE fused
+       regenerate-and-apply launch (``serve.apply.personalize``);
+    3. rows are unpacked into the stacked per-slot parameter pytree
+       (one vmapped unpack for all slots);
+    4. each admitted prompt is prefilled with its slot's parameters and
+       its first token sampled through the shared temperature path.
+
+    Decode is one vmapped launch over the full slot axis per tick;
+    per-slot KV caches carry per-slot positions.  Retirement (EOS or
+    token budget) frees the slot for the next queued request on the
+    following tick.
+    """
+
+    def __init__(self, model: Model, base_params, plan, *,
+                 registry: AdapterRegistry,
+                 delta_cache: AdapterCache | None = None,
+                 n_slots: int = 4, max_len: int = 256,
+                 backend: str = "jnp", prng="threefry",
+                 pin_on_miss: bool = True, pad_id: int = 0,
+                 layout=None):
+        self.model = model
+        cfg = model.cfg
+        self.plan = plan
+        self.layout = layout if layout is not None else plan.packed()
+        self.registry = registry
+        self.delta_cache = delta_cache
+        self.backend = backend
+        self.prng = prng
+        self.pin_on_miss = pin_on_miss
+        self.pad_id = int(pad_id)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.scheduler = Scheduler(n_slots)
+        self.base_params = base_params
+        self.theta = projector.pack_tree(base_params, plan, self.layout)
+        self.stats = {"decode_steps": 0, "prefills": 0,
+                      "fused_launches": 0, "params_rebuilds": 0}
+
+        self._slot_thetas = jnp.tile(self.theta[None], (n_slots, 1))
+        self._unpack_slots = jax.jit(jax.vmap(
+            lambda row: projector.unpack_tree(
+                row, plan, self.layout, base_params)))
+        self.slot_params = self._unpack_slots(self._slot_thetas)
+
+        cache0 = transformer.init_cache(cfg, 1, max_len)
+        self.slot_cache = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_slots), cache0)
+        self._slot_keys = jnp.stack(
+            [jax.random.PRNGKey(0)] * n_slots)
+        self._slot_temps = jnp.zeros((n_slots,), jnp.float32)
+        self._last_tokens = jnp.full((n_slots, 1, 1), self.pad_id,
+                                     jnp.int32)
+
+        @jax.jit
+        def _prefill(params, tokens):
+            return transformer.prefill(cfg, params, tokens, max_len)
+
+        def _one(params, cache, token, key, temp):
+            logits, cache = model.decode_step(params, cache, token)
+            key, sub = jax.random.split(key)
+            return sample_token(logits[:, -1, :], sub, temp), cache, key
+
+        @jax.jit
+        def _install(full, new, slot):
+            return jax.tree_util.tree_map(
+                lambda a, b: a.at[slot].set(b.astype(a.dtype)), full, new)
+
+        self._prefill = _prefill
+        self._vstep = jax.jit(jax.vmap(_one))
+        self._install = _install
+        self._sample = jax.jit(sample_token)
+
+    # -- request API --------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               adapter_id: str | None = None, temperature: float = 0.0,
+               seed: int = 0, eos_id: int | None = None) -> int:
+        if adapter_id is not None:
+            self.registry.get(adapter_id)  # fail fast on unknown tenant
+        return self.scheduler.submit(
+            prompt, max_new_tokens, adapter_id=adapter_id,
+            temperature=temperature, seed=seed, eos_id=eos_id)
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive ticks until every submitted request has retired;
+        returns rid -> generated tokens (EOS kept, nothing after it)."""
+        while not self.scheduler.all_done():
+            self.step()
+        return self.scheduler.results()
+
+    def step(self) -> None:
+        """One engine tick: admit + prefill, then one decode launch."""
+        self._admit_and_prefill()
+        self._decode_tick()
+
+    def cache_stats(self) -> dict:
+        return (self.delta_cache.stats() if self.delta_cache is not None
+                else {})
+
+    # -- internals ----------------------------------------------------
+
+    def _personalize_slots(self, admitted) -> None:
+        rows: dict[int, jax.Array] = {}
+        need: list[tuple[int, object]] = []
+        for slot, req in admitted:
+            if req.adapter_id is None:
+                rows[slot] = self.theta
+            else:
+                need.append((slot, self.registry.get(req.adapter_id)))
+        if need:
+            uniq: dict[str, object] = {}
+            for _, spec in need:
+                uniq.setdefault(spec.adapter_id, spec)
+            specs = list(uniq.values())
+            buf, info = serve_apply.personalize(
+                self.theta, specs, self.plan, self.layout,
+                cache=self.delta_cache, backend=self.backend,
+                prng=self.prng, pin_misses=self.pin_on_miss)
+            self.stats["fused_launches"] += info["fused_launches"]
+            idx = {aid: i for i, aid in enumerate(uniq)}
+            for slot, spec in need:
+                rows[slot] = buf[idx[spec.adapter_id]]
+        if rows:
+            th = self._slot_thetas
+            for slot, row in rows.items():
+                th = th.at[slot].set(row)
+            self._slot_thetas = th
+            self.slot_params = self._unpack_slots(th)
+            self.stats["params_rebuilds"] += 1
+
+    def _admit_and_prefill(self) -> None:
+        admitted = self.scheduler.admit()
+        if not admitted:
+            return
+        self._personalize_slots(admitted)
+        for slot, req in admitted:
+            params_s = jax.tree_util.tree_map(
+                lambda x: x[slot], self.slot_params)
+            logits, cache1 = self._prefill(
+                params_s, jnp.asarray(req.prompt)[None, :])
+            self.slot_cache = self._install(self.slot_cache, cache1,
+                                            slot)
+            self.stats["prefills"] += 1
+            key = jax.random.PRNGKey(req.seed)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1, :], sub,
+                               jnp.float32(req.temperature))
+            self._slot_keys = self._slot_keys.at[slot].set(key)
+            self._slot_temps = self._slot_temps.at[slot].set(
+                req.temperature)
+            self._last_tokens = self._last_tokens.at[slot].set(tok)
+            self.scheduler.mark_prefilled(slot)
+            if self.scheduler.record_token(slot, int(tok[0, 0])):
+                self.scheduler.retire(slot)
+
+    def _decode_tick(self) -> None:
+        active = self.scheduler.active()
+        if not active:
+            return
+        tokens, self.slot_cache, self._slot_keys = self._vstep(
+            self.slot_params, self.slot_cache, self._last_tokens,
+            self._slot_keys, self._slot_temps)
+        self._last_tokens = tokens
+        self.stats["decode_steps"] += 1
+        toks = np.asarray(tokens[:, 0, 0])
+        for slot, _req in active:
+            if self.scheduler.record_token(slot, int(toks[slot])):
+                self.scheduler.retire(slot)
