@@ -180,6 +180,14 @@ class TrainConfig:
     steps: int = 100
     batch_size: int = 32
     seq_len: int = 128
+    grad_accum_steps: int = 1       # microbatches per optimizer step.
+                                    # N > 1 accumulates gradients in the
+                                    # STORED representation (the packed
+                                    # (q_packed,) buffer on the packed
+                                    # path -- never unpacked, optimizer
+                                    # state never widens) and performs
+                                    # ONE coordinate exchange per
+                                    # optimizer step instead of N.
     seed: int = 0
     log_update_norm: bool = True    # fused path: the update never
                                     # materializes, so this metric costs

@@ -36,7 +36,7 @@ the caller's in_specs (see launch/train.py).
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,96 @@ def split_coord_buffer(buf, d_packed: int):
     return buf[..., :d_packed], buf[..., d_packed:]
 
 
+class PendingExchange(NamedTuple):
+    """Token of an ISSUED coordinate exchange (the split-step overlap
+    primitive).  :func:`start_exchange` issues the one per-step
+    collective as soon as the projection output exists and returns this
+    token; :func:`finish_exchange` consumes it where the reconstruct-
+    apply launch needs the result.  Everything scheduled between the two
+    calls that does not touch the token is the OVERLAP WINDOW: the
+    collective is an independent dataflow node issued early in program
+    order, so XLA's async-collective scheduler can hide its latency
+    under the window's compute.  The payload layout (widened 'exact'
+    coords+norms, the sentinel rider scalar) is identical to the
+    synchronous helpers below -- bit-exactness is by construction, not
+    by contract.
+
+    ``kind`` is static: ``"pmean"`` (shared_basis), ``"all_gather"``
+    (independent_bases) or ``"local"`` (axis_name=None fallback: no
+    collective exists, the token just carries the local buffers so the
+    sketch/finish skeleton stays uniform)."""
+
+    kind: str       # "pmean" | "all_gather" | "local"
+    buf: Any        # the collective's output (or local coords)
+    sq: Any         # local row-norm passthrough (non-widened; else None)
+    d: int          # d_packed (split point of the widened buffer)
+    widened: bool
+    has_rider: bool
+    rider_local: Any = None   # the locally computed rider (sentinel
+                              # checks compare it against the exchanged
+                              # consensus value)
+
+
+def start_exchange(coords, sq, axis_name, *, kind: str = "pmean",
+                   widened: bool = False, rider=None) -> PendingExchange:
+    """Issue the single per-step coordinate collective and return its
+    :class:`PendingExchange` token (exchange-launch half of the split
+    step).  ``coords``/``sq`` are the LOCAL (d_packed,) projection
+    outputs; ``widened=True`` ('exact' normalization) puts the norms on
+    the wire, ``rider`` appends the one sentinel scalar.  With
+    ``axis_name=None`` (or ``kind="local"``) no collective is issued.
+
+    The wire payload construction is shared with (and bit-identical to)
+    :func:`shared_basis_packed_exchange` -- that synchronous helper is
+    now literally ``finish_exchange(start_exchange(...))``."""
+    d = coords.shape[-1]
+    if axis_name is None or kind == "local":
+        return PendingExchange("local", coords, sq, d, widened,
+                               rider is not None, rider)
+    if rider is None and not widened and kind == "pmean":
+        # fast path keeps the historical no-cast program bit-identical
+        buf = jax.lax.pmean(coords, axis_name=axis_name)
+        return PendingExchange(kind, buf, sq, d, False, False, None)
+    body = widen_coord_buffer(coords, sq) if widened \
+        else coords.astype(jnp.float32)
+    if rider is not None:
+        body = jnp.concatenate(
+            [body, jnp.reshape(rider, (1,)).astype(jnp.float32)], axis=-1)
+    if kind == "pmean":
+        buf = jax.lax.pmean(body, axis_name=axis_name)
+    elif kind == "all_gather":
+        buf = jax.lax.all_gather(body, axis_name=axis_name)
+    else:
+        raise ValueError(f"unknown exchange kind {kind!r}")
+    return PendingExchange(kind, buf, None if widened else sq, d,
+                           widened, rider is not None, rider)
+
+
+def finish_exchange(pending: PendingExchange):
+    """Consume a :class:`PendingExchange`: split the exchanged buffer
+    back into its ``(coords, sq, rider)`` triple (exchange-wait half of
+    the split step).  ``sq`` is the post-exchange norms under
+    ``widened=True``, the local passthrough otherwise (``None`` on the
+    non-widened all-gather, which never carried norms); ``rider`` is
+    ``None`` when no sentinel scalar rode the wire."""
+    kind, buf, sq, d = pending.kind, pending.buf, pending.sq, pending.d
+    if kind == "local":
+        return buf, sq, (pending.rider_local if pending.has_rider
+                         else None)
+    if not pending.has_rider:
+        if not pending.widened:
+            return buf, (sq if kind == "pmean" else None), None
+        coords, sq = split_coord_buffer(buf, d)
+        return coords, sq, None
+    if kind == "pmean":
+        if pending.widened:
+            return buf[..., :d], buf[..., d:2 * d], buf[..., 2 * d]
+        return buf[..., :d], sq, buf[..., d]
+    coords = buf[..., :d]
+    g_sq = buf[..., d:2 * d] if pending.widened else None
+    return coords, g_sq, buf[..., -1]
+
+
 def shared_basis_packed_exchange(coords, sq, axis_name, *,
                                  widened: bool = False, rider=None):
     """The packed sharedseed exchange: ONE pmean per step.
@@ -96,22 +186,12 @@ def shared_basis_packed_exchange(coords, sq, axis_name, *,
     workers agree).  When set, the return grows to
     ``(coords, sq, rider_mean)``; the collective count stays at ONE.
     """
+    pending = start_exchange(coords, sq, axis_name, kind="pmean",
+                             widened=widened, rider=rider)
+    out_coords, out_sq, out_rider = finish_exchange(pending)
     if rider is None:
-        if not widened:
-            return jax.lax.pmean(coords, axis_name=axis_name), sq
-        buf = jax.lax.pmean(widen_coord_buffer(coords, sq),
-                            axis_name=axis_name)
-        return split_coord_buffer(buf, coords.shape[-1])
-    d = coords.shape[-1]
-    body = widen_coord_buffer(coords, sq) if widened \
-        else coords.astype(jnp.float32)
-    buf = jax.lax.pmean(
-        jnp.concatenate(
-            [body, jnp.reshape(rider, (1,)).astype(jnp.float32)], axis=-1),
-        axis_name=axis_name)
-    if widened:
-        return buf[..., :d], buf[..., d:2 * d], buf[..., 2 * d]
-    return buf[..., :d], sq, buf[..., d]
+        return out_coords, out_sq
+    return out_coords, out_sq, out_rider
 
 
 def shared_basis_coords(
@@ -198,34 +278,48 @@ def independent_bases_coords(
     ``(coords, sq_or_None, riders)`` with ``riders`` the gathered (K,)
     checksum vector; still exactly one collective.
     """
+    pending = independent_bases_start_exchange(
+        transform, local_grads, state, axis_name, layout=layout,
+        prepacked=prepacked, prng=prng, return_norms=return_norms,
+        rider=rider)
+    g_coords, g_sq, riders = finish_exchange(pending)
+    if rider is None and not return_norms:
+        return g_coords
+    if rider is None:
+        return g_coords, g_sq
+    return g_coords, g_sq, riders
+
+
+def independent_bases_start_exchange(
+    transform: RandomBasesTransform,
+    local_grads,
+    state: RBDState,
+    axis_name,
+    *,
+    layout=None,
+    prepacked: bool = True,
+    prng="threefry",
+    return_norms: bool = False,
+    rider=None,
+) -> PendingExchange:
+    """Split-step half of :func:`independent_bases_coords`: project the
+    worker's prepacked gradient onto its OWN basis and ISSUE the one
+    (d_packed,)-payload all-gather, returning the
+    :class:`PendingExchange` token.  The K-worker reconstruct-apply only
+    needs the gathered result at :func:`finish_exchange` time, so
+    everything the caller schedules in between overlaps the gather."""
     from repro.core import projector
 
     plan = transform.plan
     layout = layout if layout is not None else plan.packed()
     my_seed = worker_seed(transform, state, axis_name)
-    if rider is None and not return_norms:
-        coords = projector.project_packed(
-            local_grads, plan, my_seed, backend=transform.backend,
-            layout=layout, prepacked=prepacked, prng=prng)
-        return jax.lax.all_gather(coords, axis_name=axis_name)
     proj = projector.project_packed(
         local_grads, plan, my_seed, backend=transform.backend,
         layout=layout, prepacked=prepacked, prng=prng,
         return_norms=return_norms)
     coords, sq = proj if return_norms else (proj, None)
-    body = widen_coord_buffer(coords, sq) if return_norms \
-        else coords.astype(jnp.float32)
-    if rider is None:
-        gathered = jax.lax.all_gather(body, axis_name=axis_name)
-        return split_coord_buffer(gathered, layout.d_packed)
-    buf = jnp.concatenate(
-        [body, jnp.reshape(rider, (1,)).astype(jnp.float32)], axis=-1)
-    gathered = jax.lax.all_gather(buf, axis_name=axis_name)
-    d = layout.d_packed
-    g_coords = gathered[..., :d]
-    g_sq = gathered[..., d:2 * d] if return_norms else None
-    riders = gathered[..., -1]
-    return g_coords, g_sq, riders
+    return start_exchange(coords, sq, axis_name, kind="all_gather",
+                          widened=return_norms, rider=rider)
 
 
 def independent_bases_update(

@@ -572,6 +572,27 @@ def replay_records(sub_opt, state, records):
     return new_state, n
 
 
+def skip_batches(data, n: int):
+    """Advance a data stream past ``n`` already-consumed batches.
+
+    Resume replay uses this instead of ``for _ in range(n): next(data)``:
+    the repo's counter-keyed synthetic streams
+    (:class:`repro.data.synthetic.CounterStream`) expose an O(1)
+    ``skip(n)`` -- batch i is a pure function of ``(seed, i)``, so
+    skipping IS advancing the counter.  Plain generators fall back to n
+    throwaway ``next()`` calls; either way the (n+1)-th batch of the
+    resumed stream equals the (n+1)-th batch of an uninterrupted one."""
+    if n <= 0:
+        return data
+    skip = getattr(data, "skip", None)
+    if callable(skip):
+        skip(n)
+        return data
+    for _ in range(n):
+        next(data)
+    return data
+
+
 def recover(cfg, sub_opt, template_state):
     """Restore the newest VALID snapshot under ``cfg.directory`` and
     replay the coordinate log forward.  ``template_state`` is the fresh
@@ -732,10 +753,16 @@ class ResilienceMonitor:
             self.snapshot_dir, jax.device_get(state), int(state.step)
         )
 
-    def observe(self, state, metrics) -> list:
+    def observe(self, state, metrics, *, step: Optional[int] = None) -> list:
         """Returns the new RecoveryEvents for this step (also kept on
-        ``self.events``)."""
-        step = int(state.step) - 1
+        ``self.events``).
+
+        ``step``: the host-known 0-based step index.  Passing it avoids
+        the ``int(state.step)`` device->host sync -- the loop's deferred
+        (log-boundary) observe path uses it, with ``state=None``, which
+        is valid whenever no replay log is configured (the log and the
+        sparse snapshots are the only consumers of ``state``)."""
+        step = int(state.step) - 1 if step is None else int(step)
         new: list = []
         reason = int(metrics.get("guard_reason", REASON_OK))
         lr_scale = float(metrics.get("guard_lr_scale", 1.0))
@@ -811,6 +838,7 @@ __all__ = [
     "ReplayLog",
     "replay_meta",
     "replay_records",
+    "skip_batches",
     "recover",
     "ResilienceConfig",
     "ResilienceMonitor",

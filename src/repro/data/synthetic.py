@@ -23,6 +23,36 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CounterStream:
+    """Iterator over a pure ``make(step)`` batch function.
+
+    Every stream in this module keys batch i purely on ``(seed, i)``
+    (``fold_in(PRNGKey(seed), i)``), so skipping batches IS advancing
+    the counter: ``skip(n)`` is O(1) and generates nothing.  Resume
+    replay (``repro.core.resilience.skip_batches`` /
+    ``repro.train.loop``) uses it instead of n throwaway ``next()``
+    calls; the n-th ``next()`` after a ``skip(m)`` returns exactly what
+    the (m+n)-th ``next()`` of a fresh stream returns."""
+
+    def __init__(self, make):
+        self._make = make
+        self.step = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        out = self._make(self.step)
+        self.step += 1
+        return out
+
+    def skip(self, n: int) -> "CounterStream":
+        if n < 0:
+            raise ValueError(f"cannot skip {n} < 0 batches")
+        self.step += int(n)
+        return self
+
+
 @functools.lru_cache(maxsize=8)
 def _class_templates(seed: int, n_classes: int, shape: tuple[int, ...]):
     rng = np.random.default_rng(seed)
@@ -47,13 +77,14 @@ def mixture_images(key, batch: int, *, shape=(28, 28, 1), n_classes=10,
 
 def mixture_dataset(seed: int, batch: int, *, shape=(28, 28, 1),
                     n_classes=10, noise: float = 1.0) -> Iterator:
-    """Infinite iterator of (x, y) batches."""
-    step = 0
-    while True:
+    """Infinite iterator of (x, y) batches (O(1) ``skip``-able)."""
+
+    def make(step):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-        yield mixture_images(key, batch, shape=shape, n_classes=n_classes,
-                             noise=noise, seed=seed)
-        step += 1
+        return mixture_images(key, batch, shape=shape,
+                              n_classes=n_classes, noise=noise, seed=seed)
+
+    return CounterStream(make)
 
 
 @functools.lru_cache(maxsize=8)
@@ -86,10 +117,12 @@ def token_stream(key, batch: int, seq_len: int, vocab: int, *,
 
 
 def lm_batches(seed: int, batch: int, seq_len: int, vocab: int) -> Iterator:
-    """Infinite iterator of {"tokens", "labels"} LM batches."""
-    step = 0
-    while True:
+    """Infinite iterator of {"tokens", "labels"} LM batches (O(1)
+    ``skip``-able)."""
+
+    def make(step):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
         toks = token_stream(key, batch, seq_len, vocab, seed=seed)
-        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-        step += 1
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return CounterStream(make)

@@ -73,37 +73,41 @@ def reconstruct_apply_flat(seed, scale, theta_flat, eta,
 
 
 def project_packed(seg_seeds, g_packed, layout, distribution: str = "normal",
-                   prng="threefry"):
-    """All compartments' (u, sq) in one megakernel launch (packed layout)."""
+                   prng="threefry", double_buffer=None):
+    """All compartments' (u, sq) in one megakernel launch (packed layout).
+    ``double_buffer``: two-slot VMEM tile rotation (None = auto: on for
+    the hw PRNG impl); bit-identical either way."""
     from repro.kernels import rbd_step
 
     return rbd_step.project_packed(
         seg_seeds, g_packed, layout, distribution, interpret=_INTERPRET,
-        prng=prng,
+        prng=prng, double_buffer=double_buffer,
     )
 
 
 def reconstruct_apply_packed(seg_seeds, scale_packed, theta_packed, layout,
-                             distribution: str = "normal", prng="threefry"):
+                             distribution: str = "normal", prng="threefry",
+                             double_buffer=None):
     """Fused theta' = theta - scale @ P for all compartments, one launch."""
     from repro.kernels import rbd_step
 
     return rbd_step.reconstruct_apply_packed(
         seg_seeds, scale_packed, theta_packed, layout, distribution,
-        interpret=_INTERPRET, prng=prng,
+        interpret=_INTERPRET, prng=prng, double_buffer=double_buffer,
     )
 
 
 def reconstruct_apply_packed_workers(wseg_seeds, scale_gathered,
                                      theta_packed, layout, k_workers: int,
                                      distribution: str = "normal",
-                                     prng="threefry"):
+                                     prng="threefry", double_buffer=None):
     """K-worker joint fused update (packed independent_bases), one launch."""
     from repro.kernels import rbd_step
 
     return rbd_step.reconstruct_apply_packed_workers(
         wseg_seeds, scale_gathered, theta_packed, layout, k_workers,
         distribution, interpret=_INTERPRET, prng=prng,
+        double_buffer=double_buffer,
     )
 
 

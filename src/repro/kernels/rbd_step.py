@@ -63,21 +63,59 @@ __all__ = ["project_packed", "reconstruct_apply_packed",
            "reconstruct_apply_packed_adapters"]
 
 
+def _buffered_tile(gen, gen_ref, t, n_tiles: int):
+    """Two-slot scratch rotation shared by both megakernels.
+
+    Warm-up (t == 0) generates tile 0 into slot 0; every step then
+    issues tile t+1's PRNG bit generation into the FREE slot before the
+    consuming contraction reads tile t from the other -- no data
+    dependency between the two, so Mosaic overlaps the VPU generation
+    with the MXU dot.  Generation is pure per tile (threefry counters
+    and the hw re-seed both key on the tile identity alone) and the
+    scratch holds UNMASKED bits -- masking happens at consumption with
+    tile t's own table entries -- so the pipelined order is
+    bit-identical to generate-then-consume."""
+    @pl.when(t == 0)
+    def _():
+        gen_ref[0] = gen(0)
+
+    # clamp: the last step's prefetch regenerates its own (dead) tile
+    # rather than reading the scalar tables out of bounds
+    nxt = jnp.minimum(t + 1, n_tiles - 1)
+    even = jax.lax.rem(t, 2) == 0
+
+    @pl.when(even)
+    def _():
+        gen_ref[1] = gen(nxt)
+
+    @pl.when(jnp.logical_not(even))
+    def _():
+        gen_ref[0] = gen(nxt)
+
+    return jnp.where(even, gen_ref[0], gen_ref[1])
+
+
 def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
-                    gblk_ref, ublk_ref, g_ref, u_ref, sq_ref, *,
-                    pos_block: int, distribution: str,
-                    prng_spec: rng.PrngSpec):
+                    gblk_ref, ublk_ref, g_ref, u_ref, sq_ref,
+                    *maybe_scratch, pos_block: int, n_tiles: int,
+                    distribution: str, prng_spec: rng.PrngSpec):
     t = pl.program_id(0)
     db = u_ref.shape[0]
     pb = pos_block
 
-    block = prng_spec.generate_tile(
-        seed_ref[t],
-        row0_ref[t].astype(jnp.uint32),
-        col0_ref[t].astype(jnp.uint32),
-        (db, pb),
-        distribution,
-    )
+    def gen(idx):
+        return prng_spec.generate_tile(
+            seed_ref[idx],
+            row0_ref[idx].astype(jnp.uint32),
+            col0_ref[idx].astype(jnp.uint32),
+            (db, pb),
+            distribution,
+        )
+
+    if maybe_scratch:        # double_buffer=True: scratch_shapes present
+        block = _buffered_tile(gen, maybe_scratch[0], t, n_tiles)
+    else:
+        block = gen(t)
     # mask positions past the segment's true size (the packed gradient is
     # zero there, so u is unaffected, but the row norms must exclude it)
     cols = jax.lax.broadcasted_iota(jnp.int32, (db, pb), 1) \
@@ -102,19 +140,25 @@ def _project_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
 
 
 def _recon_apply_kernel(seed_ref, row0_ref, col0_ref, q_ref, init_ref,
-                        gblk_ref, sblk_ref, s_ref, theta_ref, out_ref, *,
-                        dir_block: int, distribution: str,
-                        prng_spec: rng.PrngSpec):
+                        gblk_ref, sblk_ref, s_ref, theta_ref, out_ref,
+                        *maybe_scratch, dir_block: int, n_tiles: int,
+                        distribution: str, prng_spec: rng.PrngSpec):
     t = pl.program_id(0)
     pb = out_ref.shape[1]
 
-    block = prng_spec.generate_tile(
-        seed_ref[t],
-        row0_ref[t].astype(jnp.uint32),
-        col0_ref[t].astype(jnp.uint32),
-        (dir_block, pb),
-        distribution,
-    )
+    def gen(idx):
+        return prng_spec.generate_tile(
+            seed_ref[idx],
+            row0_ref[idx].astype(jnp.uint32),
+            col0_ref[idx].astype(jnp.uint32),
+            (dir_block, pb),
+            distribution,
+        )
+
+    if maybe_scratch:        # double_buffer=True: scratch_shapes present
+        block = _buffered_tile(gen, maybe_scratch[0], t, n_tiles)
+    else:
+        block = gen(t)
     # mask positions past the segment's true size so padding slots of a
     # packed-RESIDENT theta keep their (zero) value in-stream -- no
     # separate masking pass over the parameter buffer exists
@@ -178,9 +222,19 @@ def _tile_seeds(seg_seeds, tiles_seg):
     return jnp.take(seg_seeds, jnp.asarray(tiles_seg), axis=0)
 
 
+def _resolve_double_buffer(double_buffer, prng_spec: rng.PrngSpec) -> bool:
+    """``None`` = auto: on for the hw PRNG (its per-tile re-seed +
+    generate is the latency the rotation exists to hide), off for the
+    counter-based impls.  Either setting is bit-identical."""
+    if double_buffer is None:
+        return prng_spec.impl == "hw"
+    return bool(double_buffer)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("layout", "distribution", "interpret", "prng"),
+    static_argnames=("layout", "distribution", "interpret", "prng",
+                     "double_buffer"),
 )
 def project_packed(
     seg_seeds,
@@ -190,6 +244,7 @@ def project_packed(
     *,
     interpret: bool = True,
     prng="threefry",
+    double_buffer=None,
 ):
     """One launch: raw projections + squared row norms for ALL segments.
 
@@ -198,10 +253,15 @@ def project_packed(
     f32 in packed coordinate layout (padding slots undefined -- mask with
     ``layout.coord_valid``).  ``prng`` selects the in-kernel generation
     backend (``core.rng.PrngSpec`` impl name or instance).
+    ``double_buffer`` rotates tile generation through a two-slot VMEM
+    scratch (2x one (DB, PB) tile) so tile t+1's PRNG bits are issued
+    while tile t's MXU contraction runs -- bit-identical output, default
+    on for the hw PRNG impl (see :func:`_buffered_tile`).
     """
     prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     n_tiles = layout.n_proj_tiles
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
     g = g_packed.astype(jnp.float32).reshape(1, layout.q_packed)
     seeds = _tile_seeds(seg_seeds, layout.pt_seg)
 
@@ -218,11 +278,13 @@ def project_packed(
             pl.BlockSpec((db, 1), lambda t, se, r0, c0, q, ini, gb, ub:
                          (ub[t], 0)),
         ],
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
     )
     u, sq = pl.pallas_call(
         functools.partial(
-            _project_kernel, pos_block=pb, distribution=distribution,
-            prng_spec=prng_spec),
+            _project_kernel, pos_block=pb, n_tiles=n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((layout.d_packed, 1), jnp.float32),
@@ -244,7 +306,8 @@ def project_packed(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("layout", "distribution", "interpret", "prng"),
+    static_argnames=("layout", "distribution", "interpret", "prng",
+                     "double_buffer"),
 )
 def reconstruct_apply_packed(
     seg_seeds,
@@ -255,6 +318,7 @@ def reconstruct_apply_packed(
     *,
     interpret: bool = True,
     prng="threefry",
+    double_buffer=None,
 ):
     """One launch: theta' = theta - scale @ P for ALL segments, fused.
 
@@ -267,11 +331,13 @@ def reconstruct_apply_packed(
     (q_packed,) f32 packed parameter buffer; the update never exists in
     HBM, only the new parameters are written.  With a tile-keyed ``prng``
     impl each tile regenerates the exact bits the projection launch drew
-    for it (same (seed, row0, col0) identity).
+    for it (same (seed, row0, col0) identity).  ``double_buffer``: see
+    :func:`project_packed` -- same rotation, same bit-exactness.
     """
     prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     n_tiles = layout.n_recon_tiles
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
     s = scale_packed.astype(jnp.float32).reshape(1, layout.d_packed)
     theta = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
     seeds = _tile_seeds(seg_seeds, layout.rt_seg)
@@ -287,11 +353,13 @@ def reconstruct_apply_packed(
         ],
         out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
                                (0, gb[t])),
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
     )
     out = pl.pallas_call(
         functools.partial(
-            _recon_apply_kernel, dir_block=db, distribution=distribution,
-            prng_spec=prng_spec),
+            _recon_apply_kernel, dir_block=db, n_tiles=n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
         interpret=interpret,
@@ -312,7 +380,7 @@ def reconstruct_apply_packed(
 @functools.partial(
     jax.jit,
     static_argnames=("layout", "k_workers", "distribution", "interpret",
-                     "prng"),
+                     "prng", "double_buffer"),
 )
 def reconstruct_apply_packed_workers(
     wseg_seeds,
@@ -324,6 +392,7 @@ def reconstruct_apply_packed_workers(
     *,
     interpret: bool = True,
     prng="threefry",
+    double_buffer=None,
 ):
     """One launch: theta' = theta - sum_k scale_k @ P_k for ALL segments
     of ALL K workers' bases, fused (packed ``independent_bases`` mode).
@@ -349,6 +418,7 @@ def reconstruct_apply_packed_workers(
     prng_spec = rng.get_prng_spec(prng)
     pb, db = layout.pos_block, layout.dir_block
     wt = layout.worker_tables(k_workers)
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
     s = scale_gathered.astype(jnp.float32).reshape(
         1, k_workers * layout.d_packed)
     theta = theta_packed.astype(jnp.float32).reshape(1, layout.q_packed)
@@ -365,11 +435,13 @@ def reconstruct_apply_packed_workers(
         ],
         out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
                                (0, gb[t])),
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
     )
     out = pl.pallas_call(
         functools.partial(
-            _recon_apply_kernel, dir_block=db, distribution=distribution,
-            prng_spec=prng_spec),
+            _recon_apply_kernel, dir_block=db, n_tiles=wt.n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, layout.q_packed), jnp.float32),
         interpret=interpret,

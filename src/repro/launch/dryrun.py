@@ -73,7 +73,8 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                        packed: str = "auto",
                        normalization: str = "rsqrt_dim",
                        prng_impl: str = "threefry",
-                       guard: bool = False):
+                       guard: bool = False,
+                       grad_accum_steps: int = 1):
     """(step_fn, arg_specs) for the train/prefill kinds.
 
     mode='sharedseed' wraps the step in shard_map (manual over the batch
@@ -93,10 +94,21 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"), mode=rbd_mode,
                         packed=packed, normalization=normalization,
                         prng_impl=prng_impl)
-    tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125)
+    n_accum = max(1, int(grad_accum_steps))
+    if mode != "sharedseed" and n_accum > 1:
+        print("      grad accumulation: only the sharedseed step stacks "
+              "microbatches; ignoring --grad-accum-steps here")
+        n_accum = 1
+    tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=0.125,
+                       grad_accum_steps=n_accum)
     transform = train_step_lib.make_transform(model, rbd_cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     batch_shape = model.batch_specs(shape)
+    if n_accum > 1:
+        # the accumulating step scans a leading (N,) microbatch axis
+        batch_shape = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_accum,) + s.shape, s.dtype),
+            batch_shape)
 
     resilience = None
     if guard:
@@ -118,11 +130,11 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
             model, tcfg, transform, axis_name=tuple(baxes),
             k_workers=k_workers, return_optimizer=True,
             resilience=resilience)
-        _print_update_path(sub_opt)
+        _print_update_path(sub_opt, n_accum)
         state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         repl_state = jax.tree_util.tree_map(lambda _: P(), state_shape)
-        batch_spec = jax.tree_util.tree_map(lambda _: P(baxes),
-                                            batch_shape)
+        bspec = P(None, baxes) if n_accum > 1 else P(baxes)
+        batch_spec = jax.tree_util.tree_map(lambda _: bspec, batch_shape)
         metrics_spec = {k: P() for k in
                         ("ce", "aux", "loss", "update_norm")}
         if sub_opt.guard is not None:
@@ -145,7 +157,7 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     return step_fn, (state_shape, batch_shape)
 
 
-def _print_update_path(sub_opt):
+def _print_update_path(sub_opt, n_accum: int = 1):
     ep = sub_opt.plan_execution()
     fused = "fused" if ep.fused else "UNFUSED"
     print(f"      update path [{fused}]: {ep.strategy} -- {ep.reason}")
@@ -157,6 +169,34 @@ def _print_update_path(sub_opt):
               f"sentinel_every={sub_opt.sentinel_every} "
               f"capture={'on' if sub_opt.capture_coords else 'off'} -- "
               "guarded step keeps two launches and one collective")
+    if sub_opt.transform is not None and ep.strategy == "fused_packed":
+        # full exchange schedule: what crosses the wire, where it is
+        # issued and awaited, and how accumulation amortizes it --
+        # misrouted configs diagnose here without a TPU
+        plan = sub_opt.transform.plan
+        d = plan.packed().d_packed
+        exact = plan.normalization == "exact"
+        kind = "all_gather" if sub_opt.joint_subspace else "pmean"
+        body = (f"(2*{d},) coords+row-norms (widened 'exact')"
+                if exact else f"({d},) coords")
+        riders = 1 if sub_opt.sentinel_every else 0
+        if ep.overlap_exchange == "issue_early":
+            issue = "at sketch, right after the projection launch"
+            wait = "at apply, just before the reconstruct-apply launch"
+        elif ep.overlap_exchange == "sync":
+            issue = "at finish (synchronous reference schedule)"
+            wait = "immediately after issue"
+        else:
+            issue = wait = "n/a (no collective in the program)"
+        print(f"      exchange schedule [{ep.overlap_exchange}]: "
+              f"{ep.overlap_reason}")
+        print(f"        payload: one {kind} of {body} "
+              f"+ {riders} rider scalar(s)")
+        print(f"        issue point: {issue}")
+        print(f"        wait point:  {wait}")
+        print(f"        accumulation: {n_accum} microbatch(es) per "
+              f"optimizer step -> 1 exchange per optimizer step"
+              + (f" (not {n_accum})" if n_accum > 1 else ""))
 
 
 def build_prefill_inputs(model, shape: InputShape):
@@ -235,6 +275,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "rbd", rbd_mode: str = "shared_basis",
             packed: str = "auto", normalization: str = "rsqrt_dim",
             prng_impl: str = "threefry", guard: bool = False,
+            grad_accum_steps: int = 1,
             out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
@@ -260,7 +301,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                             packed=packed,
                                             normalization=normalization,
                                             prng_impl=prng_impl,
-                                            guard=guard)
+                                            guard=guard,
+                                            grad_accum_steps=grad_accum_steps)
     elif shape.kind == "prefill":
         fn, args_shape = build_prefill_inputs(model, shape)
     else:
@@ -366,6 +408,11 @@ def main():
                     help="compile the non-finite-guarded step and print "
                          "the resilience plan (the guard must keep the "
                          "packed step at two launches + one collective)")
+    ap.add_argument("--grad-accum-steps", type=int, default=1,
+                    help="microbatches per optimizer step (sharedseed): "
+                         "the printed exchange schedule shows the "
+                         "accumulation factor and the 1-exchange-per-"
+                         "optimizer-step amortization")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="reports/dryrun")
     args = ap.parse_args()
@@ -387,6 +434,7 @@ def main():
                         rbd_mode=args.rbd_mode, packed=args.packed,
                         normalization=args.normalization,
                         prng_impl=args.prng_impl, guard=args.guard,
+                        grad_accum_steps=args.grad_accum_steps,
                         out_dir=args.out)
             if "skipped" in r:
                 print(f"SKIP  {arch:24s} {shape:12s} {r['skipped'][:50]}")

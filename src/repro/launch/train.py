@@ -48,6 +48,12 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum-steps", type=int, default=1,
+                    help="microbatches per optimizer step; gradients "
+                         "accumulate on the packed (q_packed,) buffer "
+                         "(never unpacked, optimizer state never widens) "
+                         "and the step performs ONE coordinate exchange "
+                         "per optimizer step instead of N")
     ap.add_argument("--lr", type=float, default=0.125)
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "momentum", "adam"],
@@ -136,7 +142,8 @@ def main(argv=None):
     return run_training(
         cfg, mode=args.mode, rbd_mode=args.rbd_mode, data=args.data,
         model_axis=args.model, steps=args.steps, batch=args.batch,
-        seq=args.seq, lr=args.lr, rbd_dim=args.rbd_dim,
+        seq=args.seq, grad_accum_steps=args.grad_accum_steps,
+        lr=args.lr, rbd_dim=args.rbd_dim,
         normalization=args.normalization,
         rbd_backend=args.rbd_backend, packed=args.packed,
         prng_impl=args.prng_impl,
@@ -150,6 +157,7 @@ def main(argv=None):
 
 def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  data=1, model_axis=1, steps=10, batch=8, seq=128,
+                 grad_accum_steps=1,
                  lr=0.125, rbd_dim=1024, normalization="rsqrt_dim",
                  rbd_backend="jnp",
                  packed="auto", prng_impl="threefry",
@@ -176,6 +184,7 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                         prng_impl=prng_impl)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,
                       steps=steps, batch_size=batch, seq_len=seq,
+                      grad_accum_steps=grad_accum_steps,
                       optimizer=optimizer, weight_decay=weight_decay,
                       momentum_beta=momentum_beta, nesterov=nesterov,
                       adam_b1=adam_b1, adam_b2=adam_b2, adam_eps=adam_eps)
@@ -199,10 +208,17 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
         model_sharded=model_sharded, k_workers=k_workers,
         return_optimizer=True, resilience=resilience)
     eplan = sub_opt.plan_execution()
+    n_accum = max(1, int(grad_accum_steps))
     print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
     if rbd_cfg.enabled:
         print(f"prng impl: {eplan.prng_impl} -- {eplan.prng_reason}",
               flush=True)
+        print(f"exchange schedule: {eplan.overlap_exchange} -- "
+              f"{eplan.overlap_reason}", flush=True)
+        if n_accum > 1:
+            print(f"grad accumulation: {n_accum} microbatches/optimizer "
+                  f"step, 1 exchange per optimizer step (not {n_accum})",
+                  flush=True)
     if resilience is not None and resilience.any_enabled:
         from repro.core import resilience as res_lib
 
@@ -261,7 +277,11 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
             # 'model' axis stays automatic (XLA tensor parallelism).
             from repro.launch.mesh import shard_map_compat
 
-            batch_spec = {"tokens": P("data"), "labels": P("data")}
+            # with accumulation the leaves carry a leading (N,)
+            # microbatch axis; the per-example axis (data-sharded)
+            # moves to position 1
+            bspec = (P(None, "data") if n_accum > 1 else P("data"))
+            batch_spec = {"tokens": bspec, "labels": bspec}
             repl = jax.tree_util.tree_map(lambda _: P(), state_specs,
                                           is_leaf=lambda x: isinstance(x, P))
             # post-exchange metrics are worker-invariant: replicate them
@@ -319,14 +339,23 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
             monitor = res_lib.ResilienceMonitor(resilience, sub_opt)
 
         stream = synthetic.lm_batches(tcfg.seed, batch, seq, cfg.vocab)
-        for _ in range(start):
-            next(stream)  # keep the data stream step-aligned on resume
+        # keep the data stream step-aligned on resume: each optimizer
+        # step consumed n_accum batches (O(1) counter skip, no
+        # throwaway generation)
+        stream.skip(start * n_accum)
+
+        def fetch():
+            if n_accum == 1:
+                return next(stream)
+            return steplib.stack_microbatches(
+                [next(stream) for _ in range(n_accum)])
+
         t0 = time.time()
         for i in range(start, steps):
             if monitor is not None and monitor.should_kill(i):
                 raise res_lib.SimulatedWorkerKill(
                     f"fault plan kills step {i}")
-            b = next(stream)
+            b = fetch()
             state, metrics = step_fn(state, b)
             if monitor is not None:
                 events = monitor.observe(state, metrics)

@@ -99,6 +99,12 @@ class ExecutionPlan(NamedTuple):
                                   # degradation: hw off-TPU -> emulated,
                                   # tile-keyed on per-leaf -> threefry)
     prng_reason: str = ""         # why that impl was selected
+    overlap_exchange: str = "none"  # issue_early | sync | none -- where
+                                    # the one coordinate collective is
+                                    # issued relative to the split step
+                                    # (sketch-time vs finish-time vs no
+                                    # collective at all)
+    overlap_reason: str = ""        # why that schedule was selected
 
     @property
     def fused(self) -> bool:
@@ -117,7 +123,8 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     model_sharded: bool = False,
                     k_workers: int = 1,
                     prng_impl: str = "threefry",
-                    hw_prng_available: bool = False) -> ExecutionPlan:
+                    hw_prng_available: bool = False,
+                    overlap: str = "auto") -> ExecutionPlan:
     """The one fuse/state-placement decision point (pure function of the
     config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
 
@@ -137,6 +144,19 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     TPU, non-interpret kernels).  The effective impl is resolved per
     strategy by ``core.rng.resolve_prng_impl`` and lands on the returned
     plan's ``prng_impl``/``prng_reason`` fields.
+
+    ``overlap``: requested exchange schedule for the split packed step
+    (``"auto"`` | ``"off"``).  The resolved schedule lands on the plan's
+    ``overlap_exchange``/``overlap_reason`` fields: ``issue_early``
+    (the one pmean/all-gather is issued at sketch time, right after the
+    projection launch, and awaited only where the reconstruct-apply
+    needs it -- the async-friendly ``jax.lax`` formulation, chosen
+    whenever a real mesh axis exists because it keeps exactly ONE
+    collective site while letting XLA hide its latency), ``sync`` (the
+    explicit synchronous reference path, ``overlap="off"``), or
+    ``none`` with a fallback reason (``axis_name=None``: no collective
+    exists; sequential K-worker simulation: the gather is local
+    compute).
     """
     del optimizer  # all optimizers have coordinate-space state now
 
@@ -226,7 +246,34 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     impl, why = rng.resolve_prng_impl(
         prng_impl, strategy=eplan.strategy, backend=backend,
         hw_available=hw_prng_available, rbd_enabled=rbd_enabled)
-    return eplan._replace(prng_impl=impl, prng_reason=why)
+    joint_sim = (mode == "independent_bases" and axis_name is None
+                 and k_workers > 1)
+    if eplan.strategy != "fused_packed":
+        ov, ov_why = "none", (
+            f"no packed split step: the {eplan.strategy} strategy has "
+            "no single coordinate collective to overlap")
+    elif axis_name is None and joint_sim:
+        ov, ov_why = "none", (
+            "sequential K-worker simulation: the 'gather' is local "
+            "lax.map compute, there is no collective latency to hide")
+    elif axis_name is None:
+        ov, ov_why = "none", (
+            "axis_name=None: no collective exists; sketch and finish "
+            "run back-to-back")
+    elif overlap == "off":
+        ov, ov_why = "sync", (
+            "overlap disabled: the collective is issued at finish time "
+            "(synchronous reference path, bit-identical payload)")
+    else:
+        kind = ("all-gather" if mode == "independent_bases" else "pmean")
+        ov, ov_why = "issue_early", (
+            f"one {kind} issued at sketch (right after the projection "
+            "launch), awaited at apply (just before the reconstruct-"
+            "apply launch); the window between the split halves "
+            "overlaps the collective under XLA's async scheduler -- "
+            "still exactly ONE collective site")
+    return eplan._replace(prng_impl=impl, prng_reason=why,
+                          overlap_exchange=ov, overlap_reason=ov_why)
 
 
 class _Aux(NamedTuple):
@@ -249,6 +296,26 @@ def _all_finite(*arrays):
         if a is not None:
             ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(a)))
     return ok
+
+
+class StepTicket(NamedTuple):
+    """In-flight state of a SPLIT packed step, between
+    :meth:`SubspaceOptimizer.step_sketch` and
+    :meth:`SubspaceOptimizer.step_finish`.  Under the ``issue_early``
+    schedule ``pending`` holds the already-issued
+    ``core.distributed.PendingExchange`` (the collective is in flight);
+    under the ``sync`` reference schedule ``pending`` is None and the
+    LOCAL projection outputs ride on ``coords``/``sq`` until finish
+    issues the collective itself.  Everything the caller computes
+    between the two halves that does not touch this ticket is the
+    overlap window."""
+
+    pending: Any = None   # PendingExchange, or None on the sync path
+    coords: Any = None    # local (d_packed,) projection (sync path)
+    sq: Any = None        # local squared row norms (sync path)
+    rider: Any = None     # locally computed sentinel rider scalar
+    local_ok: Any = ()    # pre-exchange finite check (guard on,
+                          # shared_basis only; () = not computed)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -283,6 +350,12 @@ class SubspaceOptimizer:
                                       # with axis_name=None runs the
                                       # sequential simulation)
     model_sharded: bool = False       # params sharded over a model axis
+    overlap: str = "auto"             # exchange schedule request for the
+                                      # split packed step: "auto" issues
+                                      # the collective at sketch time
+                                      # (overlapped), "off" keeps the
+                                      # synchronous finish-time issue
+                                      # (bit-identical reference path)
     log_update_norm: bool = True
     params_template: Any = None       # pytree of shapes/dtypes; required
                                       # for the packed-resident strategy
@@ -341,6 +414,7 @@ class SubspaceOptimizer:
             k_workers=self.k_workers,
             prng_impl=requested,
             hw_prng_available=hw_ok,
+            overlap=self.overlap,
         )
 
     @property
@@ -433,11 +507,73 @@ class SubspaceOptimizer:
             return self._full_space_step(params, grads, rbd_state,
                                          opt_state)
         if eplan.strategy == "fused_packed":
-            return self._packed_step(params, grads, rbd_state, opt_state,
-                                     eplan, guard_state)
+            ticket = self._packed_sketch(params, grads, rbd_state,
+                                         opt_state, eplan)
+            return self._packed_finish(params, ticket, rbd_state,
+                                       opt_state, eplan, guard_state)
         return self._per_leaf_step(params, grads, rbd_state, opt_state,
                                    fused=(eplan.strategy
                                           == "fused_per_leaf"))
+
+    def step_sketch(self, params, grads, rbd_state, opt_state
+                    ) -> StepTicket:
+        """First half of the SPLIT packed step: project the gradient
+        (launch 1) and -- under the ``issue_early`` schedule -- issue
+        the one coordinate collective immediately, returning the
+        in-flight :class:`StepTicket`.  Everything the caller computes
+        between this and :meth:`step_finish` that does not touch the
+        ticket (the next microbatch's loss-independent work, metric
+        reductions) forms the overlap window the collective hides
+        under.  ``step() == step_finish(step_sketch())`` by
+        construction, so the split is bit-exact against the monolithic
+        step."""
+        eplan = self.plan_execution()
+        if eplan.strategy != "fused_packed":
+            raise ValueError(
+                "step_sketch/step_finish split the packed two-launch "
+                f"step; this config plans {eplan.strategy!r} -- "
+                + eplan.reason)
+        return self._packed_sketch(params, grads, rbd_state, opt_state,
+                                   eplan)
+
+    def step_finish(self, params, ticket: StepTicket, rbd_state,
+                    opt_state, guard_state=()):
+        """Second half of the split packed step: await (or, on the
+        ``sync`` reference schedule, issue-and-await) the coordinate
+        collective, then run the post-exchange chain -- guard /
+        sentinel / fault hooks, coordinate-space optimizer, and the
+        reconstruct-apply launch (launch 2).  Same return convention as
+        :meth:`step`."""
+        eplan = self.plan_execution()
+        if eplan.strategy != "fused_packed":
+            raise ValueError(
+                "step_sketch/step_finish split the packed two-launch "
+                f"step; this config plans {eplan.strategy!r} -- "
+                + eplan.reason)
+        return self._packed_finish(params, ticket, rbd_state, opt_state,
+                                   eplan, guard_state)
+
+    # -- microbatch accumulation ---------------------------------------------
+
+    def accumulate_grads(self, acc, grads):
+        """Fold one microbatch gradient into the running accumulator --
+        in the STORED representation, so on the packed path this is ONE
+        fused (q_packed,) add: the gradient is never unpacked and the
+        optimizer state never widens.  ``acc=None`` starts the sum."""
+        if acc is None:
+            return grads
+        return jax.tree_util.tree_map(jnp.add, acc, grads)
+
+    def finalize_accum(self, acc, n_micro: int):
+        """Mean gradient of ``n_micro`` accumulated microbatches.  The
+        projection is linear, so ONE exchange on this mean equals the
+        mean of the per-microbatch exchanges -- ``step`` on the result
+        performs exactly one collective per optimizer step instead of
+        one per microbatch."""
+        if n_micro == 1:
+            return acc
+        inv = 1.0 / float(n_micro)
+        return jax.tree_util.tree_map(lambda g: g * inv, acc)
 
     def apply_exchanged(self, params, coords, sq, rbd_state, opt_state,
                         guard_state=(), reason=None):
@@ -526,65 +662,146 @@ class SubspaceOptimizer:
             diverged=diverged,
         )
 
-    def _packed_step(self, params, grads, rbd_state, opt_state, eplan,
-                     guard_state=()):
-        """Two launches: project || (d,)-state optimizer || reconstruct-
-        apply.  With ``axis_name`` set, ONE pmean of the packed (d,)
-        coordinate buffer is the entire per-step exchange -- for sgd,
-        momentum AND adam (the state update is deterministic on the
-        post-pmean coordinates, so worker states stay replicated).
-        Under 'exact' normalization the one pmean WIDENS to the
-        concatenated (2d,) coords+norms buffer (the row norms come out
-        of the projection launch as its second output), so the exchange
-        count never changes with the normalization.
+    def _packed_sketch(self, params, grads, rbd_state, opt_state,
+                       eplan) -> StepTicket:
+        """Sketch half of the packed step (launch 1 + exchange-launch).
 
-        Resilience hooks (all static, OFF by default): the non-finite
-        guard reason-codes the step from the (d,)-sized buffers (a bad
-        gradient element provably poisons the projected coordinates, so
-        no D-sized check is ever needed); the divergence sentinel's
-        checksum RIDES the existing exchange as one extra scalar; fault
-        injection corrupts the received payload post-exchange.  None of
-        them adds a launch or a collective."""
-        if self.joint_subspace:
-            return self._packed_independent_step(params, grads, rbd_state,
-                                                 opt_state, eplan,
-                                                 guard_state)
+        shared_basis: project on the shared basis, then -- on the
+        ``issue_early`` schedule -- ONE pmean of the packed (d,)
+        coordinate buffer is issued immediately (widened to the
+        concatenated (2d,) coords+norms buffer under 'exact'
+        normalization, the sentinel checksum riding as one extra
+        scalar).  independent_bases (paper Algorithm 1): project onto
+        THIS worker's basis (seed folded with the worker index) and
+        issue the ONE all-gather into the (K, d_packed) joint
+        coordinate buffer.  With ``axis_name=None`` the K-worker
+        simulation runs its lax.map "gather" here (local compute, not
+        vmap: the scan body is the unbatched per-worker projection, so
+        the simulation stays bit-exact against the shard_map exchange);
+        the single-process shared path wraps its local buffers in a
+        no-op token.  On the ``sync`` reference schedule nothing is
+        issued: the local projection outputs ride the ticket and
+        :meth:`_packed_finish` performs the identical exchange there."""
+        from repro.core import distributed
+
         t = self.transform
         plan = t.plan
         layout = plan.packed()
         prng = eplan.prng_impl
+        exact = (plan.normalization == "exact")
         seed = t.step_seed(rbd_state.step)
-        coords, sq = projector.project_packed(
-            grads, plan, seed, backend=t.backend, layout=layout,
-            return_norms=True, prepacked=True, prng=prng)
-        local_ok = (_all_finite(coords, sq) if self.guard is not None
-                    else None)
-        rider = rider_out = None
+        rider = None
         if self.sentinel_every:
             from repro.core import resilience
 
             rider = resilience.sentinel_rider(opt_state, params)
-        if self.axis_name is not None:
-            from repro.core import distributed
+        if self.joint_subspace:
+            if self.axis_name is None:
+                wseeds = projector.worker_base_seeds(seed, self.k_workers)
+                gathered = jax.lax.map(
+                    lambda sg: projector.project_packed(
+                        sg[1], plan, sg[0], backend=t.backend,
+                        layout=layout, prepacked=True, prng=prng,
+                        return_norms=exact),
+                    (wseeds, grads))
+                gathered_sq = None
+                if exact:
+                    gathered, gathered_sq = gathered
+                pending = distributed.PendingExchange(
+                    "local", gathered, gathered_sq, layout.d_packed,
+                    exact, rider is not None, rider)
+                return StepTicket(pending=pending, rider=rider)
+            if eplan.overlap_exchange == "issue_early":
+                pending = distributed.independent_bases_start_exchange(
+                    t, grads, rbd_state, self.axis_name, layout=layout,
+                    prng=prng, return_norms=exact, rider=rider)
+                return StepTicket(pending=pending, rider=rider)
+            my_seed = distributed.worker_seed(t, rbd_state,
+                                              self.axis_name)
+            proj = projector.project_packed(
+                grads, plan, my_seed, backend=t.backend, layout=layout,
+                prepacked=True, prng=prng, return_norms=exact)
+            coords, sq = proj if exact else (proj, None)
+            return StepTicket(coords=coords, sq=sq, rider=rider)
+        coords, sq = projector.project_packed(
+            grads, plan, seed, backend=t.backend, layout=layout,
+            return_norms=True, prepacked=True, prng=prng)
+        local_ok = (_all_finite(coords, sq) if self.guard is not None
+                    else ())
+        if self.axis_name is not None and eplan.overlap_exchange == "sync":
+            return StepTicket(coords=coords, sq=sq, rider=rider,
+                              local_ok=local_ok)
+        pending = distributed.start_exchange(
+            coords, sq, self.axis_name, kind="pmean", widened=exact,
+            rider=rider)
+        return StepTicket(pending=pending, rider=rider,
+                          local_ok=local_ok)
 
-            out = distributed.shared_basis_packed_exchange(
-                coords, sq, self.axis_name,
-                widened=(plan.normalization == "exact"), rider=rider)
-            if rider is None:
-                coords, sq = out
-            else:
-                coords, sq, rider_out = out
-        elif rider is not None:
-            rider_out = rider   # single process: trivially in agreement
+    def _packed_finish(self, params, ticket, rbd_state, opt_state, eplan,
+                       guard_state=()):
+        """Finish half of the packed step (exchange-wait + launch 2).
+
+        Awaits the in-flight collective (or issues it first on the
+        ``sync`` reference schedule -- identical payload, identical
+        primitive, just finish-time program order), then runs the
+        unchanged post-exchange chain: fault injection on the received
+        payload, the non-finite guard's reason code computed from the
+        (d,)-sized buffers, the divergence-sentinel verdict from the
+        rider scalar, the coordinate-space optimizer, and the
+        reconstruct-apply launch.  The step stays exactly two launches
+        and one collective regardless of the schedule; resilience hooks
+        add neither."""
+        from repro.core import distributed
+
+        t = self.transform
+        plan = t.plan
+        exact = (plan.normalization == "exact")
+        guard_on = self.guard is not None
+        joint = self.joint_subspace
+        pending = ticket.pending
+        if pending is None:
+            # sync reference schedule: the one collective issues here
+            pending = distributed.start_exchange(
+                ticket.coords, ticket.sq, self.axis_name,
+                kind=("all_gather" if joint else "pmean"),
+                widened=exact, rider=ticket.rider)
+        coords, sq, rider_out = distributed.finish_exchange(pending)
+        sim = joint and pending.kind == "local"
+        widx = (jax.lax.axis_index(self.axis_name)
+                if self.axis_name is not None else 0)
+        if joint:
+            if self.axis_name is not None \
+                    and coords.shape[0] != self.k_workers:
+                raise ValueError(
+                    f"k_workers={self.k_workers} does not match the "
+                    f"'{self.axis_name}' mesh axis size "
+                    f"{coords.shape[0]}")
+            if sim and ticket.rider is not None:
+                # sequential simulation: K identical copies of the one
+                # locally computed checksum (trivially in agreement)
+                rider_out = jnp.broadcast_to(ticket.rider,
+                                             (self.k_workers,))
+            local_ok = None
+            if guard_on:
+                if sim:
+                    local_ok = _all_finite(coords, sq)
+                else:
+                    # own-row check only LABELS the reason (LOCAL vs
+                    # EXCHANGE); the accept/reject decision comes from
+                    # the whole gathered buffer below, which every
+                    # worker sees identically -- so the guarded update
+                    # stays replicated
+                    local_ok = _all_finite(
+                        coords[widx], None if sq is None else sq[widx])
+        else:
+            local_ok = ticket.local_ok if guard_on else None
         if self.fault_plan is not None:
             from repro.core import resilience
 
-            widx = (jax.lax.axis_index(self.axis_name)
-                    if self.axis_name is not None else 0)
             coords = resilience.inject_collective_faults(
                 self.fault_plan, rbd_state.step, coords, widx)
         reason = None
-        if self.guard is not None:
+        if guard_on:
             from repro.core import resilience
 
             reason = jnp.where(
@@ -598,7 +815,8 @@ class SubspaceOptimizer:
             from repro.core import resilience
 
             diverged = resilience.sentinel_check(
-                rider, rider_out, rbd_state.step, self.sentinel_every)
+                ticket.rider, rider_out, rbd_state.step,
+                self.sentinel_every)
         new_params, new_rbd, new_opt, new_guard = self._apply_exchanged(
             params, coords, sq, rbd_state, opt_state, guard_state, reason,
             eplan)
@@ -608,119 +826,6 @@ class SubspaceOptimizer:
         return (new_params, new_rbd, new_opt,
                 self._resilience_aux(params, new_params, coords, sq,
                                      new_guard, reason, diverged))
-
-    def _packed_independent_step(self, params, grads, rbd_state,
-                                 opt_state, eplan, guard_state=()):
-        """Packed independent_bases (paper Algorithm 1): still exactly
-        two launches.  Launch 1 projects the local prepacked gradient
-        onto THIS worker's basis; ONE all-gather of the (d_packed,)
-        coordinate buffer is the entire exchange; the coordinate-space
-        optimizer runs on the gathered (K, d_packed) joint-coordinate
-        buffer (deterministic post-gather -> states stay replicated);
-        launch 2 regenerates all K bases in-kernel and accumulates every
-        worker's delta into the streamed theta update -- the joint
-        K*d-dimensional update never exists in HBM.
-
-        With ``axis_name=None`` (sequential K-worker simulation,
-        ``k_workers > 1``) ``grads`` is the stacked (K, q_packed) buffer
-        of per-worker gradients and the "gather" is a vmapped local
-        projection -- bit-compatible with the shard_map exchange.
-
-        Under 'exact' normalization every worker's squared row norms
-        ride the SAME single all-gather (widened to (2d,) per worker --
-        the K-worker reconstruction folds each worker's exact scales
-        from its gathered norms row); the optimizer state stays on the
-        (K, d) coordinate buffer alone.
-        """
-        t = self.transform
-        plan = t.plan
-        layout = plan.packed()
-        prng = eplan.prng_impl
-        exact = (plan.normalization == "exact")
-        seed = t.step_seed(rbd_state.step)
-        guard_on = self.guard is not None
-        rider = riders = None
-        if self.sentinel_every:
-            from repro.core import resilience
-
-            rider = resilience.sentinel_rider(opt_state, params)
-        gathered_sq = None
-        local_ok = None
-        widx = 0
-        if self.axis_name is not None:
-            from repro.core import distributed
-
-            widx = jax.lax.axis_index(self.axis_name)
-            out = distributed.independent_bases_coords(
-                t, grads, rbd_state, self.axis_name, layout=layout,
-                prng=prng, return_norms=exact, rider=rider)
-            if rider is not None:
-                gathered, gathered_sq, riders = out
-            elif exact:
-                gathered, gathered_sq = out
-            else:
-                gathered = out
-            if gathered.shape[0] != self.k_workers:
-                raise ValueError(
-                    f"k_workers={self.k_workers} does not match the "
-                    f"'{self.axis_name}' mesh axis size "
-                    f"{gathered.shape[0]}")
-            if guard_on:
-                # own-row check only LABELS the reason (LOCAL vs
-                # EXCHANGE); the accept/reject decision comes from the
-                # whole gathered buffer below, which every worker sees
-                # identically -- so the guarded update stays replicated
-                local_ok = _all_finite(gathered[widx],
-                                       None if gathered_sq is None
-                                       else gathered_sq[widx])
-        else:
-            # lax.map, not vmap: the scan body is the UNBATCHED per-worker
-            # projection -- the same program each shard_map worker runs --
-            # so the simulation stays bit-exact against the exchange
-            # (vmap's batched contraction accumulates differently)
-            wseeds = projector.worker_base_seeds(seed, self.k_workers)
-            gathered = jax.lax.map(
-                lambda sg: projector.project_packed(
-                    sg[1], plan, sg[0], backend=t.backend, layout=layout,
-                    prepacked=True, prng=prng, return_norms=exact),
-                (wseeds, grads))
-            if exact:
-                gathered, gathered_sq = gathered
-            if guard_on:
-                local_ok = _all_finite(gathered, gathered_sq)
-            if rider is not None:
-                riders = jnp.broadcast_to(rider, (self.k_workers,))
-        if self.fault_plan is not None:
-            from repro.core import resilience
-
-            gathered = resilience.inject_collective_faults(
-                self.fault_plan, rbd_state.step, gathered, widx)
-        reason = None
-        if guard_on:
-            from repro.core import resilience
-
-            reason = jnp.where(
-                local_ok,
-                jnp.where(_all_finite(gathered, gathered_sq),
-                          resilience.REASON_OK,
-                          resilience.REASON_NONFINITE_EXCHANGE),
-                resilience.REASON_NONFINITE_LOCAL).astype(jnp.int32)
-        diverged = ()
-        if riders is not None:
-            from repro.core import resilience
-
-            diverged = resilience.sentinel_check(
-                rider, riders, rbd_state.step, self.sentinel_every)
-        new_params, new_rbd, new_opt, new_guard = self._apply_exchanged(
-            params, gathered, gathered_sq, rbd_state, opt_state,
-            guard_state, reason, eplan)
-        if not self.resilience_active:
-            return (new_params, new_rbd, new_opt,
-                    self._delta_aux(params, new_params))
-        return (new_params, new_rbd, new_opt,
-                self._resilience_aux(params, new_params, gathered,
-                                     gathered_sq, new_guard, reason,
-                                     diverged))
 
     def _per_leaf_step(self, params, grads, rbd_state, opt_state, *,
                        fused: bool):

@@ -9,7 +9,7 @@ import jax
 
 from repro.configs.base import TrainConfig
 from repro.models.registry import Model
-from repro.train.step import make_train_step
+from repro.train.step import make_train_step, stack_microbatches
 
 
 def train(
@@ -42,6 +42,15 @@ def train(
         model, tcfg, return_optimizer=True, resilience=resilience)
     state = init_state(jax.random.PRNGKey(tcfg.seed))
     train_step = jax.jit(train_step)
+    n_accum = max(1, int(tcfg.grad_accum_steps))
+
+    def fetch():
+        # one OPTIMIZER step's worth of data: N consecutive stream
+        # batches stacked on a leading microbatch axis (N=1 passes the
+        # batch through untouched, so the traced program is unchanged)
+        if n_accum == 1:
+            return next(data)
+        return stack_microbatches([next(data) for _ in range(n_accum)])
 
     monitor = None
     start = 0
@@ -59,25 +68,59 @@ def train(
                     print(f"recovered to step {start} "
                           f"(snapshot {info['snapshot_step']}, "
                           f"replayed {info['replayed']} records)")
-                for _ in range(start):
-                    next(data)  # keep the data stream step-aligned
+                # keep the data stream step-aligned: every optimizer
+                # step consumed n_accum batches.  O(1) on the repo's
+                # counter-keyed streams -- no throwaway generation.
+                res_lib.skip_batches(data, start * n_accum)
         monitor = res_lib.ResilienceMonitor(resilience, sub_opt)
         monitor.events.extend(recovery_events)
+    # the replay log appends every step by contract and the divergence
+    # sentinel hard-fails promptly, so both keep the per-step observe;
+    # a guard-only (or fault-injection-only) monitor reads nothing but
+    # scalar metrics, so its observes defer to the log cadence -- no
+    # per-step device->host sync
+    per_step_observe = monitor is not None and bool(
+        resilience.directory or resilience.sentinel_every)
+    pending = []        # deferred (step, metrics) observe records
+
+    def drain_pending():
+        for s, m in pending:
+            for ev in monitor.observe(None, m, step=s):
+                if verbose:
+                    print(f"  [resilience] step {ev.step}: "
+                          f"{res_lib.reason_name(ev.reason)} -- "
+                          f"{ev.detail}")
+        pending.clear()
 
     history = []
     t0 = time.time()
+    if start < tcfg.steps:
+        batch = fetch()     # prime the one-deep prefetch
     for step in range(start, tcfg.steps):
         if monitor is not None and monitor.should_kill(step):
+            drain_pending()
             raise res_lib.SimulatedWorkerKill(f"fault plan kills step {step}")
-        batch = next(data)
         state, metrics = train_step(state, batch)
+        if step + 1 < tcfg.steps:
+            # one-deep prefetch: the step above is dispatched
+            # asynchronously, so the host builds step i+1's batch while
+            # the device runs step i.  Total batches consumed is
+            # unchanged -- resume-time stream alignment holds.
+            batch = fetch()
+        boundary = step % log_every == 0 or step == tcfg.steps - 1
         if monitor is not None:
-            events = monitor.observe(state, metrics)
-            if verbose:
-                for ev in events:
-                    print(f"  [resilience] step {ev.step}: "
-                          f"{res_lib.reason_name(ev.reason)} -- {ev.detail}")
-        if verbose and (step % log_every == 0 or step == tcfg.steps - 1):
+            if per_step_observe:
+                events = monitor.observe(state, metrics)
+                if verbose:
+                    for ev in events:
+                        print(f"  [resilience] step {ev.step}: "
+                              f"{res_lib.reason_name(ev.reason)} -- "
+                              f"{ev.detail}")
+            else:
+                pending.append((step, metrics))
+                if boundary:
+                    drain_pending()
+        if verbose and boundary:
             m = {k: float(v) for k, v in metrics.items()
                  if getattr(v, "ndim", 0) == 0}
             m.update(step=step, wall=time.time() - t0)

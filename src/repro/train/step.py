@@ -123,6 +123,14 @@ def make_loss_fn(model: Model, aux_coef: float = 0.01):
     return loss_fn
 
 
+def stack_microbatches(batches):
+    """Stack per-microbatch dicts into the one batch ``train_step``
+    expects when ``grad_accum_steps == len(batches)``: every leaf gains
+    a leading (N,) microbatch axis that the in-step ``lax.scan``
+    consumes."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+
+
 def make_train_step(model: Model, tcfg: TrainConfig,
                     transform: Optional[rbd_lib.RandomBasesTransform] = None,
                     axis_name: Optional[str] = None, *,
@@ -160,6 +168,10 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     guard_on = sub_opt.guard is not None
     if guard_on or sub_opt.fault_plan is not None:
         from repro.core import resilience as res_lib
+    n_accum = int(tcfg.grad_accum_steps)
+    if n_accum < 1:
+        raise ValueError(f"grad_accum_steps must be >= 1, got {n_accum}")
+    split_step = sub_opt.plan_execution().strategy == "fused_packed"
 
     def init_state(key) -> TrainState:
         params = model.init(key)
@@ -172,14 +184,34 @@ def make_train_step(model: Model, tcfg: TrainConfig,
         )
 
     def train_step(state: TrainState, batch):
+        """One OPTIMIZER step.  With ``grad_accum_steps == N > 1`` the
+        batch leaves carry a leading (N,) microbatch axis
+        (:func:`stack_microbatches`); the gradients accumulate in the
+        STORED representation -- on the packed path that is the
+        (q_packed,) buffer the unpack transpose produces, so nothing is
+        ever unpacked or widened -- and the sketch/exchange/apply chain
+        runs ONCE: still two launches, still one collective."""
         def loss_on_stored(stored, b):
             return loss_fn(sub_opt.materialize_params(stored), b)
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_on_stored, has_aux=True)(state.params, batch)
+        grad_fn = jax.value_and_grad(loss_on_stored, has_aux=True)
+        if n_accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def micro(acc, mb):
+                (mloss, mmetrics), mgrads = grad_fn(state.params, mb)
+                return (sub_opt.accumulate_grads(acc, mgrads),
+                        (mloss, mmetrics))
 
-        if axis_name is not None:
-            loss = jax.lax.pmean(loss, axis_name)
+            # zero-init carry keeps the scan structure static; 0 + g is
+            # bit-exact, so N=1-via-scan matches the direct call
+            zeros = jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, g.dtype), state.params)
+            acc, (losses, stacked) = jax.lax.scan(micro, zeros, batch)
+            grads = sub_opt.finalize_accum(acc, n_accum)
+            loss = jnp.sum(losses) / n_accum
+            metrics = jax.tree_util.tree_map(
+                lambda x: jnp.sum(x) / n_accum, stacked)
 
         if sub_opt.fault_plan is not None:
             grads = res_lib.inject_grad_faults(
@@ -187,9 +219,24 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                 worker_index=(jax.lax.axis_index(axis_name)
                               if axis_name is not None else None))
 
-        params, rbd_state, opt_state, aux = sub_opt.step(
-            state.params, grads, state.rbd_state, state.opt_state,
-            state.guard)
+        if split_step:
+            # overlap window: the coordinate collective is in flight
+            # (issue_early schedule) while the scalar loss pmean and the
+            # metric assembly below run -- loss-dependent work that the
+            # reconstruct-apply launch does not need
+            ticket = sub_opt.step_sketch(
+                state.params, grads, state.rbd_state, state.opt_state)
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            params, rbd_state, opt_state, aux = sub_opt.step_finish(
+                state.params, ticket, state.rbd_state, state.opt_state,
+                state.guard)
+        else:
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+            params, rbd_state, opt_state, aux = sub_opt.step(
+                state.params, grads, state.rbd_state, state.opt_state,
+                state.guard)
         metrics = dict(metrics, loss=loss, update_norm=aux.update_norm)
         if guard_on:
             metrics["guard_reason"] = aux.reason
