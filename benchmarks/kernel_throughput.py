@@ -443,10 +443,52 @@ def fused_step_benchmark(quick: bool = True):
         "vmem_scratch_bytes": 2 * layout.pos_block * layout.dir_block * 4,
     })
 
+    # (d) model-sharded packed step: the packed theta buffer splits into
+    # m tile-aligned slabs (core.compartments.sharded_packed_layout);
+    # every device runs the SAME two launches over 1/m of the tile table
+    # and the slab-partial projection completes with one (d,) psum over
+    # the model axis.  Per-device theta/grad streaming and generation
+    # work scale by 1/m; the coordinate-sized buffers stay replicated
+    # (u write + completed read = 8*d_packed on top of the slab bytes).
+    # Launches are counted on the per-shard program with a concrete
+    # shard index -- the mesh composition (completion psum, bit-exact
+    # full step) is asserted in tests/test_sharded_packed_mesh.py.
+    from repro.core import compartments
+
+    for m in (2, 4):
+        sl = compartments.sharded_packed_layout(layout, m)
+        pad = sl.q_padded - layout.q_packed
+        theta_slab = jnp.pad(projector.pack_tree(params, plan, layout),
+                             (0, pad))[:sl.q_slab]
+        g_slab = jnp.pad(projector.pack_tree(grads, plan, layout),
+                         (0, pad))[:sl.q_slab]
+
+        def shard_step(th, g, sl=sl):
+            u, _ = projector.project_packed_sharded(
+                g, plan, seed, jnp.int32(0), slayout=sl,
+                backend="pallas")
+            coords = u * projector.packed_norm_factor(plan, layout)
+            return projector.reconstruct_apply_packed_sharded(
+                coords, plan, seed, th, lr, jnp.int32(0), slayout=sl,
+                backend="pallas")
+
+        n_launches = count_pallas_calls(shard_step, theta_slab, g_slab)
+        assert n_launches == 2, (f"sharded m={m}", n_launches)
+        row = modeled_row(
+            f"packed_sharded_m{m}_v5e_modeled", n_launches,
+            12.0 * d_total / m + 8.0 * layout.d_packed,
+            samples // m)
+        row["model_shards"] = m
+        # per-device on-wire payload of the model-axis completion psum
+        row["comm_bytes_per_step"] = 4.0 * layout.d_packed
+        rows.append(row)
+
     base_ms = base_packed["wall_ms"]
     for stage in ("packed_overlap_v5e_modeled",
                   "packed_accum_n4_v5e_modeled",
-                  "packed_doublebuf_v5e_modeled"):
+                  "packed_doublebuf_v5e_modeled",
+                  "packed_sharded_m2_v5e_modeled",
+                  "packed_sharded_m4_v5e_modeled"):
         r = next(r for r in rows if r["stage"] == stage)
         assert r["wall_ms"] <= base_ms + 1e-9, (stage, r["wall_ms"],
                                                 base_ms)

@@ -5,6 +5,15 @@ parameters) with a d=250 random basis re-drawn every step (RBD), and
 compares one FPD (fixed basis) and one SGD step for reference.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+This drives the same ``SubspaceOptimizer`` the production launcher
+uses; ``python -m repro.launch.train --arch qwen2-0.5b --reduced
+--fake-devices 8 --data 2 --model 4 --packed on`` runs the scaled-up
+version -- packed two-launch megakernel step, K shared-seed
+data workers exchanging one (d,)-sized collective, and the packed
+theta buffer sharded into per-device slabs over the model axis.  See
+docs/ARCHITECTURE.md for the full map and docs/PLANS.md for how flags
+route between execution strategies.
 """
 
 import jax
@@ -66,7 +75,10 @@ def main():
                   f"val acc {float(acc):.3f}")
 
     print("\nThe same transform with redraw=False is Li et al.'s FPD; "
-          "see benchmarks/table1_baselines.py for the full comparison.")
+          "see benchmarks/table1_baselines.py for the full comparison.\n"
+          "Scaling up: launch/train.py runs this update path packed "
+          "(two kernel launches/step) on a data x model mesh -- see "
+          "docs/ARCHITECTURE.md.")
 
 
 if __name__ == "__main__":

@@ -398,36 +398,32 @@ class WorkerReconTables(NamedTuple):
         return int(self.seed_idx.shape[0])
 
 
-@functools.lru_cache(maxsize=32)
-def worker_recon_tables(layout: PackedLayout,
-                        k_workers: int) -> WorkerReconTables:
-    """Extend a layout's reconstruct-apply tables with a worker axis.
-
-    Ordering contract (relied on by the kernel-vs-oracle bit-exactness
-    tests): per theta block the accumulation sequence is worker-major
-    with directions innermost -- identical to a scan over workers
-    OUTSIDE the single-worker tile scan, which is exactly what the jnp
-    oracle runs.
-    """
+def _expand_worker_groups(rt_seg, rt_row0, rt_col0, rt_q, rt_init,
+                          rt_gblk, rt_sblk, *, n_segments: int,
+                          d_blocks: int,
+                          k_workers: int) -> WorkerReconTables:
+    """Array-level worker expansion shared by the replicated and the
+    model-sharded layouts: every (segment, pos-block) group -- delimited
+    by its init flag -- is repeated K times, worker index in the middle,
+    directions innermost, with the init flag kept only on worker 0."""
     if k_workers < 1:
         raise ValueError(f"k_workers must be >= 1, got {k_workers}")
-    starts = np.flatnonzero(np.asarray(layout.rt_init) == 1)
-    ends = np.append(starts[1:], layout.n_recon_tiles)
-    n_seg = layout.n_segments
-    d_blocks = layout.d_packed // layout.dir_block
+    rt_init = np.asarray(rt_init)
+    starts = np.flatnonzero(rt_init == 1)
+    ends = np.append(starts[1:], rt_init.shape[0])
     cols: list[tuple[np.ndarray, ...]] = []
     for s0, s1 in zip(starts, ends):
         idx = np.arange(s0, s1)
         for wk in range(k_workers):
             cols.append((
-                wk * n_seg + layout.rt_seg[idx],
-                layout.rt_row0[idx],
-                layout.rt_col0[idx],
-                layout.rt_q[idx],
-                (layout.rt_init[idx] if wk == 0
-                 else np.zeros_like(layout.rt_init[idx])),
-                layout.rt_gblk[idx],
-                wk * d_blocks + layout.rt_sblk[idx],
+                wk * n_segments + rt_seg[idx],
+                rt_row0[idx],
+                rt_col0[idx],
+                rt_q[idx],
+                (rt_init[idx] if wk == 0
+                 else np.zeros_like(rt_init[idx])),
+                rt_gblk[idx],
+                wk * d_blocks + rt_sblk[idx],
             ))
     packed = [np.concatenate([c[i] for c in cols]) for i in range(7)]
     return WorkerReconTables(
@@ -439,6 +435,25 @@ def worker_recon_tables(layout: PackedLayout,
         gblk=packed[5].astype(np.int32),
         sblk=packed[6].astype(np.int32),
     )
+
+
+@functools.lru_cache(maxsize=32)
+def worker_recon_tables(layout: PackedLayout,
+                        k_workers: int) -> WorkerReconTables:
+    """Extend a layout's reconstruct-apply tables with a worker axis.
+
+    Ordering contract (relied on by the kernel-vs-oracle bit-exactness
+    tests): per theta block the accumulation sequence is worker-major
+    with directions innermost -- identical to a scan over workers
+    OUTSIDE the single-worker tile scan, which is exactly what the jnp
+    oracle runs.
+    """
+    return _expand_worker_groups(
+        layout.rt_seg, layout.rt_row0, layout.rt_col0, layout.rt_q,
+        layout.rt_init, layout.rt_gblk, layout.rt_sblk,
+        n_segments=layout.n_segments,
+        d_blocks=layout.d_packed // layout.dir_block,
+        k_workers=k_workers)
 
 
 class AdapterReconTables(NamedTuple):
@@ -598,4 +613,254 @@ def packed_layout(plan: Plan, pos_block: int = 512,
         coord_valid=coord_valid,
         coord_inv_sqrt_q=coord_inv_sqrt_q,
         param_valid=param_valid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# model-axis sharded packed layout (slab-resident theta)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedPackedLayout:
+    """Packed layout split into per-device theta slabs over a model axis.
+
+    Each of ``n_shards`` devices owns one contiguous ``q_slab``-float
+    slab of the packed parameter buffer (zero-padded from
+    ``base.q_packed`` to ``q_padded = n_shards * q_slab`` so every slab
+    has the same length) plus the slice of the ragged tile tables whose
+    pos-blocks fall inside that slab.  Slab boundaries snap to
+    ``pos_block`` granularity, so no tile straddles two devices:
+
+    * reconstruct-apply groups (one per (segment, pos-block), directions
+      innermost) live entirely inside one slab -- the per-shard ``rt_*``
+      slice keeps the base ordering and init flags with the block index
+      rebased slab-local.  Owned blocks past the live buffer (pure zero
+      padding) get a q=0 passthrough tile so every output block is
+      written exactly once.
+    * projection groups (one per (segment, dir-block), positions
+      innermost) DO straddle: each shard keeps its contiguous run of
+      position tiles with ``pt_init`` recomputed for the first LOCAL
+      visit, producing a per-slab PARTIAL (d_packed,) coordinate
+      buffer; dir-blocks with no local tile get a q=0 tile that only
+      zero-initializes its output block, so ONE psum over the model
+      axis completes every coordinate sum.
+
+    Tables are stacked host-side to ``(n_shards, max_tiles)`` -- shards
+    are length-padded with q=0/init=0 copies of their own LAST tile, a
+    masked no-op that revisits the output block already resident in
+    VMEM -- and the kernel wrappers select one row with the traced
+    ``jax.lax.axis_index`` of the model axis, so one jit program with a
+    static grid serves every shard.  Coordinates, optimizer state and
+    the exchange stay (d_packed,)-replicated; only theta is sharded,
+    and it never moves.
+    """
+
+    base: PackedLayout
+    n_shards: int
+    q_slab: int               # per-device slab length (pos_block-aligned)
+    q_padded: int             # n_shards * q_slab >= base.q_packed
+    blocks_per_shard: int
+    # stacked per-shard projection tables, (n_shards, n_proj_tiles)
+    pt_seg: np.ndarray
+    pt_row0: np.ndarray
+    pt_col0: np.ndarray
+    pt_gblk: np.ndarray       # slab-LOCAL pos-block index
+    pt_ublk: np.ndarray
+    pt_init: np.ndarray       # first LOCAL visit of each output block
+    pt_q: np.ndarray          # 0 on completion/length-padding no-ops
+    # stacked per-shard reconstruct-apply tables, (n_shards, n_recon_tiles)
+    rt_seg: np.ndarray
+    rt_row0: np.ndarray
+    rt_col0: np.ndarray
+    rt_gblk: np.ndarray       # slab-LOCAL pos-block index
+    rt_sblk: np.ndarray
+    rt_init: np.ndarray
+    rt_q: np.ndarray
+    # per-shard slab validity rows, (n_shards, q_slab)
+    param_valid: np.ndarray
+
+    # the packed-coordinate geometry is unchanged by sharding
+    @property
+    def pos_block(self) -> int:
+        return self.base.pos_block
+
+    @property
+    def dir_block(self) -> int:
+        return self.base.dir_block
+
+    @property
+    def n_segments(self) -> int:
+        return self.base.n_segments
+
+    @property
+    def d_packed(self) -> int:
+        return self.base.d_packed
+
+    @property
+    def coord_valid(self) -> np.ndarray:
+        return self.base.coord_valid
+
+    @property
+    def coord_inv_sqrt_q(self) -> np.ndarray:
+        return self.base.coord_inv_sqrt_q
+
+    @property
+    def n_proj_tiles(self) -> int:
+        return int(self.pt_seg.shape[1])
+
+    @property
+    def n_recon_tiles(self) -> int:
+        return int(self.rt_seg.shape[1])
+
+    def worker_tables(self, k_workers: int) -> "ShardedWorkerReconTables":
+        """Per-shard reconstruct-apply tables with a worker axis
+        (cached) -- the K-worker joint step on a theta slab."""
+        return sharded_worker_recon_tables(self, k_workers)
+
+
+class ShardedWorkerReconTables(NamedTuple):
+    """Per-shard K-worker reconstruct-apply tables: each field stacks
+    the :func:`_expand_worker_groups` expansion of one shard's local
+    recon table to shape (n_shards, n_tiles).  Field semantics match
+    :class:`WorkerReconTables` (slab-local ``gblk``)."""
+
+    seed_idx: np.ndarray
+    row0: np.ndarray
+    col0: np.ndarray
+    q: np.ndarray
+    init: np.ndarray
+    gblk: np.ndarray
+    sblk: np.ndarray
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.seed_idx.shape[1])
+
+
+@functools.lru_cache(maxsize=32)
+def sharded_worker_recon_tables(slayout: "ShardedPackedLayout",
+                                k_workers: int) -> ShardedWorkerReconTables:
+    """Worker-expand every shard's local recon table.  The shards'
+    padded tables all have the same length, so the expansions do too
+    (length-padding tiles are q=0 no-ops inside the last group and stay
+    no-ops when repeated per worker)."""
+    d_blocks = slayout.d_packed // slayout.dir_block
+    per = [
+        _expand_worker_groups(
+            slayout.rt_seg[s], slayout.rt_row0[s], slayout.rt_col0[s],
+            slayout.rt_q[s], slayout.rt_init[s], slayout.rt_gblk[s],
+            slayout.rt_sblk[s], n_segments=slayout.n_segments,
+            d_blocks=d_blocks, k_workers=k_workers)
+        for s in range(slayout.n_shards)
+    ]
+    return ShardedWorkerReconTables(*(
+        np.stack([getattr(p, f) for p in per])
+        for f in ShardedWorkerReconTables._fields))
+
+
+def _pad_tile_rows(cols: list[np.ndarray], n_tiles: int) -> list[np.ndarray]:
+    """Length-pad a shard's tile table (7 columns, init at index 5 and q
+    at index 6) to ``n_tiles`` rows by repeating its last tile with
+    q=0/init=0: a masked no-op that revisits the output block already
+    resident in VMEM, keeping the stacked grid static across shards."""
+    cur = int(cols[0].shape[0])
+    if cur == n_tiles:
+        return cols
+    out = [np.concatenate([c, np.repeat(c[-1:], n_tiles - cur)])
+           for c in cols]
+    out[5][cur:] = 0   # init
+    out[6][cur:] = 0   # q (masks the whole tile)
+    return out
+
+
+@functools.lru_cache(maxsize=32)
+def sharded_packed_layout(layout: PackedLayout,
+                          n_shards: int) -> ShardedPackedLayout:
+    """Split a packed layout into ``n_shards`` pos_block-aligned theta
+    slabs with per-shard tile tables (host-side, cached)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    pb, db = layout.pos_block, layout.dir_block
+    n_blocks = layout.q_packed // pb
+    bps = -(-n_blocks // n_shards)          # pos-blocks per shard
+    q_slab = bps * pb
+    q_padded = n_shards * q_slab
+    d_blocks = layout.d_packed // db
+
+    proj_shards: list[list[np.ndarray]] = []
+    recon_shards: list[list[np.ndarray]] = []
+    for s in range(n_shards):
+        lo, hi = s * bps, (s + 1) * bps
+        # projection: the shard's contiguous pos-tile runs, first-LOCAL-
+        # visit init, plus zero-init no-ops for absent output blocks
+        idx = np.flatnonzero((layout.pt_gblk >= lo) & (layout.pt_gblk < hi))
+        ublk = layout.pt_ublk[idx].astype(np.int64)
+        init = np.zeros(idx.shape[0], np.int64)
+        if idx.size:
+            _, first = np.unique(ublk, return_index=True)
+            init[first] = 1
+        missing = np.setdiff1d(np.arange(d_blocks, dtype=np.int64), ublk)
+        zeros_m = np.zeros(missing.shape[0], np.int64)
+        proj_shards.append([
+            np.concatenate([layout.pt_seg[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.pt_row0[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.pt_col0[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.pt_gblk[idx].astype(np.int64) - lo,
+                            zeros_m]),
+            np.concatenate([ublk, missing]),
+            np.concatenate([init, np.ones_like(zeros_m)]),
+            np.concatenate([layout.pt_q[idx].astype(np.int64), zeros_m]),
+        ])
+        # reconstruct-apply: whole (segment, pos-block) groups, block
+        # index rebased slab-local; owned padding blocks (past the live
+        # buffer) get a q=0 init=1 passthrough tile
+        idx = np.flatnonzero((layout.rt_gblk >= lo) & (layout.rt_gblk < hi))
+        gblk = layout.rt_gblk[idx].astype(np.int64) - lo
+        missing = np.setdiff1d(np.arange(bps, dtype=np.int64), gblk)
+        zeros_m = np.zeros(missing.shape[0], np.int64)
+        recon_shards.append([
+            np.concatenate([layout.rt_seg[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.rt_row0[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.rt_col0[idx].astype(np.int64), zeros_m]),
+            np.concatenate([gblk, missing]),
+            np.concatenate([layout.rt_sblk[idx].astype(np.int64), zeros_m]),
+            np.concatenate([layout.rt_init[idx].astype(np.int64),
+                            np.ones_like(zeros_m)]),
+            np.concatenate([layout.rt_q[idx].astype(np.int64), zeros_m]),
+        ])
+
+    max_pt = max(c[0].shape[0] for c in proj_shards)
+    max_rt = max(c[0].shape[0] for c in recon_shards)
+    proj = [_pad_tile_rows(c, max_pt) for c in proj_shards]
+    recon = [_pad_tile_rows(c, max_rt) for c in recon_shards]
+
+    def stack(cols, i, dtype):
+        return np.stack([c[i] for c in cols]).astype(dtype)
+
+    param_valid = np.concatenate([
+        layout.param_valid,
+        np.zeros(q_padded - layout.q_packed, np.float32)])
+
+    return ShardedPackedLayout(
+        base=layout,
+        n_shards=n_shards,
+        q_slab=q_slab,
+        q_padded=q_padded,
+        blocks_per_shard=bps,
+        pt_seg=stack(proj, 0, np.int32),
+        pt_row0=stack(proj, 1, np.uint32),
+        pt_col0=stack(proj, 2, np.uint32),
+        pt_gblk=stack(proj, 3, np.int32),
+        pt_ublk=stack(proj, 4, np.int32),
+        pt_init=stack(proj, 5, np.int32),
+        pt_q=stack(proj, 6, np.int32),
+        rt_seg=stack(recon, 0, np.int32),
+        rt_row0=stack(recon, 1, np.uint32),
+        rt_col0=stack(recon, 2, np.uint32),
+        rt_gblk=stack(recon, 3, np.int32),
+        rt_sblk=stack(recon, 4, np.int32),
+        rt_init=stack(recon, 5, np.int32),
+        rt_q=stack(recon, 6, np.int32),
+        param_valid=param_valid.reshape(n_shards, q_slab),
     )

@@ -24,14 +24,16 @@ the combined ``("pod", "data")`` axes in the multi-pod mesh):
   concatenated (2*d_packed,) coords+norms buffer under 'exact'
   normalization, still one collective; the per-leaf
   :func:`independent_bases_update` below remains the full-space
-  fallback (weight decay, 'orthonormal' normalization, model-sharded
-  params).
+  fallback (weight decay and 'orthonormal' normalization only --
+  model-sharded params now route to the sharded packed path).
 
 Both functions are written to run inside ``shard_map`` (manual axes contain
-``axis_name``); gradients may additionally be sharded over a ``model``
-axis -- position-keyed counters make shard-local generation consistent, a
-partial projection is completed with a (d,)-sized psum over ``model`` by
-the caller's in_specs (see launch/train.py).
+``axis_name``).  Params/gradients may ADDITIONALLY be sharded over a
+``model`` mesh axis: each device holds one contiguous slab of the packed
+theta buffer (``core.compartments.ShardedPackedLayout``), projects only
+its slab into PARTIAL coordinate sums, and completes them with the
+(d_packed,)-sized psum issued by :func:`complete_model_partials` -- one
+coordinate-sized collective per mesh axis, never anything D-sized.
 """
 
 from __future__ import annotations
@@ -73,6 +75,45 @@ def split_coord_buffer(buf, d_packed: int):
     """Inverse of :func:`widen_coord_buffer`: (..., 2*d_packed) ->
     ((..., d_packed) coords, (..., d_packed) sq)."""
     return buf[..., :d_packed], buf[..., d_packed:]
+
+
+def complete_model_partials(u_partial, sq_partial, model_axis):
+    """Complete the model-sharded projection: one psum over ``model``.
+
+    ``project_packed_sharded`` emits RAW per-slab partial sums -- each
+    device generated basis entries only for the positions of its own
+    theta slab.  This helper folds them into the full (d_packed,)
+    coordinate sums with ONE coordinate-sized collective over the model
+    axis:
+
+    * ``sq_partial=None`` (static-factor normalizations): psum of the
+      (d_packed,) partial-u buffer alone.  The squared row norms are
+      not needed for the update, so they stay slab-local (the non-finite
+      guard still inspects the local partial -- any non-finite partial
+      makes the completed sum non-finite too).
+    * ``sq_partial`` given ('exact' normalization): the psum WIDENS to
+      the concatenated (2*d_packed,) u+sq buffer -- the completed norms
+      are needed to fold the exact per-direction scales, and riding the
+      same collective keeps the count at one per axis.
+
+    Composition with the ``data``-axis exchange: callers normalize the
+    completed sums into coordinates and feed them to the unchanged
+    :func:`start_exchange` / :func:`finish_exchange` machinery, for a
+    per-step total of exactly one coordinate-sized collective per mesh
+    axis (psum over ``model``, then pmean/all-gather over ``data``).
+    Nothing D-sized ever crosses the wire.
+
+    With ``model_axis=None`` the partials are returned untouched (the
+    single-shard degenerate case keeps the sketch skeleton uniform).
+    """
+    if model_axis is None:
+        return u_partial, sq_partial
+    if sq_partial is None:
+        return jax.lax.psum(u_partial, axis_name=model_axis), None
+    d = u_partial.shape[-1]
+    buf = jax.lax.psum(widen_coord_buffer(u_partial, sq_partial),
+                       axis_name=model_axis)
+    return split_coord_buffer(buf, d)
 
 
 class PendingExchange(NamedTuple):

@@ -698,6 +698,156 @@ def _reconstruct_apply_packed_adapters_jnp(aseg_seeds, scale_batch,
     return out
 
 
+class _ShardSlabView:
+    """Duck-typed per-shard 'layout' for the jnp oracles.
+
+    Holds the (possibly traced) selected shard rows of a
+    :class:`~repro.core.compartments.ShardedPackedLayout`'s stacked tile
+    tables, with ``q_packed`` rebound to the slab length -- the
+    single-device scan bodies (:func:`_project_packed_jnp` and friends)
+    then run unchanged against a local theta slab, which is exactly the
+    ordering the sharded megakernels' per-shard tables enforce."""
+
+    def __init__(self, slayout, shard_idx):
+        self.pos_block = slayout.pos_block
+        self.dir_block = slayout.dir_block
+        self.d_packed = slayout.d_packed
+        self.n_segments = slayout.n_segments
+        self.q_packed = slayout.q_slab
+        for f in ("pt_seg", "pt_row0", "pt_col0", "pt_q", "pt_init",
+                  "pt_gblk", "pt_ublk", "rt_seg", "rt_row0", "rt_col0",
+                  "rt_q", "rt_init", "rt_gblk", "rt_sblk"):
+            setattr(self, f, jnp.take(jnp.asarray(getattr(slayout, f)),
+                                      shard_idx, axis=0))
+
+
+def _project_packed_sharded_jnp(seg_seeds, g_slab, slayout, shard_idx,
+                                distribution: str, prng="threefry"):
+    """jnp oracle for the sharded projection megakernel: the unsharded
+    scan body over the shard's own tile-table row (completion no-ops
+    included), so interpret-mode kernel output is bit-exact against it
+    and the psum-completed sums group identically."""
+    return _project_packed_jnp(
+        seg_seeds, g_slab, _ShardSlabView(slayout, shard_idx),
+        distribution, prng)
+
+
+def _reconstruct_apply_packed_sharded_jnp(seg_seeds, scale_packed,
+                                          theta_slab, slayout, shard_idx,
+                                          distribution: str,
+                                          prng="threefry"):
+    """jnp oracle for the sharded fused reconstruct-apply megakernel."""
+    return _reconstruct_apply_packed_jnp(
+        seg_seeds, scale_packed, theta_slab,
+        _ShardSlabView(slayout, shard_idx), distribution, prng)
+
+
+def _reconstruct_apply_packed_workers_sharded_jnp(wseg_seeds,
+                                                  scale_gathered,
+                                                  theta_slab, slayout,
+                                                  shard_idx,
+                                                  k_workers: int,
+                                                  distribution: str,
+                                                  prng="threefry"):
+    """jnp oracle for the sharded K-worker joint megakernel: workers
+    scanned OUTSIDE the single-worker slab scan, matching the per-shard
+    worker-expanded tables' per-block accumulation order."""
+    return _reconstruct_apply_packed_workers_jnp(
+        wseg_seeds, scale_gathered, theta_slab,
+        _ShardSlabView(slayout, shard_idx), k_workers, distribution, prng)
+
+
+def packed_norm_factor(plan: Plan, layout, sq=None):
+    """Public per-slot normalization factor (see
+    :func:`_packed_norm_factor`).  On the model-sharded route the raw
+    slab partials are completed FIRST (one psum over the model axis,
+    ``core.distributed.complete_model_partials``) and normalized outside
+    the projector entry with this -- pass the BASE layout (or the
+    sharded layout, whose validity masks delegate to it)."""
+    return _packed_norm_factor(plan, layout, sq)
+
+
+def project_packed_sharded(g_slab, plan: Plan, seed, shard_idx, *,
+                           slayout, backend: str = "jnp",
+                           prng="threefry"):
+    """Model-sharded packed projection: RAW per-slab partial (u, sq).
+
+    ``g_slab`` is the local (q_slab,) slice of the padded packed
+    gradient and ``shard_idx`` the traced model-axis index
+    (``jax.lax.axis_index``).  Unlike :func:`project_packed` this
+    returns UN-normalized partials: psum both over the model axis
+    (``core.distributed.complete_model_partials``) and then apply
+    ``coords = u * packed_norm_factor(plan, slayout.base, sq)`` --
+    normalization must see the completed sums ('exact' needs the full
+    row norms, and the factor is not linear in the partials).
+    """
+    seeds = segment_seeds(plan, seed)
+    return _get_backend(backend).project_packed_sharded(
+        seeds, g_slab.astype(jnp.float32), slayout, shard_idx,
+        plan.distribution, prng)
+
+
+def reconstruct_apply_packed_sharded(coords_packed, plan: Plan, seed,
+                                     theta_slab, eta, shard_idx, *,
+                                     slayout, backend: str = "jnp",
+                                     row_sq=None, prng="threefry"):
+    """Model-sharded fused packed update: slab' = slab - eta*(c_hat @ P)
+    on the LOCAL theta slab, against the replicated post-exchange
+    (d_packed,) coordinates.  Returns the updated (q_slab,) slab.
+
+    ``row_sq`` must be the COMPLETED squared row norms for 'exact'
+    normalization (they rode the widened model-axis psum); there is no
+    regeneration path here because a local zero-gradient projection
+    would only yield slab partials.
+    """
+    if plan.normalization == "exact" and row_sq is None:
+        raise ValueError(
+            "'exact' normalization on the sharded packed path needs the "
+            "psum-completed row norms (row_sq); a local regeneration "
+            "pass would only produce this slab's partial sums")
+    seeds = segment_seeds(plan, seed)
+    factor = _packed_norm_factor(plan, slayout.base, row_sq)
+    scale = coords_packed * factor * jnp.float32(eta)
+    return _get_backend(backend).reconstruct_apply_packed_sharded(
+        seeds, scale, theta_slab.astype(jnp.float32), slayout, shard_idx,
+        plan.distribution, prng)
+
+
+def reconstruct_apply_packed_workers_sharded(coords_gathered, plan: Plan,
+                                             seed, theta_slab, eta,
+                                             shard_idx, *, slayout,
+                                             backend: str = "jnp",
+                                             row_sq=None,
+                                             prng="threefry"):
+    """Model-sharded K-worker joint fused update (packed
+    ``independent_bases`` mode) on the LOCAL theta slab: same contract
+    as :func:`reconstruct_apply_packed_workers` with ``coords_gathered``
+    the replicated (k_workers, d_packed) all-gathered buffer and
+    ``row_sq`` (exact mode) the gathered COMPLETED norms.  Returns the
+    updated (q_slab,) slab."""
+    if plan.normalization not in STATIC_FACTOR_NORMALIZATIONS \
+            and plan.normalization != "exact":
+        raise ValueError(
+            f"normalization {plan.normalization!r} is not supported by "
+            "the K-worker packed reconstruction (needs a factor-style "
+            "scale); use the per-leaf independent_bases path")
+    if plan.normalization == "exact" and row_sq is None:
+        raise ValueError(
+            "'exact' normalization needs every worker's completed row "
+            "norms (row_sq, (k_workers, d_packed))")
+    k_workers = int(coords_gathered.shape[0])
+    wseeds = worker_base_seeds(seed, k_workers)
+    seg_seed_table = jax.vmap(
+        lambda s: segment_seeds(plan, s))(wseeds).reshape(-1)
+    factor = jnp.atleast_2d(_packed_norm_factor(plan, slayout.base,
+                                                row_sq))
+    scale = (coords_gathered.astype(jnp.float32) * factor
+             * jnp.float32(eta))
+    return _get_backend(backend).reconstruct_apply_packed_workers_sharded(
+        seg_seed_table, scale, theta_slab.astype(jnp.float32), slayout,
+        shard_idx, k_workers, plan.distribution, prng)
+
+
 def project_packed(grads: Any, plan: Plan, seed, *, backend: str = "jnp",
                    layout=None, return_norms: bool = False,
                    prepacked: bool = False, prng="threefry"):
@@ -923,6 +1073,11 @@ class _JnpBackend:
         _reconstruct_apply_packed_workers_jnp)
     reconstruct_apply_packed_adapters = staticmethod(
         _reconstruct_apply_packed_adapters_jnp)
+    project_packed_sharded = staticmethod(_project_packed_sharded_jnp)
+    reconstruct_apply_packed_sharded = staticmethod(
+        _reconstruct_apply_packed_sharded_jnp)
+    reconstruct_apply_packed_workers_sharded = staticmethod(
+        _reconstruct_apply_packed_workers_sharded_jnp)
 
 
 @functools.cache
@@ -942,6 +1097,12 @@ def _get_backend(name: str):
                 ops.reconstruct_apply_packed_workers)
             reconstruct_apply_packed_adapters = staticmethod(
                 ops.reconstruct_apply_packed_adapters)
+            project_packed_sharded = staticmethod(
+                ops.project_packed_sharded)
+            reconstruct_apply_packed_sharded = staticmethod(
+                ops.reconstruct_apply_packed_sharded)
+            reconstruct_apply_packed_workers_sharded = staticmethod(
+                ops.reconstruct_apply_packed_workers_sharded)
 
         return _PallasBackend
     raise ValueError(f"unknown projector backend {name!r}")

@@ -111,6 +111,50 @@ def reconstruct_apply_packed_workers(wseg_seeds, scale_gathered,
     )
 
 
+def project_packed_sharded(seg_seeds, g_slab, slayout, shard_idx,
+                           distribution: str = "normal", prng="threefry",
+                           double_buffer=None):
+    """Per-slab PARTIAL (u, sq) in one launch (model-sharded layout);
+    one psum over the model axis completes the coordinate sums."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.project_packed_sharded(
+        seg_seeds, g_slab, slayout, shard_idx, distribution,
+        interpret=_INTERPRET, prng=prng, double_buffer=double_buffer,
+    )
+
+
+def reconstruct_apply_packed_sharded(seg_seeds, scale_packed, theta_slab,
+                                     slayout, shard_idx,
+                                     distribution: str = "normal",
+                                     prng="threefry", double_buffer=None):
+    """Fused slab' = slab - scale @ P_slab against the replicated
+    post-exchange coordinates, one launch per device."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.reconstruct_apply_packed_sharded(
+        seg_seeds, scale_packed, theta_slab, slayout, shard_idx,
+        distribution, interpret=_INTERPRET, prng=prng,
+        double_buffer=double_buffer,
+    )
+
+
+def reconstruct_apply_packed_workers_sharded(wseg_seeds, scale_gathered,
+                                             theta_slab, slayout, shard_idx,
+                                             k_workers: int,
+                                             distribution: str = "normal",
+                                             prng="threefry",
+                                             double_buffer=None):
+    """K-worker joint fused update on a theta slab, one launch."""
+    from repro.kernels import rbd_step
+
+    return rbd_step.reconstruct_apply_packed_workers_sharded(
+        wseg_seeds, scale_gathered, theta_slab, slayout, shard_idx,
+        k_workers, distribution, interpret=_INTERPRET, prng=prng,
+        double_buffer=double_buffer,
+    )
+
+
 def reconstruct_apply_packed_adapters(aseg_seeds, scale_batch,
                                       theta_packed, layout,
                                       n_adapters: int,

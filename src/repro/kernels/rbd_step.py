@@ -60,7 +60,9 @@ from repro.core.compartments import PackedLayout
 
 __all__ = ["project_packed", "reconstruct_apply_packed",
            "reconstruct_apply_packed_workers",
-           "reconstruct_apply_packed_adapters"]
+           "reconstruct_apply_packed_adapters",
+           "project_packed_sharded", "reconstruct_apply_packed_sharded",
+           "reconstruct_apply_packed_workers_sharded"]
 
 
 def _buffered_tile(gen, gen_ref, t, n_tiles: int):
@@ -542,3 +544,237 @@ def reconstruct_apply_packed_adapters(
         theta,
     )
     return out
+
+
+# ---------------------------------------------------------------------------
+# model-axis sharded variants (ShardedPackedLayout theta slabs)
+# ---------------------------------------------------------------------------
+#
+# Same kernel bodies, same grid shape on every shard: the per-shard tile
+# tables are stacked host-side to (n_shards, n_tiles) and ``shard_idx``
+# (the traced ``jax.lax.axis_index`` of the model mesh axis) selects one
+# row as the RUNTIME scalar-prefetch arguments, so a single jit program
+# with a static grid serves every device of the shard_map region.  The
+# (1, PB) gradient/theta blocks stream from the LOCAL q_slab-float slab;
+# projection writes the full (d_packed,) coordinate buffer as a per-slab
+# PARTIAL sum (every dir-block zero-initialized on every shard -- see
+# ``core.compartments.sharded_packed_layout``) that one psum over the
+# model axis completes.
+
+
+def _shard_row(table, shard_idx):
+    """Select one shard's row of a stacked (n_shards, n_tiles) table."""
+    return jnp.take(jnp.asarray(table), shard_idx, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slayout", "distribution", "interpret", "prng",
+                     "double_buffer"),
+)
+def project_packed_sharded(
+    seg_seeds,
+    g_slab,
+    slayout,
+    shard_idx,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    prng="threefry",
+    double_buffer=None,
+):
+    """One launch per device: PARTIAL (u, sq) from the local theta slab.
+
+    ``g_slab``: (q_slab,) f32 local slice of the padded packed gradient.
+    Returns (u, sq), each (d_packed,) f32 holding only the contributions
+    of the slab's position tiles (absent dir-blocks are zeroed) -- psum
+    over the model axis to obtain the :func:`project_packed` sums.
+    """
+    prng_spec = rng.get_prng_spec(prng)
+    pb, db = slayout.pos_block, slayout.dir_block
+    n_tiles = slayout.n_proj_tiles
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
+    g = g_slab.astype(jnp.float32).reshape(1, slayout.q_slab)
+    seg = _shard_row(slayout.pt_seg, shard_idx)
+    seeds = jnp.take(seg_seeds, seg, axis=0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (0, gb[t])),
+        ],
+        out_specs=[
+            pl.BlockSpec((db, 1), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (ub[t], 0)),
+            pl.BlockSpec((db, 1), lambda t, se, r0, c0, q, ini, gb, ub:
+                         (ub[t], 0)),
+        ],
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
+    )
+    u, sq = pl.pallas_call(
+        functools.partial(
+            _project_kernel, pos_block=pb, n_tiles=n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((slayout.d_packed, 1), jnp.float32),
+            jax.ShapeDtypeStruct((slayout.d_packed, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        seeds,
+        _shard_row(slayout.pt_row0, shard_idx),
+        _shard_row(slayout.pt_col0, shard_idx),
+        _shard_row(slayout.pt_q, shard_idx),
+        _shard_row(slayout.pt_init, shard_idx),
+        _shard_row(slayout.pt_gblk, shard_idx),
+        _shard_row(slayout.pt_ublk, shard_idx),
+        g,
+    )
+    return u[:, 0], sq[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slayout", "distribution", "interpret", "prng",
+                     "double_buffer"),
+)
+def reconstruct_apply_packed_sharded(
+    seg_seeds,
+    scale_packed,
+    theta_slab,
+    slayout,
+    shard_idx,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    prng="threefry",
+    double_buffer=None,
+):
+    """One launch per device: theta_slab' = theta_slab - scale @ P_slab.
+
+    ``scale_packed`` is the REPLICATED post-exchange (d_packed,)
+    coordinate buffer (learning rate + normalization folded, zero on
+    padding -- same contract as :func:`reconstruct_apply_packed`);
+    ``theta_slab`` the local (q_slab,) slice.  Per owned pos-block the
+    tile sequence equals the unsharded kernel's, so the slab result is
+    bit-exact against the matching slice of the unsharded output.
+    """
+    prng_spec = rng.get_prng_spec(prng)
+    pb, db = slayout.pos_block, slayout.dir_block
+    n_tiles = slayout.n_recon_tiles
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
+    s = scale_packed.astype(jnp.float32).reshape(1, slayout.d_packed)
+    theta = theta_slab.astype(jnp.float32).reshape(1, slayout.q_slab)
+    seg = _shard_row(slayout.rt_seg, shard_idx)
+    seeds = jnp.take(seg_seeds, seg, axis=0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, sb[t])),
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, gb[t])),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                               (0, gb[t])),
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_apply_kernel, dir_block=db, n_tiles=n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, slayout.q_slab), jnp.float32),
+        interpret=interpret,
+    )(
+        seeds,
+        _shard_row(slayout.rt_row0, shard_idx),
+        _shard_row(slayout.rt_col0, shard_idx),
+        _shard_row(slayout.rt_q, shard_idx),
+        _shard_row(slayout.rt_init, shard_idx),
+        _shard_row(slayout.rt_gblk, shard_idx),
+        _shard_row(slayout.rt_sblk, shard_idx),
+        s,
+        theta,
+    )
+    return out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slayout", "k_workers", "distribution", "interpret",
+                     "prng", "double_buffer"),
+)
+def reconstruct_apply_packed_workers_sharded(
+    wseg_seeds,
+    scale_gathered,
+    theta_slab,
+    slayout,
+    shard_idx,
+    k_workers: int,
+    distribution: str = "normal",
+    *,
+    interpret: bool = True,
+    prng="threefry",
+    double_buffer=None,
+):
+    """One launch per device: the K-worker joint apply on a theta slab.
+
+    Same contract as :func:`reconstruct_apply_packed_workers` with
+    ``theta_slab`` the local (q_slab,) slice; the worker-expanded
+    per-shard tables (``ShardedPackedLayout.worker_tables``) keep the
+    worker-major direction-innermost order per owned pos-block, so the
+    slab result is bit-exact against the matching slice of the
+    unsharded joint update.
+    """
+    prng_spec = rng.get_prng_spec(prng)
+    pb, db = slayout.pos_block, slayout.dir_block
+    wt = slayout.worker_tables(k_workers)
+    n_tiles = wt.n_tiles
+    buffered = _resolve_double_buffer(double_buffer, prng_spec)
+    s = scale_gathered.astype(jnp.float32).reshape(
+        1, k_workers * slayout.d_packed)
+    theta = theta_slab.astype(jnp.float32).reshape(1, slayout.q_slab)
+    seed_idx = _shard_row(wt.seed_idx, shard_idx)
+    seeds = jnp.take(wseg_seeds, seed_idx, axis=0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, sb[t])),
+            pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                         (0, gb[t])),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda t, se, r0, c0, q, ini, gb, sb:
+                               (0, gb[t])),
+        scratch_shapes=(
+            [pltpu.VMEM((2, db, pb), jnp.float32)] if buffered else []),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _recon_apply_kernel, dir_block=db, n_tiles=n_tiles,
+            distribution=distribution, prng_spec=prng_spec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, slayout.q_slab), jnp.float32),
+        interpret=interpret,
+    )(
+        seeds,
+        _shard_row(wt.row0, shard_idx),
+        _shard_row(wt.col0, shard_idx),
+        _shard_row(wt.q, shard_idx),
+        _shard_row(wt.init, shard_idx),
+        _shard_row(wt.gblk, shard_idx),
+        _shard_row(wt.sblk, shard_idx),
+        s,
+        theta,
+    )
+    return out[0]

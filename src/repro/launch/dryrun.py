@@ -192,6 +192,10 @@ def _print_update_path(sub_opt, n_accum: int = 1):
               f"{ep.overlap_reason}")
         print(f"        payload: one {kind} of {body} "
               f"+ {riders} rider scalar(s)")
+        if sub_opt.model_axis is not None:
+            print(f"        model completion: one psum of {body} over "
+                  f"'{sub_opt.model_axis}' (slab-partial projection; "
+                  "theta never crosses the wire)")
         print(f"        issue point: {issue}")
         print(f"        wait point:  {wait}")
         print(f"        accumulation: {n_accum} microbatch(es) per "

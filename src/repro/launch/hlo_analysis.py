@@ -207,7 +207,8 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
                                kinds=("pmean", "psum"),
                                n_launches: int | None = 2,
                                widened: bool = False,
-                               extra: int = 0) -> None:
+                               extra: int = 0,
+                               model_axis: int | None = None) -> None:
     """Assert the packed sharedseed communication contract on ``fn``'s
     traced program, for BOTH exchange modes:
 
@@ -236,6 +237,16 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
     widened) payload -- the divergence sentinel's checksum RIDES the
     coordinate exchange as exactly one extra scalar per step
     (``extra=1``), keeping the collective count at one.
+
+    ``model_axis``: element count of the MODEL-AXIS completion psum of
+    the model-sharded packed step (``plain d_packed``, or
+    ``2 * d_packed`` under 'exact' normalization -- pass the on-wire
+    count directly, the ``widened`` doubling applies only to the
+    data-axis payload).  When set, the contract is one coordinate-sized
+    collective PER MESH AXIS: exactly TWO non-scalar sites, one psum of
+    ``model_axis`` elements (``complete_model_partials``) and one
+    data-axis exchange in ``kinds`` with the usual payload; the D-size
+    ban is unchanged.
     """
     if widened:
         payload = 2 * payload
@@ -246,10 +257,26 @@ def assert_coordinate_exchange(fn, *args, payload: int, n_params: int,
             f"expected {n_launches} pallas_call launch sites, got {got}")
     sites = collective_sites(fn, *args)
     big = [s for s in sites if s[1] > 1]
-    assert len(big) == 1, (
-        "expected exactly ONE non-scalar collective (the packed "
-        f"coordinate exchange), got {big or sites}")
-    kind, n = big[0]
+    if model_axis is not None:
+        assert len(big) == 2, (
+            "expected exactly TWO non-scalar collectives (the model-axis "
+            "completion psum + the data-axis coordinate exchange), got "
+            f"{big or sites}")
+        # pick out the completion psum; when both sites have the same
+        # payload (model_axis == payload, non-widened psum+psum) the
+        # multiset removal below still leaves exactly one site to check
+        completion = [s for s in big if s == ("psum", model_axis)]
+        assert completion, (
+            f"no model-axis completion psum of {model_axis} elements in "
+            f"{big}")
+        rest = list(big)
+        rest.remove(completion[0])
+        kind, n = rest[0]
+    else:
+        assert len(big) == 1, (
+            "expected exactly ONE non-scalar collective (the packed "
+            f"coordinate exchange), got {big or sites}")
+        kind, n = big[0]
     assert kind in kinds, (f"exchange primitive {kind!r} not in {kinds}",
                            sites)
     assert n == payload, (

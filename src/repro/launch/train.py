@@ -8,17 +8,23 @@ Distribution modes:
                      d-sized by construction, but the backward pass still
                      all-reduces the D-dim gradient over 'data').
 * ``sharedseed``  -- the paper's Algorithm 1: shard_map over the data
-                     axis (model axis stays automatic), per-worker
-                     projection, coordinate exchange (d or K*d floats),
-                     local reconstruction.  No D-dimensional gradient
-                     collective exists in the program.  With the packed
-                     step enabled (--packed on, or --rbd-backend pallas)
-                     the whole sketch+apply is two kernel launches and
-                     the exchange is ONE collective on the packed
-                     coordinate buffer per step instead of one per
-                     compartment: a pmean (--rbd-mode shared_basis) or
-                     an all-gather into the K*d joint subspace
-                     (--rbd-mode independent_bases, Algorithm 1).
+                     axis, per-worker projection, coordinate exchange
+                     (d or K*d floats), local reconstruction.  No
+                     D-dimensional gradient collective exists in the
+                     program.  With the packed step enabled (--packed
+                     on, or --rbd-backend pallas) the whole sketch+apply
+                     is two kernel launches and the exchange is ONE
+                     collective on the packed coordinate buffer per step
+                     instead of one per compartment: a pmean (--rbd-mode
+                     shared_basis) or an all-gather into the K*d joint
+                     subspace (--rbd-mode independent_bases).  With
+                     ``--model m > 1`` the packed theta buffer itself is
+                     sharded into m per-device slabs (tile-row aligned)
+                     and the step goes manual over BOTH mesh axes: each
+                     device projects only its slab, one extra (d,)-sized
+                     psum over 'model' completes the coordinates, and
+                     reconstruct-apply touches only the local slab --
+                     theta never moves at step time.
 * ``sgd``         -- baseline: no RBD, classic data-parallel all-reduce.
 
 Usage (examples; on the CPU container use --fake-devices N):
@@ -43,8 +49,16 @@ def main(argv=None):
                     choices=["shared_basis", "independent_bases"])
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N host devices (CPU testing)")
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel mesh axis size (the paper's K "
+                         "workers under --mode sharedseed)")
+    ap.add_argument("--model", type=int, default=1,
+                    help="model mesh axis size; under --mode sharedseed "
+                         "with the packed step this shards the packed "
+                         "theta buffer into per-device slabs (the step "
+                         "stays two launches, coordinates gain one "
+                         "d-sized psum over 'model'); under --mode pjit "
+                         "it is the classic tensor-parallel axis")
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -196,16 +210,30 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
         axis_name = "data"
     else:
         axis_name = None
-    # pjit shards params over the model axis; the packed-resident buffer
-    # would silently replicate them, so declare it and let plan_execution
-    # fall back with a reason code
     model_sharded = (mode == "pjit" or model_axis > 1)
     # independent_bases needs the static worker count of its joint
     # subspace -- the data-axis size of the shard_map step
     k_workers = data if axis_name is not None else 1
+    # sharedseed + --model m > 1: probe whether the plan can stay
+    # packed-resident with a DECLARED model mesh axis (slab-sharded
+    # packed theta, manual over both axes).  If it cannot (packing off,
+    # orthonormal normalization, weight decay, ...) keep the pjit-style
+    # declaration and let plan_execution fall back with a reason code.
+    declared_model_axis = None
+    model_shards = 1
+    if mode == "sharedseed" and model_axis > 1:
+        probe = steplib.make_subspace_optimizer(
+            model, tcfg, transform, axis_name,
+            model_sharded=True, model_axis="model",
+            model_shards=model_axis, k_workers=k_workers,
+            resilience=resilience)
+        if probe.plan_execution().packed_resident:
+            declared_model_axis, model_shards = "model", model_axis
     init_state, train_step, sub_opt = steplib.make_train_step(
         model, tcfg, transform, axis_name=axis_name,
-        model_sharded=model_sharded, k_workers=k_workers,
+        model_sharded=model_sharded,
+        model_axis=declared_model_axis, model_shards=model_shards,
+        k_workers=k_workers,
         return_optimizer=True, resilience=resilience)
     eplan = sub_opt.plan_execution()
     n_accum = max(1, int(grad_accum_steps))
@@ -232,7 +260,13 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     # full state shape (params may be the packed buffer) drives the specs
     state_shape = jax.eval_shape(init_state, jax.random.PRNGKey(tcfg.seed))
     if eplan.packed_resident:
-        pspecs = P()   # one replicated packed buffer (sharedseed default)
+        if declared_model_axis is not None:
+            # per-device slab of the padded packed buffer: q_padded is
+            # n_shards * q_slab by construction, so P('model') tiles it
+            # exactly onto the slabs the sharded kernels expect
+            pspecs = rules.packed_slab_spec(declared_model_axis)
+        else:
+            pspecs = P()   # one replicated packed buffer
     else:
         pspecs = rules.param_specs(state_shape.params, mesh, cfg)
     if eplan.coord_space:
@@ -264,17 +298,28 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     )
 
     with mesh:
-        state = jax.jit(
-            init_state,
-            out_shardings=jax.tree_util.tree_map(
-                lambda s: NamedSharding(mesh, s), state_specs,
-                is_leaf=lambda x: isinstance(x, P)),
-        )(jax.random.PRNGKey(tcfg.seed))
+        out_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        if declared_model_axis is not None:
+            # compiling init WITH the slab out-sharding lets GSPMD
+            # partition the RNG ops and draw different initial weights
+            # than the unsharded mesh would; run the replicated init
+            # program and redistribute (bits unchanged by device_put)
+            state = jax.device_put(
+                jax.jit(init_state)(jax.random.PRNGKey(tcfg.seed)),
+                out_shardings)
+        else:
+            state = jax.jit(init_state, out_shardings=out_shardings)(
+                jax.random.PRNGKey(tcfg.seed))
 
         if axis_name is not None:
             # Partial-manual shard_map: manual over 'data' (per-worker
-            # grads + coordinate exchange, the paper's Algorithm 1), the
-            # 'model' axis stays automatic (XLA tensor parallelism).
+            # grads + coordinate exchange, the paper's Algorithm 1).
+            # With a declared model axis (slab-sharded packed theta) the
+            # step goes manual over BOTH axes -- params enter as the
+            # local (q_slab,) slab; otherwise 'model' stays automatic
+            # (XLA tensor parallelism).
             from repro.launch.mesh import shard_map_compat
 
             # with accumulation the leaves carry a leading (N,)
@@ -284,6 +329,14 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
             batch_spec = {"tokens": bspec, "labels": bspec}
             repl = jax.tree_util.tree_map(lambda _: P(), state_specs,
                                           is_leaf=lambda x: isinstance(x, P))
+            if declared_model_axis is not None:
+                manual = (axis_name, declared_model_axis)
+                # params travel as the local slab (P('model')); the
+                # (d,)-sized rbd/opt state stays replicated
+                state_spec = state_specs
+            else:
+                manual = (axis_name,)
+                state_spec = repl
             # post-exchange metrics are worker-invariant: replicate them
             # (resilience keys exist only when statically enabled, so the
             # plain config's out_specs -- and program -- are unchanged)
@@ -301,9 +354,9 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                     metrics_spec["replay_row_sq"] = P()
             step_fn = jax.jit(shard_map_compat(
                 train_step, mesh=mesh,
-                in_specs=(repl, batch_spec),
-                out_specs=(repl, metrics_spec),
-                manual_axes=("data",),
+                in_specs=(state_spec, batch_spec),
+                out_specs=(state_spec, metrics_spec),
+                manual_axes=manual,
             ))
             if (resilience is not None and resilience.any_enabled
                     and resilience.on_divergence == "repair"):
@@ -312,8 +365,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                 # detection -- the per-step exchange stays ONE collective)
                 resync_fn = jax.jit(shard_map_compat(
                     lambda s: res_lib.resync_from_worker0(s, "data"),
-                    mesh=mesh, in_specs=(repl,), out_specs=repl,
-                    manual_axes=("data",)))
+                    mesh=mesh, in_specs=(state_spec,),
+                    out_specs=state_spec, manual_axes=manual))
             else:
                 resync_fn = None
         else:

@@ -41,7 +41,21 @@ Execution strategy is a single static decision
                         disabled, weight decay (couples updates to
                         full-space params), or the ineligible
                         independent_bases configs (unpacked,
-                        'orthonormal' normalization, model-sharded).
+                        'orthonormal' normalization, pjit-style model
+                        sharding without a declared model mesh axis).
+
+Model-parallel packing (``model_axis`` set): the packed theta buffer is
+SHARDED over a ``model`` mesh axis -- each device owns one contiguous
+slab (``core.compartments.ShardedPackedLayout``, slab boundaries snapped
+to tile-row granularity) and both launches run on the slab alone.  The
+projection launch emits PARTIAL coordinate sums completed by one
+coordinate-sized psum over the model axis
+(``core.distributed.complete_model_partials``), composed with the
+unchanged data-axis exchange; the optimizer state stays (d,)-replicated
+and the reconstruct-apply launch consumes the replicated post-exchange
+coordinates against only the local slab.  Theta never crosses the wire
+during a step: one coordinate-sized collective per mesh axis, still
+exactly two ``pallas_call``s per device.
 
 'exact' normalization is a first-class ``fused_packed`` citizen for
 BOTH modes: the projection launch already emits per-direction squared
@@ -121,6 +135,7 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     normalization: str = "rsqrt_dim", backend: str = "jnp",
                     mode: str = "shared_basis", axis_name=None,
                     model_sharded: bool = False,
+                    model_axis=None,
                     k_workers: int = 1,
                     prng_impl: str = "threefry",
                     hw_prng_available: bool = False,
@@ -128,9 +143,16 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     """The one fuse/state-placement decision point (pure function of the
     config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
 
-    ``model_sharded``: the caller shards parameters over a model axis --
-    the packed-resident buffer is one array and would silently replicate
-    them, so packing falls back to the per-leaf paths with a reason code.
+    ``model_sharded``: the caller shards parameters over a model axis.
+    With ``model_axis`` DECLARED (a named mesh axis the step runs under
+    via shard_map) the packed buffer itself is sharded -- each device
+    owns one tile-aligned slab of theta and the step stays fused_packed
+    (slab-partial projection completed by one coordinate-sized psum over
+    the model axis).  Without it (pjit-style auto sharding) the
+    packed-resident buffer is one array that would silently replicate
+    the params, so packing falls back to the per-leaf paths with a
+    reason code pointing at the model_axis alternative.  Setting
+    ``model_axis`` implies ``model_sharded``.
 
     ``k_workers``: static worker count of the independent_bases joint
     subspace.  With ``axis_name`` set it must match the mesh axis size;
@@ -159,6 +181,7 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     compute).
     """
     del optimizer  # all optimizers have coordinate-space state now
+    model_sharded = model_sharded or model_axis is not None
 
     def _decide() -> ExecutionPlan:
         if not rbd_enabled:
@@ -184,12 +207,33 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     "independent_bases with orthonormal normalization "
                     "materializes a QR basis per worker -> per-leaf "
                     "full-space path")
-            if model_sharded:
+            if model_sharded and model_axis is None:
                 return ExecutionPlan(
                     "full_space", False,
-                    "independent_bases with model-axis param sharding -> "
-                    "per-leaf full-space path (the packed-resident buffer "
-                    "would replicate the params)")
+                    "independent_bases with model-axis param sharding but "
+                    "no declared model mesh axis (pjit-style) -> per-leaf "
+                    "full-space path (the packed-resident buffer would "
+                    "replicate the params; declare model_axis to shard "
+                    "the packed theta buffer instead)")
+            if model_sharded:
+                if normalization == "exact":
+                    return ExecutionPlan(
+                        "fused_packed", True,
+                        "model-sharded packed independent_bases with exact "
+                        "row norms: slab-partial projection on own basis, "
+                        "completed by one widened (2d,) coords+norms psum "
+                        "over the model axis -> one widened all-gather "
+                        "over data -> (K, d) joint-coordinate optimizer "
+                        "-> K-worker reconstruct-apply on the local theta "
+                        "slab; sharded packed-resident TrainState")
+                return ExecutionPlan(
+                    "fused_packed", True,
+                    "model-sharded packed independent_bases: slab-partial "
+                    "projection on own basis, completed by one (d,) psum "
+                    "over the model axis -> one all-gather over data -> "
+                    "(K, d) joint-coordinate optimizer -> K-worker "
+                    "reconstruct-apply on the local theta slab; sharded "
+                    "packed-resident TrainState")
             if normalization == "exact":
                 return ExecutionPlan(
                     "fused_packed", True,
@@ -209,16 +253,41 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                 "coord_unfused", False,
                 f"{normalization} normalization -> unfused (materializes a "
                 "QR basis per compartment); coordinate-space state")
+        if use_packed and model_sharded and model_axis is not None:
+            if normalization == "exact":
+                return ExecutionPlan(
+                    "fused_packed", True,
+                    "model-sharded packed two-launch step with exact row "
+                    "norms: slab-partial projection completed by one "
+                    "widened (2d,) coords+norms psum over the model axis, "
+                    "composed with the one sharedseed pmean over data -> "
+                    "(d,)-replicated coordinate optimizer -> reconstruct-"
+                    "apply on the local theta slab; sharded packed-"
+                    "resident TrainState")
+            return ExecutionPlan(
+                "fused_packed", True,
+                "model-sharded packed two-launch step: slab-partial "
+                "projection completed by one (d,) psum over the model "
+                "axis, composed with the one sharedseed pmean over data "
+                "-> (d,)-replicated coordinate optimizer -> reconstruct-"
+                "apply on the local theta slab; sharded packed-resident "
+                "TrainState")
         if use_packed and model_sharded:
             if backend == "pallas":
                 return ExecutionPlan(
                     "fused_per_leaf", False,
-                    "model-axis param sharding is incompatible with the "
-                    "packed-resident buffer -> per-leaf fused apply")
+                    "model-axis param sharding without a declared model "
+                    "mesh axis (pjit-style) is incompatible with the "
+                    "packed-resident buffer -> per-leaf fused apply "
+                    "(declare model_axis to shard the packed theta "
+                    "buffer instead)")
             return ExecutionPlan(
                 "coord_unfused", False,
-                "model-axis param sharding is incompatible with the "
-                "packed-resident buffer -> per-leaf XLA-fused stages")
+                "model-axis param sharding without a declared model "
+                "mesh axis (pjit-style) is incompatible with the "
+                "packed-resident buffer -> per-leaf XLA-fused stages "
+                "(declare model_axis to shard the packed theta buffer "
+                "instead)")
         if use_packed:
             if normalization == "exact":
                 return ExecutionPlan(
@@ -258,8 +327,10 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
             "lax.map compute, there is no collective latency to hide")
     elif axis_name is None:
         ov, ov_why = "none", (
-            "axis_name=None: no collective exists; sketch and finish "
-            "run back-to-back")
+            "axis_name=None: no data-axis collective exists; sketch and "
+            "finish run back-to-back"
+            + (" (the model-axis completion psum is synchronous at "
+               "sketch time)" if model_axis is not None else ""))
     elif overlap == "off":
         ov, ov_why = "sync", (
             "overlap disabled: the collective is issued at finish time "
@@ -350,6 +421,14 @@ class SubspaceOptimizer:
                                       # with axis_name=None runs the
                                       # sequential simulation)
     model_sharded: bool = False       # params sharded over a model axis
+    model_axis: Any = None            # DECLARED model mesh axis name: the
+                                      # packed theta buffer is sharded into
+                                      # per-device slabs and the step runs
+                                      # the sharded fused_packed path (one
+                                      # coordinate-sized psum over this
+                                      # axis completes the projection)
+    model_shards: int = 1             # static model-axis size (slab count;
+                                      # must equal the mesh axis size)
     overlap: str = "auto"             # exchange schedule request for the
                                       # split packed step: "auto" issues
                                       # the collective at sketch time
@@ -370,11 +449,14 @@ class SubspaceOptimizer:
     @classmethod
     def from_config(cls, tcfg, transform=None, axis_name=None,
                     model_sharded=False, params_template=None,
-                    k_workers: int = 1) -> "SubspaceOptimizer":
+                    k_workers: int = 1, model_axis=None,
+                    model_shards: int = 1) -> "SubspaceOptimizer":
         """Build from a ``TrainConfig`` (the transform comes from
         ``train.step.make_transform`` to avoid a circular import).
-        ``k_workers`` is a mesh property, not a TrainConfig field: the
-        launcher passes its data-axis size."""
+        ``k_workers``/``model_axis``/``model_shards`` are mesh
+        properties, not TrainConfig fields: the launcher passes its
+        data-axis size and (when sharding the packed buffer) the model
+        axis name and size."""
         return cls(
             transform=transform,
             optimizer=tcfg.optimizer,
@@ -390,6 +472,8 @@ class SubspaceOptimizer:
             axis_name=axis_name,
             k_workers=k_workers,
             model_sharded=model_sharded,
+            model_axis=model_axis,
+            model_shards=model_shards,
             log_update_norm=tcfg.log_update_norm,
             params_template=params_template,
         )
@@ -411,6 +495,7 @@ class SubspaceOptimizer:
             mode=self.mode,
             axis_name=self.axis_name,
             model_sharded=self.model_sharded,
+            model_axis=self.model_axis,
             k_workers=self.k_workers,
             prng_impl=requested,
             hw_prng_available=hw_ok,
@@ -459,18 +544,49 @@ class SubspaceOptimizer:
         return [jnp.zeros((lp.n_stack, lp.dim), jnp.float32)
                 for lp in plan.leaves]
 
+    def _sharded_layout(self):
+        """The model-sharded tile layout, or None when ``model_axis`` is
+        unset.  Cached across calls by ``sharded_packed_layout``'s own
+        lru cache (keyed on the base layout identity + shard count)."""
+        if self.model_axis is None:
+            return None
+        from repro.core import compartments
+
+        return compartments.sharded_packed_layout(
+            self.transform.plan.packed(), self.model_shards)
+
     # -- stored-representation boundary -------------------------------------
 
     def prepare_params(self, params):
-        """Full pytree -> stored representation (pack once, at init)."""
+        """Full pytree -> stored representation (pack once, at init).
+        On the model-sharded path the packed buffer is zero-padded to
+        ``q_padded`` (= model_shards * q_slab) so a P('model') sharding
+        splits it into equal tile-aligned slabs; the padding positions
+        are masked out of every kernel by ``param_valid``."""
         if not self.plan_execution().packed_resident:
             return params
         plan = self.transform.plan
-        return projector.pack_tree(params, plan, plan.packed())
+        packed = projector.pack_tree(params, plan, plan.packed())
+        slayout = self._sharded_layout()
+        if slayout is None:
+            return packed
+        pad = slayout.q_padded - slayout.base.q_packed
+        if pad:
+            packed = jnp.concatenate(
+                [packed, jnp.zeros((pad,), packed.dtype)])
+        return packed
 
     def materialize_params(self, stored):
         """Stored representation -> full pytree (for model.forward, eval,
-        checkpoint export).  Identity for non-resident strategies."""
+        checkpoint export).  Identity for non-resident strategies.
+
+        On the model-sharded path the stored buffer arrives in one of
+        two shapes, dispatched statically: the per-device (q_slab,) slab
+        (inside shard_map) is first all-gathered over ``model_axis`` --
+        the FSDP-style forward gather, the ONE D-sized collective of the
+        sharded path, sitting on the forward boundary rather than in the
+        optimizer step, which stays coordinate-sized -- while the global
+        (q_padded,) view just strips its padding tail."""
         if not self.plan_execution().packed_resident:
             return stored
         if self.params_template is None:
@@ -478,7 +594,15 @@ class SubspaceOptimizer:
                 "packed-resident SubspaceOptimizer needs params_template "
                 "(pytree of shapes/dtypes) to materialize parameters")
         plan = self.transform.plan
-        return projector.unpack_tree(stored, plan, plan.packed(),
+        layout = plan.packed()
+        slayout = self._sharded_layout()
+        if slayout is not None:
+            if stored.shape[-1] == slayout.q_slab \
+                    and slayout.q_slab != slayout.q_padded:
+                stored = jax.lax.all_gather(
+                    stored, self.model_axis, tiled=True)
+            stored = stored[..., :layout.q_packed]
+        return projector.unpack_tree(stored, plan, layout,
                                      self.params_template)
 
     # -- the update ---------------------------------------------------------
@@ -637,7 +761,24 @@ class SubspaceOptimizer:
             # adam must not absorb the sanitized zeros' decay)
             new_opt = jax.tree_util.tree_map(
                 lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
-        if self.joint_subspace:
+        if self.model_axis is not None:
+            # sharded reconstruct-apply: the replicated post-exchange
+            # coordinates hit only the local theta slab (launch 2 on
+            # the slab; theta never crosses the wire)
+            slayout = self._sharded_layout()
+            shard = jax.lax.axis_index(self.model_axis)
+            if self.joint_subspace:
+                new_params = projector.reconstruct_apply_packed_workers_sharded(
+                    coords_u, plan, seed, params,
+                    self.learning_rate / self.k_workers, shard,
+                    slayout=slayout, backend=t.backend, row_sq=sq,
+                    prng=prng)
+            else:
+                new_params = projector.reconstruct_apply_packed_sharded(
+                    coords_u, plan, seed, params, self.learning_rate,
+                    shard, slayout=slayout, backend=t.backend, row_sq=sq,
+                    prng=prng)
+        elif self.joint_subspace:
             new_params = projector.reconstruct_apply_packed_workers(
                 coords_u, plan, seed, params,
                 self.learning_rate / self.k_workers, backend=t.backend,
@@ -695,6 +836,8 @@ class SubspaceOptimizer:
             from repro.core import resilience
 
             rider = resilience.sentinel_rider(opt_state, params)
+        if self.model_axis is not None:
+            return self._sharded_sketch(grads, rbd_state, eplan, rider)
         if self.joint_subspace:
             if self.axis_name is None:
                 wseeds = projector.worker_base_seeds(seed, self.k_workers)
@@ -726,6 +869,67 @@ class SubspaceOptimizer:
         coords, sq = projector.project_packed(
             grads, plan, seed, backend=t.backend, layout=layout,
             return_norms=True, prepacked=True, prng=prng)
+        local_ok = (_all_finite(coords, sq) if self.guard is not None
+                    else ())
+        if self.axis_name is not None and eplan.overlap_exchange == "sync":
+            return StepTicket(coords=coords, sq=sq, rider=rider,
+                              local_ok=local_ok)
+        pending = distributed.start_exchange(
+            coords, sq, self.axis_name, kind="pmean", widened=exact,
+            rider=rider)
+        return StepTicket(pending=pending, rider=rider,
+                          local_ok=local_ok)
+
+    def _sharded_sketch(self, grads, rbd_state, eplan, rider
+                        ) -> StepTicket:
+        """Sketch half on the MODEL-SHARDED layout: project the local
+        theta slab's gradient into partial coordinate sums (launch 1 on
+        the slab), complete them with the one coordinate-sized psum over
+        ``model_axis`` (widened to the concatenated (2d,) u+norms buffer
+        under 'exact' normalization), normalize, then hand the completed
+        coordinates to the UNCHANGED data-axis exchange machinery --
+        overlap, widening and the sentinel rider compose exactly as on
+        the unsharded path.  Per-step total: one coordinate-sized
+        collective per mesh axis, nothing D-sized on the wire.
+
+        Under static-factor normalizations the squared row norms stay
+        slab-PARTIAL (the update never consumes them); the non-finite
+        guard still sees every fault, because a non-finite contribution
+        from any slab makes the completed coordinate sums non-finite."""
+        from repro.core import distributed
+
+        t = self.transform
+        plan = t.plan
+        slayout = self._sharded_layout()
+        prng = eplan.prng_impl
+        exact = (plan.normalization == "exact")
+        seed = t.step_seed(rbd_state.step)
+        shard = jax.lax.axis_index(self.model_axis)
+        if self.joint_subspace:
+            if self.axis_name is None:
+                raise ValueError(
+                    "the sequential K-worker simulation does not compose "
+                    "with model_axis (the slab projection needs real mesh "
+                    "axes); run under shard_map with a data axis")
+            proj_seed = distributed.worker_seed(t, rbd_state,
+                                               self.axis_name)
+        else:
+            proj_seed = seed
+        u, psq = projector.project_packed_sharded(
+            grads, plan, proj_seed, shard, slayout=slayout,
+            backend=t.backend, prng=prng)
+        u, csq = distributed.complete_model_partials(
+            u, psq if exact else None, self.model_axis)
+        coords = u * projector.packed_norm_factor(plan, slayout.base, csq)
+        if self.joint_subspace:
+            sq = csq   # completed norms under 'exact', else None
+            if eplan.overlap_exchange == "issue_early":
+                pending = distributed.start_exchange(
+                    coords, sq, self.axis_name, kind="all_gather",
+                    widened=exact, rider=rider)
+                return StepTicket(pending=pending, rider=rider)
+            return StepTicket(coords=coords, sq=sq, rider=rider)
+        sq = csq if exact else psq
         local_ok = (_all_finite(coords, sq) if self.guard is not None
                     else ())
         if self.axis_name is not None and eplan.overlap_exchange == "sync":
@@ -892,10 +1096,16 @@ class SubspaceOptimizer:
     def _delta_aux(self, old, new) -> _Aux:
         """The fused paths never materialize the update; recover its norm
         from the parameter delta (costs a read of both trees, gated by
-        ``log_update_norm``)."""
+        ``log_update_norm``).  On the model-sharded path the delta lives
+        on the local slab, so the squared norm folds over ``model_axis``
+        (a scalar psum -- the coordinate-exchange invariant counts only
+        coordinate-SIZED payloads)."""
         if not (self.log_update_norm and self.learning_rate):
             return _Aux(jnp.zeros(()))
         diff = jax.tree_util.tree_map(
             lambda p, q: p.astype(jnp.float32) - q.astype(jnp.float32),
             old, new)
-        return _Aux(opt.global_norm(diff) / self.learning_rate)
+        n = opt.global_norm(diff)
+        if self.model_axis is not None:
+            n = jnp.sqrt(jax.lax.psum(n * n, self.model_axis))
+        return _Aux(n / self.learning_rate)

@@ -13,6 +13,12 @@ where each element names which *tensor* dimension gets the ``model``
 axis; everything else is replicated.  RBD coordinates are tiny and always
 replicated.  A dimension is only sharded if divisible by the mesh axis
 size (checked at spec build time; falls back to replication otherwise).
+
+The rules above apply to parameter PYTREES.  On the model-sharded
+packed-resident route (``SubspaceOptimizer`` with ``model_axis`` set)
+params live as ONE padded packed (q_padded,) f32 buffer instead; its
+spec is :func:`packed_slab_spec` -- the buffer tiles exactly onto the
+per-device slabs of ``core.compartments.ShardedPackedLayout``.
 """
 
 from __future__ import annotations
@@ -125,6 +131,16 @@ def param_specs(params_shape: Any, mesh, cfg=None) -> Any:
         for p, leaf in flat
     ]
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def packed_slab_spec(model_axis: str = "model") -> P:
+    """Spec for the padded packed theta buffer on the model-sharded
+    packed route: ``q_padded = n_shards * q_slab`` by construction
+    (``core.compartments.sharded_packed_layout``), so ``P(model_axis)``
+    tiles the buffer exactly onto the per-device slabs the sharded
+    megakernels consume.  The (d,)-sized rbd/optimizer state stays
+    replicated -- see ``launch.train`` for the full TrainState specs."""
+    return P(model_axis)
 
 
 def batch_axes(mesh, layout: str = "megatron") -> tuple:

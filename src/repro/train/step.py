@@ -79,12 +79,18 @@ def make_subspace_optimizer(
         transform: Optional[rbd_lib.RandomBasesTransform] = None,
         axis_name=None, *,
         model_sharded: bool = False,
+        model_axis=None,
+        model_shards: int = 1,
         k_workers: int = 1,
         resilience=None) -> subspace.SubspaceOptimizer:
     """The one update-path object for a (model, TrainConfig) pair.
 
-    ``model_sharded``: the caller shards params over a model axis --
-    rules out the packed-resident strategy (see ``plan_from_flags``).
+    ``model_sharded``: the caller shards params over a model axis.
+    With ``model_axis``/``model_shards`` also given (a DECLARED model
+    mesh axis the step runs under via shard_map) the packed buffer is
+    sharded into per-device slabs and the step stays the packed
+    two-launch strategy; without them the pjit-style fallback applies
+    (see ``plan_from_flags``).
     ``k_workers``: size of the shard_map data axis -- the static worker
     count of the independent_bases joint subspace (ignored by
     shared_basis mode).
@@ -97,7 +103,8 @@ def make_subspace_optimizer(
         transform = make_transform(model, tcfg.rbd)
     sub_opt = subspace.SubspaceOptimizer.from_config(
         tcfg, transform=transform, axis_name=axis_name,
-        model_sharded=model_sharded, k_workers=k_workers)
+        model_sharded=model_sharded, model_axis=model_axis,
+        model_shards=model_shards, k_workers=k_workers)
     if resilience is not None and resilience.any_enabled:
         sub_opt = dataclasses.replace(
             sub_opt,
@@ -135,6 +142,8 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     transform: Optional[rbd_lib.RandomBasesTransform] = None,
                     axis_name: Optional[str] = None, *,
                     model_sharded: bool = False,
+                    model_axis: Optional[str] = None,
+                    model_shards: int = 1,
                     k_workers: int = 1,
                     return_optimizer: bool = False,
                     resilience=None):
@@ -146,8 +155,17 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     ``axis_name``: if set, the step runs inside shard_map over that axis
     and uses the paper's shared-seed exchange (``tcfg.rbd.mode``) instead
     of relying on an implicit D-dimensional gradient all-reduce.
-    ``model_sharded``: declare that params are sharded over a model axis
-    (disables the packed-resident strategy with a reason code).
+    ``model_sharded``: declare that params are sharded over a model axis.
+    Without ``model_axis`` this is the pjit-style declaration and the
+    packed-resident strategy falls back with a reason code; WITH
+    ``model_axis``/``model_shards`` (a declared model mesh axis the step
+    runs under via shard_map, with ``TrainState.params`` sharded
+    P(model_axis)) the packed buffer is sharded into per-device slabs
+    and the step stays packed two-launch.  On that route the forward
+    materializes params with an FSDP-style all-gather whose transpose
+    sums the identical per-device cotangents, so the slab gradient is
+    rescaled by 1/model_shards here (bit-exact for power-of-two shard
+    counts).
     ``k_workers``: the shard_map data-axis size -- required by
     independent_bases mode (static joint-subspace worker count).
     ``resilience``: optional ResilienceConfig (see
@@ -163,6 +181,8 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     loss_fn = make_loss_fn(model, model.cfg.router_aux_coef)
     sub_opt = make_subspace_optimizer(model, tcfg, transform, axis_name,
                                       model_sharded=model_sharded,
+                                      model_axis=model_axis,
+                                      model_shards=model_shards,
                                       k_workers=k_workers,
                                       resilience=resilience)
     guard_on = sub_opt.guard is not None
@@ -172,6 +192,13 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     if n_accum < 1:
         raise ValueError(f"grad_accum_steps must be >= 1, got {n_accum}")
     split_step = sub_opt.plan_execution().strategy == "fused_packed"
+    # sharded packed route: the batch is replicated over the model axis,
+    # so the all-gather transpose in the backward pass sums model_shards
+    # identical cotangent copies into the slab gradient
+    grad_scale = (1.0 / model_shards
+                  if (model_axis is not None and model_shards > 1
+                      and sub_opt.plan_execution().packed_resident)
+                  else None)
 
     def init_state(key) -> TrainState:
         params = model.init(key)
@@ -212,6 +239,11 @@ def make_train_step(model: Model, tcfg: TrainConfig,
             loss = jnp.sum(losses) / n_accum
             metrics = jax.tree_util.tree_map(
                 lambda x: jnp.sum(x) / n_accum, stacked)
+
+        if grad_scale is not None:
+            # the batch is replicated over model_axis, so the all-gather
+            # transpose delivered model_shards x the true packed gradient
+            grads = jax.tree_util.tree_map(lambda g: g * grad_scale, grads)
 
         if sub_opt.fault_plan is not None:
             grads = res_lib.inject_grad_faults(

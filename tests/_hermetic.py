@@ -1,0 +1,36 @@
+"""Hermetic-subprocess helper for the multi-device mesh tests.
+
+The fake-device tests set ``--xla_force_host_platform_device_count``
+BEFORE importing jax, which must never leak into the rest of the suite,
+so they run in a subprocess.  That subprocess imports the tree at its
+own pace: running it against the live working tree means a concurrent
+edit to src/ (another test lane, an editor, a bot) lands in a half-old
+half-new import set and fails the whole tier-1 pass with unrelated
+tracebacks.  :func:`run_hermetic` therefore snapshots src/ into a temp
+copy and points PYTHONPATH + cwd at the snapshot before spawning.
+
+Used by tests/test_distributed.py, tests/test_overlap_accum.py and
+tests/test_sharded_packed_mesh.py (one helper, not three copies).
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+
+def run_hermetic(script: str, tmp_path_factory, *, timeout: int = 560):
+    """Run ``script`` (a ``python -c`` body that prints one JSON line
+    last) against a snapshot of src/, and return the parsed JSON."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    snap = str(tmp_path_factory.mktemp("hermetic_src"))
+    shutil.copytree(
+        src, os.path.join(snap, "src"),
+        ignore=shutil.ignore_patterns("__pycache__", "*.pyc"))
+    env = dict(os.environ, PYTHONPATH=os.path.join(snap, "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          cwd=snap, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])

@@ -2,14 +2,11 @@
 fake devices.  Run in a subprocess so the 8-device XLA flag never leaks
 into the rest of the suite."""
 
-import json
-import os
-import shutil
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from _hermetic import run_hermetic
 
 _SCRIPT = textwrap.dedent("""
     import os
@@ -214,23 +211,8 @@ _SCRIPT = textwrap.dedent("""
 
 @pytest.fixture(scope="module")
 def results(tmp_path_factory):
-    # HERMETIC subprocess: snapshot src/ into a temp copy and point
-    # PYTHONPATH + cwd at the snapshot BEFORE spawning.  The child
-    # imports the tree at its own pace, so running it against the live
-    # working tree means a concurrent edit to src/ (another test lane,
-    # an editor, a bot) lands in a half-old half-new import set and
-    # fails the whole tier-1 pass with unrelated tracebacks.
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    snap = str(tmp_path_factory.mktemp("hermetic_src"))
-    shutil.copytree(
-        src, os.path.join(snap, "src"),
-        ignore=shutil.ignore_patterns("__pycache__", "*.pyc"))
-    env = dict(os.environ, PYTHONPATH=os.path.join(snap, "src"))
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                          cwd=snap, capture_output=True, text=True,
-                          timeout=560)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    # hermetic subprocess: see tests/_hermetic.py for the why
+    return run_hermetic(_SCRIPT, tmp_path_factory)
 
 
 def test_shared_basis_equals_single_worker(results):

@@ -9,11 +9,7 @@ reorders tile generation, not tile values; ``skip(n)`` lands the data
 stream exactly where n ``next()`` calls would.
 """
 
-import json
-import os
 import shutil
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -21,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hermetic import run_hermetic
 from repro.core import make_plan, projector, rng
 from repro.core.rbd import RandomBasesTransform
 from repro.data import synthetic
@@ -82,7 +79,7 @@ def test_overlap_schedule_selection():
 
     ep = plan_from_flags(axis_name=None, **base)
     assert ep.overlap_exchange == "none"
-    assert "no collective" in ep.overlap_reason
+    assert "no data-axis collective" in ep.overlap_reason
 
     # sequential K-worker simulation: the gather is local compute
     ep = plan_from_flags(axis_name=None, mode="independent_bases", k_workers=4, **base)
@@ -371,27 +368,8 @@ _OVERLAP_SCRIPT = textwrap.dedent("""
 
 @pytest.fixture(scope="module")
 def overlap_results(tmp_path_factory):
-    # hermetic subprocess (same discipline as tests/test_distributed):
-    # snapshot src/ so a concurrent edit can't land a torn import set,
-    # and keep the 8-fake-device XLA flag out of this process
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    snap = str(tmp_path_factory.mktemp("hermetic_src"))
-    shutil.copytree(
-        src,
-        os.path.join(snap, "src"),
-        ignore=shutil.ignore_patterns("__pycache__", "*.pyc"),
-    )
-    env = dict(os.environ, PYTHONPATH=os.path.join(snap, "src"))
-    proc = subprocess.run(
-        [sys.executable, "-c", _OVERLAP_SCRIPT],
-        env=env,
-        cwd=snap,
-        capture_output=True,
-        text=True,
-        timeout=560,
-    )
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    # hermetic subprocess: see tests/_hermetic.py for the why
+    return run_hermetic(_OVERLAP_SCRIPT, tmp_path_factory)
 
 
 @pytest.mark.parametrize("optimizer", ["sgd", "momentum", "adam"])

@@ -1,0 +1,209 @@
+"""Tier-1 model-sharded packed layout + kernel tests (no mesh).
+
+The mesh composition (psum completion, data exchange, bit-exactness of
+the full sharded step) lives in tests/test_sharded_packed_mesh.py; here
+the per-shard pieces run with CONCRETE shard indices on a single
+device: slab-snapping properties of ``sharded_packed_layout``, the
+partial-sum completion identity of the sharded projection, slab-wise
+reconstruct-apply agreement with the unsharded megakernel, and
+interpret-mode pallas == jnp bit-exactness per shard."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compartments, make_plan, projector
+from repro.core.rbd import RandomBasesTransform
+
+PARAMS = {
+    "w": jnp.ones((64, 32)),
+    "layers": {"k": jnp.ones((3, 40, 10))},
+    "s": jnp.ones(()),
+    "odd": jnp.ones((7, 73)),
+    "long": jnp.ones((700,)),
+}
+
+
+def mk_plan(norm="rsqrt_dim"):
+    return make_plan(PARAMS, 96, granularity="layer",
+                     is_stacked=lambda n: n.startswith("layers"),
+                     normalization=norm)
+
+
+def packed_grad(plan, layout, key=0):
+    g = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(key), p.shape),
+        PARAMS)
+    return projector.pack_tree(g, plan, layout)
+
+
+def step_seed(plan):
+    return RandomBasesTransform(plan, base_seed=3).step_seed(jnp.uint32(0))
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 7])
+def test_slab_snapping_properties(m):
+    """Slab boundaries snap to pos_block granularity: no projection or
+    reconstruction tile ever straddles two devices, and the padded
+    buffer tiles exactly into per-device slabs."""
+    plan = mk_plan()
+    layout = plan.packed()
+    sl = compartments.sharded_packed_layout(layout, m)
+    assert sl.n_shards == m
+    assert sl.q_slab % layout.pos_block == 0
+    assert sl.q_padded == m * sl.q_slab
+    assert sl.q_padded >= layout.q_packed
+    # over-padding never exceeds one extra block row per shard
+    assert sl.q_padded - layout.q_packed < m * layout.pos_block + \
+        layout.pos_block
+    # stacked validity rows == base validity + zero tail
+    want = np.concatenate([
+        np.asarray(layout.param_valid),
+        np.zeros(sl.q_padded - layout.q_packed, np.float32)])
+    np.testing.assert_array_equal(
+        np.asarray(sl.param_valid).reshape(-1), want)
+
+
+@pytest.mark.parametrize("norm", ["rsqrt_dim", "none", "exact"])
+@pytest.mark.parametrize("m", [2, 4, 7])
+def test_sharded_projection_completes_to_full(norm, m):
+    """Summing the raw per-slab partials over all shards and applying
+    the normalization factor reproduces the unsharded packed projection
+    (the mesh psum is exactly this sum, left-to-right)."""
+    plan = mk_plan(norm)
+    layout = plan.packed()
+    sl = compartments.sharded_packed_layout(layout, m)
+    seed = step_seed(plan)
+    gp = packed_grad(plan, layout)
+    gpad = jnp.pad(gp, (0, sl.q_padded - layout.q_packed))
+    u = sq = None
+    for s in range(m):
+        us, sqs = projector.project_packed_sharded(
+            gpad[s * sl.q_slab:(s + 1) * sl.q_slab], plan, seed,
+            jnp.int32(s), slayout=sl, backend="jnp")
+        u = us if u is None else u + us
+        sq = sqs if sq is None else sq + sqs
+    csq = sq if norm == "exact" else None
+    coords = u * projector.packed_norm_factor(plan, layout, csq)
+    ref = projector.project_packed(gp, plan, seed, backend="jnp",
+                                   layout=layout, prepacked=True,
+                                   return_norms=(norm == "exact"))
+    if norm == "exact":
+        ref, ref_sq = ref
+        np.testing.assert_allclose(np.asarray(sq), np.asarray(ref_sq),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(coords), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("norm", ["rsqrt_dim", "exact"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_sharded_recon_concat_matches_full(norm, m):
+    """Per-slab reconstruct-apply with replicated coordinates, slabs
+    concatenated, equals the unsharded packed reconstruct-apply -- and
+    the padding tail never moves."""
+    plan = mk_plan(norm)
+    layout = plan.packed()
+    sl = compartments.sharded_packed_layout(layout, m)
+    seed = step_seed(plan)
+    gp = packed_grad(plan, layout)
+    proj = projector.project_packed(gp, plan, seed, backend="jnp",
+                                    layout=layout, prepacked=True,
+                                    return_norms=True)
+    coords, sq = proj
+    row_sq = sq if norm == "exact" else None
+    theta = packed_grad(plan, layout, key=9)
+    theta_pad = jnp.pad(theta, (0, sl.q_padded - layout.q_packed))
+    slabs = [
+        projector.reconstruct_apply_packed_sharded(
+            coords, plan, seed,
+            theta_pad[s * sl.q_slab:(s + 1) * sl.q_slab], 0.5,
+            jnp.int32(s), slayout=sl, backend="jnp", row_sq=row_sq)
+        for s in range(m)
+    ]
+    got = np.concatenate([np.asarray(x) for x in slabs])
+    ref = np.asarray(projector.reconstruct_apply_packed(
+        coords, plan, seed, theta, 0.5, backend="jnp", row_sq=row_sq,
+        layout=layout, prepacked=True))
+    np.testing.assert_allclose(got[:layout.q_packed], ref,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(got[layout.q_packed:], 0.0)
+
+
+def test_entirely_padding_shard_is_inert():
+    """m=7 leaves the last shard with no real theta blocks: its
+    projection partial must be exactly zero and reconstruct-apply must
+    return the slab unchanged."""
+    plan = mk_plan()
+    layout = plan.packed()
+    m = 7
+    sl = compartments.sharded_packed_layout(layout, m)
+    assert sl.q_padded - layout.q_packed > sl.q_slab, (
+        "fixture drift: expected at least one all-padding shard")
+    seed = step_seed(plan)
+    zero_slab = jnp.zeros((sl.q_slab,), jnp.float32)
+    u, sq = projector.project_packed_sharded(
+        zero_slab + 3.0, plan, seed, jnp.int32(m - 1), slayout=sl,
+        backend="jnp")
+    np.testing.assert_array_equal(np.asarray(u), 0.0)
+    np.testing.assert_array_equal(np.asarray(sq), 0.0)
+    coords = jnp.ones((layout.d_packed,), jnp.float32)
+    out = projector.reconstruct_apply_packed_sharded(
+        coords, plan, seed, zero_slab, 0.5, jnp.int32(m - 1),
+        slayout=sl, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("m", [4])
+def test_sharded_project_pallas_matches_jnp(m):
+    """Interpret-mode sharded projection megakernel == jnp oracle,
+    bit-for-bit, per shard."""
+    plan = mk_plan("exact")
+    layout = plan.packed()
+    sl = compartments.sharded_packed_layout(layout, m)
+    seed = step_seed(plan)
+    gp = packed_grad(plan, layout)
+    gpad = jnp.pad(gp, (0, sl.q_padded - layout.q_packed))
+    for s in range(m):
+        slab = gpad[s * sl.q_slab:(s + 1) * sl.q_slab]
+        uj, sqj = projector.project_packed_sharded(
+            slab, plan, seed, jnp.int32(s), slayout=sl, backend="jnp")
+        up, sqp = projector.project_packed_sharded(
+            slab, plan, seed, jnp.int32(s), slayout=sl, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(uj), np.asarray(up))
+        np.testing.assert_array_equal(np.asarray(sqj), np.asarray(sqp))
+
+
+@pytest.mark.parametrize("m", [4])
+def test_sharded_recon_pallas_matches_jnp(m):
+    """Interpret-mode sharded reconstruct-apply megakernel == jnp
+    oracle, bit-for-bit, per shard (single-basis and K-worker)."""
+    plan = mk_plan()
+    layout = plan.packed()
+    sl = compartments.sharded_packed_layout(layout, m)
+    seed = step_seed(plan)
+    coords = jax.random.normal(jax.random.PRNGKey(5),
+                               (layout.d_packed,)) \
+        * jnp.asarray(layout.coord_valid)
+    theta = packed_grad(plan, layout, key=9)
+    theta_pad = jnp.pad(theta, (0, sl.q_padded - layout.q_packed))
+    kcoords = jax.random.normal(jax.random.PRNGKey(6),
+                                (2, layout.d_packed)) \
+        * jnp.asarray(layout.coord_valid)
+    for s in range(m):
+        slab = theta_pad[s * sl.q_slab:(s + 1) * sl.q_slab]
+        oj = projector.reconstruct_apply_packed_sharded(
+            coords, plan, seed, slab, 0.5, jnp.int32(s), slayout=sl,
+            backend="jnp")
+        op = projector.reconstruct_apply_packed_sharded(
+            coords, plan, seed, slab, 0.5, jnp.int32(s), slayout=sl,
+            backend="pallas")
+        np.testing.assert_array_equal(np.asarray(oj), np.asarray(op))
+        wj = projector.reconstruct_apply_packed_workers_sharded(
+            kcoords, plan, seed, slab, 0.25, jnp.int32(s), slayout=sl,
+            backend="jnp", row_sq=None)
+        wp = projector.reconstruct_apply_packed_workers_sharded(
+            kcoords, plan, seed, slab, 0.25, jnp.int32(s), slayout=sl,
+            backend="pallas", row_sq=None)
+        np.testing.assert_array_equal(np.asarray(wj), np.asarray(wp))

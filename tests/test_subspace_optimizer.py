@@ -107,9 +107,31 @@ def test_plan_execution_reason_codes():
         (dict(mode="independent_bases", axis_name="data",
               use_packed=True, normalization="orthonormal"),
          "full_space", "orthonormal"),
+        # pjit-style model sharding (no declared model axis) still falls
+        # back; declaring model_axis shards the packed buffer instead
         (dict(mode="independent_bases", axis_name="data",
               use_packed=True, model_sharded=True), "full_space",
          "model-axis"),
+        (dict(use_packed=True, model_sharded=True, backend="pallas"),
+         "fused_per_leaf", "declare model_axis"),
+        (dict(use_packed=True, model_sharded=True), "coord_unfused",
+         "declare model_axis"),
+        # the model-sharded fused_packed routes (PR 9 tentpole)
+        (dict(use_packed=True, axis_name="data", model_axis="model"),
+         "fused_packed", "slab-partial"),
+        (dict(use_packed=True, axis_name="data", model_axis="model",
+              normalization="exact"), "fused_packed",
+         "widened (2d,) coords+norms psum"),
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True, model_axis="model"), "fused_packed",
+         "K-worker reconstruct-apply on the local theta slab"),
+        (dict(mode="independent_bases", axis_name="data",
+              use_packed=True, model_axis="model",
+              normalization="exact"), "fused_packed",
+         "widened (2d,) coords+norms psum"),
+        # model_axis alone implies model_sharded
+        (dict(use_packed=True, model_axis="model"), "fused_packed",
+         "model-sharded"),
     ]
     for flags, strategy, marker in cases:
         ep = plan_from_flags(**flags)
