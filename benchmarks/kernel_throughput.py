@@ -483,6 +483,45 @@ def fused_step_benchmark(quick: bool = True):
         row["comm_bytes_per_step"] = 4.0 * layout.d_packed
         rows.append(row)
 
+    # (e) materialized trajectory basis (optim.subspace
+    # materialized_packed, DLDR-style d=40): the (d, q_packed) basis is
+    # RESIDENT on RBDState, so the step is 0 kernel launches -- the
+    # sketch and apply are two dense XLA matmuls -- and HBM pays the
+    # basis read twice (once per matmul) on top of the 12 B/param
+    # theta/grad streaming.  The L-BFGS coordinate state adds only
+    # (2m+2)*d-sized ring traffic (noise at d=40).  The periodic host
+    # refresh (SVD of the snapshot ring + QR) amortizes over
+    # basis_refresh_every steps; see the EXPERIMENTS.md cost model.
+    rbd_tr = RBDConfig(total_dim=40, backend="pallas", packed="on",
+                       basis="trajectory_pca")
+    plan_tr = steplib.make_plan(model, rbd_tr, params)
+    layout_tr = plan_tr.packed()
+    t_tr = RandomBasesTransform(plan_tr, 0, backend="pallas",
+                                basis="trajectory_pca")
+    sub_tr = SubspaceOptimizer(transform=t_tr, optimizer="lbfgs",
+                               learning_rate=lr, use_packed=True)
+    stored_tr = sub_tr.prepare_params(params)
+    g_tr = projector.pack_tree(grads, plan_tr, layout_tr)
+    st_rtr = sub_tr.init_rbd_state(params)
+    st_otr = sub_tr.init_opt_state(params)
+    n_launches = count_pallas_calls(
+        lambda p, g: sub_tr.step(p, g, st_rtr, st_otr)[0],
+        stored_tr, g_tr)
+    assert n_launches == 0, ("materialized basis", n_launches)
+    d_tr = plan_tr.total_dim
+    basis_bytes = 2.0 * d_tr * layout_tr.q_packed * 4.0
+    hbm_tr = 12.0 * d_total + basis_bytes
+    samples_tr = 2 * d_tr * layout_tr.q_packed  # basis elements READ
+    t_mat = max(2.0 * samples_tr / v5e_mxu, hbm_tr / v5e_bw)
+    rows.append({
+        "stage": "packed_trajectory_d40_v5e_modeled",
+        "samples_per_s": samples_tr / t_mat,
+        "wall_ms": t_mat * 1e3,
+        "launches_per_step": n_launches,
+        "hbm_bytes_per_step": hbm_tr,
+        "basis_bytes_per_step": basis_bytes,
+    })
+
     base_ms = base_packed["wall_ms"]
     for stage in ("packed_overlap_v5e_modeled",
                   "packed_accum_n4_v5e_modeled",

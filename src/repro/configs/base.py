@@ -155,6 +155,50 @@ class RBDConfig:
                                     # keyed) and degrades off-TPU to the
                                     # emulated counter stub with a
                                     # reason code (plan_execution).
+    basis: str = "random"           # core.rbd BasisSpec, one level above
+                                    # prng_impl: random (the paper's
+                                    # per-step redraw) | trajectory_pca |
+                                    # gradient_informed (materialized
+                                    # basis stored on RBDState, refreshed
+                                    # by the training loop's collector).
+                                    # Requested spec; the effective spec
+                                    # is reason-coded on the ExecutionPlan.
+    basis_refresh_every: int = 0    # collector refresh cadence R for the
+                                    # materialized specs (0 -> a default
+                                    # derived by the loop); unused for
+                                    # basis="random"
+    steps_fpd: int = 0              # fixed basis for the first N steps,
+                                    # then per-step redraw (paper section
+                                    # 4.5 FPD -> RBD switching; random
+                                    # basis only, 0 disables)
+    switch_policy: str = "reset"    # coordinate optimizer state at the
+                                    # FPD -> RBD switch step: "reset"
+                                    # (re-zero; history in the retired
+                                    # basis is meaningless) | "carry"
+
+    def __post_init__(self):
+        # the ONE validation point for the basis-layer knobs: every
+        # entry path (launcher flags, dryrun, tests building RBDConfig
+        # directly) funnels through this constructor
+        from repro.core.rbd import BASIS_SPECS
+
+        if self.basis not in BASIS_SPECS:
+            raise ValueError(
+                f"RBDConfig.basis={self.basis!r}; expected one of "
+                f"{BASIS_SPECS}")
+        if self.basis_refresh_every < 0:
+            raise ValueError("RBDConfig.basis_refresh_every must be >= 0")
+        if self.steps_fpd < 0:
+            raise ValueError("RBDConfig.steps_fpd must be >= 0")
+        if self.switch_policy not in ("reset", "carry"):
+            raise ValueError(
+                f"RBDConfig.switch_policy={self.switch_policy!r}; "
+                "expected 'reset' or 'carry'")
+        if self.basis != "random" and self.steps_fpd:
+            raise ValueError(
+                "steps_fpd schedules the RANDOM basis seed; it does not "
+                f"compose with basis={self.basis!r} (the materialized "
+                "basis is already fixed between collector refreshes)")
 
     @property
     def use_packed(self) -> bool:
@@ -177,6 +221,18 @@ class TrainConfig:
     adam_b1: float = 0.9
     adam_b2: float = 0.999
     adam_eps: float = 1e-8
+    lbfgs_history: int = 8          # (m, d) curvature-pair ring depth of
+                                    # the lbfgs coordinate optimizer
+                                    # (second-order methods need a fixed
+                                    # basis: materialized or FPD)
+    coord_clip_norm: float = 0.0    # >0: clip the (d,) coordinate
+                                    # gradient to this global norm before
+                                    # the optimizer (pure coordinate-
+                                    # space transform)
+    lr_schedule: str = "constant"   # constant | cosine -- multiplicative
+                                    # LR schedule as a (d,) transform
+                                    # after the optimizer
+    lr_warmup_steps: int = 0        # linear warmup steps of the schedule
     steps: int = 100
     batch_size: int = 32
     seq_len: int = 128

@@ -933,6 +933,93 @@ def worker_base_seeds(seed, k_workers: int):
     )(jnp.arange(k_workers, dtype=jnp.uint32))
 
 
+# ---------------------------------------------------------------------------
+# materialized bases (trajectory_pca / gradient_informed BasisSpec)
+# ---------------------------------------------------------------------------
+#
+# The random path never stores a basis -- every element regenerates from
+# (seed, counters).  The materialized path inverts the trade: the basis
+# IS data, a (d, q_packed) row-orthonormal array carried on
+# ``core.rbd.RBDState.basis`` and refreshed by the training loop's
+# collector (``train.loop.BasisCollector``).  Because the rows are
+# orthonormal BY CONSTRUCTION (every refresh ends in a QR), projection
+# and reconstruction are two dense matmuls with no normalization factor:
+# 'rsqrt_dim'/'exact'/'none' collapse to the same exact scale of 1, and
+# 'orthonormal' -- the one normalization the packed kernels cannot
+# stream -- is satisfied for free.
+
+
+def materialize_random_basis(plan: Plan, layout, seed) -> jax.Array:
+    """Initial (total_dim, q_packed) row-orthonormal basis.
+
+    Gaussian draw -> QR: the columns of Q from a (q, d) factorization
+    are orthonormal, so the transpose's ROWS are.  Padding positions of
+    the packed buffer are zeroed before the QR (a zero row of the input
+    stays zero in Q), keeping the resident buffer's padding invariant:
+    a materialized update can never write into padding slots.
+    """
+    d = int(plan.total_dim)
+    q = int(layout.q_packed)
+    if q < d:
+        raise ValueError(
+            f"materialized basis needs q_packed >= d ({q} < {d})")
+    key = jax.random.PRNGKey(int(seed) & 0x7FFFFFFF)
+    a = jax.random.normal(key, (q, d), jnp.float32)
+    valid = jnp.asarray(layout.param_valid, jnp.float32)[:, None]
+    a = a * valid
+    qmat, _ = jnp.linalg.qr(a)
+    # float32 QR leaves ~1e-8 residue on the zeroed rows; re-mask so the
+    # padding invariant is exact (the orthonormality perturbation is
+    # O(1e-16), far below f32 resolution)
+    return (qmat * valid).T
+
+
+def refresh_materialized_basis(basis, snapshots):
+    """New (d, q_packed) row-orthonormal basis from collected snapshots
+    (host-side numpy; runs off the step's critical path).
+
+    Top right-singular vectors of the (m, q) snapshot matrix -- the
+    uncentered PCA directions of the trajectory (Li et al.'s P-SGD
+    basis) or of the gradient sketch history -- lead; rows of the OLD
+    basis fill the remaining d - min(m, d) slots, and one QR
+    re-orthonormalizes the stack.  Snapshot rows are norm-scaled first
+    so early large steps do not drown late refinement.  Degenerate
+    snapshots (all-zero) fall back to the old basis unchanged.
+    """
+    basis = np.asarray(basis, np.float32)
+    d = basis.shape[0]
+    m = np.asarray(snapshots, np.float32).reshape(-1, basis.shape[1])
+    norms = np.linalg.norm(m, axis=1)
+    m = m[norms > 1e-30]
+    if not len(m):
+        return basis
+    m = m / np.linalg.norm(m, axis=1, keepdims=True)
+    _, _, vt = np.linalg.svd(m, full_matrices=False)
+    cand = np.concatenate([vt[:d], basis], axis=0)
+    qmat, _ = np.linalg.qr(cand.T.astype(np.float64))
+    new = np.ascontiguousarray(qmat[:, :d].T.astype(np.float32))
+    # keep the padding invariant exact across refreshes: positions the
+    # old basis never touched (packed-buffer padding) stay exactly zero
+    new *= (np.abs(basis) > 0).any(axis=0).astype(np.float32)
+    return new
+
+
+def project_materialized(basis, g_packed) -> jax.Array:
+    """(d,) coordinates of the packed gradient on the stored basis:
+    one (d, q) @ (q,) matmul, zero kernel launches (XLA GEMV).  The
+    exchange contract is unchanged -- this buffer is what a data-axis
+    pmean sees."""
+    return basis @ g_packed.astype(jnp.float32)
+
+
+def reconstruct_apply_materialized(coords, basis, theta, eta) -> jax.Array:
+    """theta' = theta - eta * (c @ B) on the resident packed buffer:
+    one (d,) @ (d, q) matmul.  Rows are orthonormal by construction, so
+    there is no normalization factor to fold (the exact scale is 1)."""
+    return (theta.astype(jnp.float32)
+            - jnp.float32(eta) * (coords.astype(jnp.float32) @ basis))
+
+
 def reconstruct_apply_packed_workers(coords_gathered, plan: Plan, seed,
                                      params: Any, eta, *,
                                      backend: str = "jnp", row_sq=None,

@@ -15,18 +15,24 @@ c_{t+1} = c_t - eta P^T g  implies  theta_{t+1} = theta_t - eta P P^T g.
 This identity (redraw toggles RBD vs FPD) is the cleanest expression of the
 paper's central claim and is property-tested in tests/test_rbd_math.py.
 
-NOTE: training code should go through
-``repro.optim.subspace.SubspaceOptimizer``, which owns the full
-sketch -> coordinate-space optimizer -> apply chain (including
-momentum/adam with (d,)-shaped state).  The ``update``/``fused_step``
-entry points below remain as thin compatibility shims for existing
-examples, benchmarks and tests.
+The transform is the full BASIS CONFIG of a run, one level above the
+bit-generation ``PrngSpec``: ``basis`` selects WHERE the d directions
+come from (``random`` -- the paper's per-step redraw, seeded here;
+``trajectory_pca`` / ``gradient_informed`` -- a MATERIALIZED basis
+stored on :class:`RBDState` and refreshed by the training loop's
+collector, see ``train/loop.py``), ``redraw``/``steps_fpd`` schedule
+the seed for the random path, and ``prng`` picks the generator.
+
+Training code goes through ``repro.optim.subspace.SubspaceOptimizer``,
+which owns the full sketch -> coordinate-space optimizer -> apply
+chain.  The PR 2-era ``update``/``project``/``reconstruct``/
+``fused_step`` compatibility shims are gone; ``projector.rbd_gradient``
+computes a bare sketch where one is needed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -35,33 +41,34 @@ import jax.numpy as jnp
 from repro.core import projector, rng
 from repro.core.compartments import Plan
 
-
-def _warn_deprecated(name: str) -> None:
-    warnings.warn(
-        f"{name} is deprecated: construct a repro.optim.subspace."
-        "SubspaceOptimizer (or use train.step.make_subspace_optimizer) "
-        "and call .step()", DeprecationWarning, stacklevel=3)
+BASIS_SPECS = ("random", "trajectory_pca", "gradient_informed")
 
 
 class RBDState(NamedTuple):
     step: jax.Array  # uint32 step counter (folds into the per-step seed)
+    basis: Any = ()  # materialized (d, q_packed) orthonormal basis on the
+                     # trajectory_pca / gradient_informed paths; () on the
+                     # random path, so its state pytree (and every
+                     # pre-basis checkpoint) is unchanged
 
 
 @dataclasses.dataclass(frozen=True)
 class RandomBasesTransform:
-    """Gradient transform implementing RBD (redraw=True) or FPD (False).
+    """Basis config implementing RBD (redraw=True) or FPD (False).
 
-    Preferred usage -- the transform is the sketch CONFIG handed to the
-    one update-path abstraction:
+    Usage -- the transform is the sketch CONFIG handed to the one
+    update-path abstraction:
 
         t = RandomBasesTransform(plan, base_seed=0, redraw=True)
         sub = SubspaceOptimizer(transform=t, learning_rate=lr)
         params, rbd_state, opt_state, _ = sub.step(
             params, grads, rbd_state, opt_state)
 
-    (``update()`` below mirrors optax's GradientTransformation contract
-    but is a deprecation shim now; ``projector.rbd_gradient`` is the
-    non-deprecated way to compute a bare sketch.)
+    ``steps_fpd`` pins the seed for the first N steps (paper section
+    4.5's FPD -> RBD switching experiment): the basis is FIXED while
+    ``step < steps_fpd`` and redraws per step after.  0 disables the
+    schedule entirely -- the traced seed computation is then
+    byte-identical to the plain redraw path.
     """
 
     plan: Plan
@@ -72,79 +79,27 @@ class RandomBasesTransform:
                               # impl is resolved per execution strategy
                               # (core.rng.resolve_prng_impl, surfaced by
                               # SubspaceOptimizer.plan_execution)
+    basis: str = "random"     # BasisSpec: random | trajectory_pca |
+                              # gradient_informed.  Non-random specs take
+                              # the materialized path (the basis is a
+                              # stored (d, q_packed) array on RBDState,
+                              # refreshed by the loop's collector, not
+                              # regenerated from this seed schedule).
+    steps_fpd: int = 0        # fixed basis for the first N steps, then
+                              # per-step redraw (random basis only)
 
     def init(self, params: Any) -> RBDState:
         del params
         return RBDState(step=jnp.zeros((), jnp.uint32))
 
     def step_seed(self, step):
-        if self.redraw:
-            return rng.fold_seed(self.base_seed, step)
-        return rng.fold_seed(self.base_seed, jnp.zeros((), jnp.uint32))
-
-    def _effective_prng(self, strategy: str) -> str:
-        """Resolve the requested ``prng`` impl exactly like
-        ``SubspaceOptimizer.plan_execution`` does, so the deprecated
-        entry points below honor the field instead of silently running
-        threefry (per-leaf strategies still resolve TO threefry -- the
-        position-keyed paths are the only ones they have)."""
-        impl, _ = rng.resolve_prng_impl(
-            self.prng, strategy=strategy, backend=self.backend,
-            hw_available=rng.hw_prng_available_for(self.prng,
-                                                   self.backend))
-        return impl
-
-    def update(self, grads: Any, state: RBDState, params: Any = None):
-        _warn_deprecated("RandomBasesTransform.update")
-        del params
-        seed = self.step_seed(state.step)
-        sketch = projector.rbd_gradient(
-            grads, self.plan, seed, backend=self.backend
-        )
-        return sketch, RBDState(step=state.step + 1)
-
-    # split-phase API for the distributed path ------------------------------
-    def project(self, grads: Any, state: RBDState):
-        seed = self.step_seed(state.step)
-        return projector.project(grads, self.plan, seed, backend=self.backend)
-
-    def reconstruct(self, coords, state: RBDState, params_like: Any):
-        seed = self.step_seed(state.step)
-        return projector.reconstruct(
-            coords, self.plan, seed, params_like, backend=self.backend
-        )
-
-    # fused single-launch step ----------------------------------------------
-    def fused_step(self, params: Any, grads: Any, state: RBDState, lr,
-                   axis_name=None, packed: bool = True):
-        """Fused sketch-and-apply: returns (new_params, new_state).
-
-        Deprecated shim (SGD only): ``optim.subspace.SubspaceOptimizer``
-        runs the same two launches with a coordinate-space optimizer
-        (sgd/momentum/adam) in between.  Replaces update() + the
-        caller's SGD apply with the two-launch packed :func:`rbd_step`
-        (``packed=True``) or the per-leaf ``projector.reconstruct_apply``
-        fallback (``packed=False`` -- one fused launch per compartment,
-        still no delta in HBM).  Only valid when nothing (weight decay,
-        clipping) sits between the sketch and the apply.
-        """
-        _warn_deprecated("RandomBasesTransform.fused_step")
-        seed = self.step_seed(state.step)
-        if packed:
-            params = rbd_step(params, grads, self.plan, seed, lr,
-                              backend=self.backend, axis_name=axis_name,
-                              prng=self._effective_prng("fused_packed"))
-        else:
-            coords, norms = projector.project(
-                grads, self.plan, seed, backend=self.backend,
-                return_norms=True)
-            if axis_name is not None:
-                coords = [jax.lax.pmean(c, axis_name=axis_name)
-                          for c in coords]
-            params = projector.reconstruct_apply(
-                coords, self.plan, seed, params, lr,
-                backend=self.backend, row_sq=norms)
-        return params, RBDState(step=state.step + 1)
+        if not self.redraw:
+            return rng.fold_seed(self.base_seed, jnp.zeros((), jnp.uint32))
+        if self.steps_fpd:
+            step = jnp.asarray(step, jnp.uint32)
+            step = jnp.where(step < jnp.uint32(self.steps_fpd),
+                             jnp.zeros_like(step), step)
+        return rng.fold_seed(self.base_seed, step)
 
 
 def rbd_step(params: Any, grads: Any, plan: Plan, seed, lr, *,

@@ -439,6 +439,11 @@ def resolve_prng_impl(requested: str, *, strategy: str, backend: str,
     if not rbd_enabled:
         return "threefry", ("rbd disabled -> no basis generation, prng "
                             "unused")
+    if strategy == "materialized_packed":
+        return "threefry", (
+            "materialized basis (trajectory_pca/gradient_informed) is "
+            "stored and refreshed, not regenerated per step -> counter-"
+            "keyed Threefry used only for the initial basis draw")
     if requested == "threefry":
         return "threefry", "counter-keyed Threefry (bit-stable default)"
     if strategy != "fused_packed":

@@ -20,14 +20,12 @@ Threefry ALU cost per element -- but not interpretable on CPU, not
 bit-stable across generations, and tile-keyed, so the values depend on
 the (dir_block, pos_block) tiling.  ``prng="hw_emulated"`` runs the same
 seeding discipline as a CPU/interpret-mode counter stub.  The framework
-default stays ``threefry`` for reproducibility.  The old boolean
-``use_hw_prng`` flag is a deprecation shim over ``prng="hw"``.
+default stays ``threefry`` for reproducibility.
 """
 
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +137,6 @@ def project_flat(
     distribution: str = "normal",
     *,
     interpret: bool = True,
-    use_hw_prng: bool | None = None,
     prng="threefry",
     dir_block: int = DIR_BLOCK,
     pos_block: int = POS_BLOCK,
@@ -149,17 +146,9 @@ def project_flat(
     Returns (u, sq) of shape (dim,): raw projections and squared row
     norms.  ``interpret=True`` runs the kernel body in Python on CPU --
     the validation mode for this container; on TPU pass interpret=False.
-    ``prng`` selects the generation backend (PrngSpec impl name or
-    instance); ``use_hw_prng`` is the deprecated boolean spelling of
-    ``prng="hw"``.
+    ``prng`` selects the generation backend (a ``core.rng.PrngSpec``
+    impl name or instance).
     """
-    if use_hw_prng is not None:
-        warnings.warn(
-            "use_hw_prng is deprecated: pass prng='hw' (a core.rng."
-            "PrngSpec impl name) instead", DeprecationWarning,
-            stacklevel=2)
-        if use_hw_prng:
-            prng = "hw"
     return _project_flat_jit(
         seed, g_flat, dim, distribution, interpret=interpret, prng=prng,
         dir_block=dir_block, pos_block=pos_block)

@@ -73,6 +73,7 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
                        packed: str = "auto",
                        normalization: str = "rsqrt_dim",
                        prng_impl: str = "threefry",
+                       basis: str = "random",
                        guard: bool = False,
                        grad_accum_steps: int = 1):
     """(step_fn, arg_specs) for the train/prefill kinds.
@@ -93,7 +94,7 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
     cfg = model.cfg
     rbd_cfg = RBDConfig(enabled=(mode != "sgd"), mode=rbd_mode,
                         packed=packed, normalization=normalization,
-                        prng_impl=prng_impl)
+                        prng_impl=prng_impl, basis=basis)
     n_accum = max(1, int(grad_accum_steps))
     if mode != "sharedseed" and n_accum > 1:
         print("      grad accumulation: only the sharedseed step stacks "
@@ -140,6 +141,10 @@ def build_train_inputs(model, shape: InputShape, mode: str, mesh=None,
         if sub_opt.guard is not None:
             metrics_spec.update(guard_reason=P(), guard_count=P(),
                                 guard_lr_scale=P())
+        ep = sub_opt.plan_execution()
+        if ep.materialized and ep.basis == "gradient_informed":
+            # pmean'd inside the step -> worker-invariant
+            metrics_spec["basis_grad"] = P()
         step_fn = shard_map_compat(
             inner, mesh=mesh,
             in_specs=(repl_state, batch_spec),
@@ -162,6 +167,7 @@ def _print_update_path(sub_opt, n_accum: int = 1):
     fused = "fused" if ep.fused else "UNFUSED"
     print(f"      update path [{fused}]: {ep.strategy} -- {ep.reason}")
     if sub_opt.transform is not None:
+        print(f"      basis: {ep.basis} -- {ep.basis_reason}")
         print(f"      prng impl: {ep.prng_impl} -- {ep.prng_reason}")
     if sub_opt.resilience_active:
         print("      resilience: "
@@ -278,7 +284,8 @@ def should_skip(cfg, shape: InputShape) -> str | None:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "rbd", rbd_mode: str = "shared_basis",
             packed: str = "auto", normalization: str = "rsqrt_dim",
-            prng_impl: str = "threefry", guard: bool = False,
+            prng_impl: str = "threefry", basis: str = "random",
+            guard: bool = False,
             grad_accum_steps: int = 1,
             out_dir: str = "reports/dryrun",
             save: bool = True) -> dict[str, Any]:
@@ -305,6 +312,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                             packed=packed,
                                             normalization=normalization,
                                             prng_impl=prng_impl,
+                                            basis=basis,
                                             guard=guard,
                                             grad_accum_steps=grad_accum_steps)
     elif shape.kind == "prefill":
@@ -408,6 +416,17 @@ def main():
                     choices=["threefry", "hw", "hw_emulated"],
                     help="basis-generation PRNG backend (hw degrades to "
                          "hw_emulated off-TPU with a printed reason)")
+    ap.add_argument("--basis", default="random",
+                    choices=["random", "trajectory_pca",
+                             "gradient_informed"],
+                    help="BasisSpec: per-step random redraw (paper "
+                         "default) or a materialized resident basis; "
+                         "the printed plan block shows the effective "
+                         "spec and its reason-coded routing")
+    ap.add_argument("--basis-refresh-every", type=int, default=0,
+                    help="materialized-basis refresh cadence (steps); "
+                         "compile-only here -- shown for the cost model, "
+                         "the dry run never executes a refresh")
     ap.add_argument("--guard", action="store_true",
                     help="compile the non-finite-guarded step and print "
                          "the resilience plan (the guard must keep the "
@@ -437,7 +456,8 @@ def main():
             r = run_one(arch, shape, multi_pod=mp, mode=args.mode,
                         rbd_mode=args.rbd_mode, packed=args.packed,
                         normalization=args.normalization,
-                        prng_impl=args.prng_impl, guard=args.guard,
+                        prng_impl=args.prng_impl, basis=args.basis,
+                        guard=args.guard,
                         grad_accum_steps=args.grad_accum_steps,
                         out_dir=args.out)
             if "skipped" in r:

@@ -74,6 +74,13 @@ def main(argv=None):
                     help="coordinate-space optimizer; momentum/adam keep "
                          "their state on the packed (d,) buffer and still "
                          "run as two launches per step")
+    ap.add_argument("--coord-optimizer", default=None,
+                    choices=["sgd", "momentum", "adam", "lbfgs", "newton"],
+                    help="coordinate-space optimizer, superseding "
+                         "--optimizer; lbfgs/newton run second-order "
+                         "updates on the (d,) coordinate buffer and "
+                         "require a basis FIXED between steps (a "
+                         "materialized --basis, or FPD)")
     ap.add_argument("--weight-decay", type=float, default=0.0)
     ap.add_argument("--momentum-beta", type=float, default=0.9)
     ap.add_argument("--nesterov", action="store_true")
@@ -102,6 +109,18 @@ def main(argv=None):
                          "(packed megakernels, real TPU only; degrades "
                          "to the emulated stub off-TPU with a logged "
                          "reason), or the CPU-testable emulated stub")
+    ap.add_argument("--basis", default="random",
+                    choices=["random", "trajectory_pca",
+                             "gradient_informed"],
+                    help="BasisSpec, one level above --prng-impl: the "
+                         "paper's per-step random redraw, or a "
+                         "MATERIALIZED basis stored on RBDState and "
+                         "refreshed from trajectory PCA / gradient "
+                         "history (degrades to random with a printed "
+                         "reason where no resident basis can exist)")
+    ap.add_argument("--basis-refresh-every", type=int, default=0,
+                    help="materialized-basis refresh cadence in steps "
+                         "(0: a default derived from the subspace dim)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -161,7 +180,10 @@ def main(argv=None):
         normalization=args.normalization,
         rbd_backend=args.rbd_backend, packed=args.packed,
         prng_impl=args.prng_impl,
-        optimizer=args.optimizer, weight_decay=args.weight_decay,
+        basis=args.basis,
+        basis_refresh_every=args.basis_refresh_every,
+        optimizer=(args.coord_optimizer or args.optimizer),
+        weight_decay=args.weight_decay,
         momentum_beta=args.momentum_beta, nesterov=args.nesterov,
         adam_b1=args.adam_b1, adam_b2=args.adam_b2,
         adam_eps=args.adam_eps,
@@ -175,6 +197,7 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                  lr=0.125, rbd_dim=1024, normalization="rsqrt_dim",
                  rbd_backend="jnp",
                  packed="auto", prng_impl="threefry",
+                 basis="random", basis_refresh_every=0,
                  optimizer="sgd", weight_decay=0.0,
                  momentum_beta=0.9, nesterov=False, adam_b1=0.9,
                  adam_b2=0.999, adam_eps=1e-8, checkpoint_dir=None,
@@ -195,7 +218,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                         total_dim=rbd_dim, mode=rbd_mode,
                         normalization=normalization,
                         backend=rbd_backend, packed=packed,
-                        prng_impl=prng_impl)
+                        prng_impl=prng_impl, basis=basis,
+                        basis_refresh_every=basis_refresh_every)
     tcfg = TrainConfig(model=cfg, rbd=rbd_cfg, learning_rate=lr,
                       steps=steps, batch_size=batch, seq_len=seq,
                       grad_accum_steps=grad_accum_steps,
@@ -239,6 +263,7 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
     n_accum = max(1, int(grad_accum_steps))
     print(f"update path: {eplan.strategy} -- {eplan.reason}", flush=True)
     if rbd_cfg.enabled:
+        print(f"basis: {eplan.basis} -- {eplan.basis_reason}", flush=True)
         print(f"prng impl: {eplan.prng_impl} -- {eplan.prng_reason}",
               flush=True)
         print(f"exchange schedule: {eplan.overlap_exchange} -- "
@@ -352,6 +377,9 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                 if (not sub_opt.joint_subspace
                         or rbd_cfg.normalization == "exact"):
                     metrics_spec["replay_row_sq"] = P()
+            if eplan.materialized and eplan.basis == "gradient_informed":
+                # pmean'd inside the step -> worker-invariant
+                metrics_spec["basis_grad"] = P()
             step_fn = jax.jit(shard_map_compat(
                 train_step, mesh=mesh,
                 in_specs=(state_spec, batch_spec),
@@ -391,6 +419,15 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                               f"{ev.detail}", flush=True)
             monitor = res_lib.ResilienceMonitor(resilience, sub_opt)
 
+        # materialized BasisSpecs: host-side snapshot ring + periodic
+        # refresh (None on the random path -- loop body unchanged).
+        # State is replicated under the materialized plan (no model
+        # sharding by construction), so the host observes the global
+        # packed view directly.
+        from repro.train.loop import BasisCollector
+
+        collector = BasisCollector.build(sub_opt, tcfg)
+
         stream = synthetic.lm_batches(tcfg.seed, batch, seq, cfg.vocab)
         # keep the data stream step-aligned on resume: each optimizer
         # step consumed n_accum batches (O(1) counter skip, no
@@ -410,6 +447,8 @@ def run_training(cfg, *, mode="sharedseed", rbd_mode="shared_basis",
                     f"fault plan kills step {i}")
             b = fetch()
             state, metrics = step_fn(state, b)
+            if collector is not None:
+                state = collector.observe(state, metrics, i)
             if monitor is not None:
                 events = monitor.observe(state, metrics)
                 for ev in events:

@@ -31,6 +31,17 @@ Execution strategy is a single static decision
                         only for ``model.forward``; gradients arrive
                         packed for free because the autodiff transpose
                         of the unpack IS the pack).
+* ``materialized_packed`` -- resident (total_dim, q_packed)
+                        row-orthonormal basis stored on ``RBDState``
+                        (``basis=trajectory_pca | gradient_informed``,
+                        refreshed by the training loop's collector):
+                        sketch and apply are two dense XLA matmuls,
+                        ZERO kernel launches -- relaxing the two-launch
+                        invariant with a reason code -- while keeping
+                        the one (d,) exchange and the packed-resident
+                        TrainState.  Orthonormal by construction, so
+                        this is also the packed-resident escape from
+                        the 'orthonormal' normalization fallback.
 * ``fused_per_leaf`` -- per-leaf fused reconstruct-apply (packing off,
                         pallas backend).
 * ``coord_unfused``  -- project -> coord optimizer -> reconstruct ->
@@ -96,7 +107,7 @@ import jax.numpy as jnp
 
 from repro.core import projector, rng
 from repro.core.compartments import PACKABLE_NORMALIZATIONS
-from repro.core.rbd import RandomBasesTransform, RBDState
+from repro.core.rbd import BASIS_SPECS, RandomBasesTransform, RBDState
 from repro.optim import transforms as opt
 
 
@@ -104,8 +115,8 @@ class ExecutionPlan(NamedTuple):
     """Static decision of how one optimizer step executes, with a
     structured reason code (surfaced by ``launch/dryrun.py``)."""
 
-    strategy: str          # fused_packed | fused_per_leaf | coord_unfused
-                           # | full_space
+    strategy: str          # fused_packed | materialized_packed
+                           # | fused_per_leaf | coord_unfused | full_space
     packed_resident: bool  # TrainState stores params packed across steps
     reason: str            # human-readable decision trail
     prng_impl: str = "threefry"   # EFFECTIVE core.rng.PrngSpec impl (the
@@ -119,6 +130,12 @@ class ExecutionPlan(NamedTuple):
                                     # (sketch-time vs finish-time vs no
                                     # collective at all)
     overlap_reason: str = ""        # why that schedule was selected
+    basis: str = "random"           # EFFECTIVE core.rbd BasisSpec (the
+                                    # requested spec after reason-coded
+                                    # degradation: materialized specs
+                                    # fall back to random redraw where
+                                    # no resident basis can exist)
+    basis_reason: str = ""          # why that basis was selected
 
     @property
     def fused(self) -> bool:
@@ -128,6 +145,12 @@ class ExecutionPlan(NamedTuple):
     def coord_space(self) -> bool:
         """Optimizer state lives in the d-dimensional coordinate space."""
         return self.strategy != "full_space"
+
+    @property
+    def materialized(self) -> bool:
+        """The basis is a stored (d, q_packed) array on RBDState, not
+        regenerated from (seed, counters) each step."""
+        return self.strategy == "materialized_packed"
 
 
 def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
@@ -139,7 +162,8 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     k_workers: int = 1,
                     prng_impl: str = "threefry",
                     hw_prng_available: bool = False,
-                    overlap: str = "auto") -> ExecutionPlan:
+                    overlap: str = "auto",
+                    basis: str = "random") -> ExecutionPlan:
     """The one fuse/state-placement decision point (pure function of the
     config flags; ``SubspaceOptimizer.plan_execution`` delegates here).
 
@@ -179,9 +203,74 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
     ``none`` with a fallback reason (``axis_name=None``: no collective
     exists; sequential K-worker simulation: the gather is local
     compute).
+
+    ``basis``: the REQUESTED ``core.rbd`` BasisSpec (``random`` |
+    ``trajectory_pca`` | ``gradient_informed``).  ``random`` is the
+    paper's per-step redraw and routes exactly as before -- every
+    reason code on that path is unchanged.  The materialized specs
+    route to the ``materialized_packed`` strategy where a resident
+    basis can exist (shared-basis, unsharded, no weight decay) and
+    degrade to ``random`` with a reason everywhere else; the effective
+    spec lands on the plan's ``basis``/``basis_reason`` fields.  A
+    materialized basis is row-orthonormal by construction, so the
+    ``orthonormal`` normalization -- which forces the random path off
+    the packed kernels -- is satisfied for free there.
     """
     del optimizer  # all optimizers have coordinate-space state now
+    if basis not in BASIS_SPECS:
+        raise ValueError(
+            f"unknown basis spec {basis!r}; expected one of {BASIS_SPECS}")
     model_sharded = model_sharded or model_axis is not None
+    joint = (mode == "independent_bases"
+             and (axis_name is not None or k_workers > 1))
+
+    def _resolve_basis():
+        """(effective basis, reason, materialized ExecutionPlan | None).
+
+        The RANDOM path must stay byte-identical, so this never touches
+        the random reason codes -- it only decides whether a requested
+        materialized spec can actually hold a resident basis."""
+        if basis == "random":
+            return "random", (
+                "per-step random redraw (paper default): the basis is "
+                "regenerated from (seed, counters), never stored"), None
+        if not rbd_enabled:
+            return "random", (
+                f"{basis} requested but rbd is disabled -> no subspace "
+                "exists, basis spec unused"), None
+        if weight_decay:
+            return "random", (
+                f"{basis} requested but weight_decay forces the "
+                "full-space sketch path -> no resident coordinate "
+                "subspace to materialize; per-step random redraw"), None
+        if joint:
+            return "random", (
+                f"{basis} requested but independent_bases workers each "
+                "redraw a per-worker basis; per-worker trajectory "
+                "buffers do not compose with the joint (K, d) exchange "
+                "-> per-step random redraw"), None
+        if model_sharded:
+            return "random", (
+                f"{basis} requested but the model-sharded layout "
+                "regenerates basis slabs device-locally; a materialized "
+                "(d, q) basis would itself need sharding -> per-step "
+                "random redraw"), None
+        source = ("PCA of the trajectory ring buffer"
+                  if basis == "trajectory_pca"
+                  else "SVD of the packed gradient-sketch history")
+        why = (
+            f"{basis}: resident (d, q_packed) row-orthonormal basis on "
+            f"RBDState, refreshed from {source} by the loop's collector "
+            "-- orthonormal by construction, so every normalization's "
+            "scale is exactly 1")
+        mplan = ExecutionPlan(
+            "materialized_packed", True,
+            "materialized-basis step: dense (d, q_packed) basis stored "
+            "on RBDState -> sketch and apply are two XLA matmuls (0 "
+            "kernel launches -- relaxes the two-launch invariant, keeps "
+            "the one (d,) coordinate exchange and the packed-resident "
+            "TrainState)")
+        return basis, why, mplan
 
     def _decide() -> ExecutionPlan:
         if not rbd_enabled:
@@ -206,7 +295,9 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
                     "full_space", False,
                     "independent_bases with orthonormal normalization "
                     "materializes a QR basis per worker -> per-leaf "
-                    "full-space path")
+                    "full-space path (no basis= escape: materialized "
+                    "BasisSpecs do not compose with the per-worker "
+                    "joint exchange either)")
             if model_sharded and model_axis is None:
                 return ExecutionPlan(
                     "full_space", False,
@@ -251,8 +342,12 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
         if normalization not in PACKABLE_NORMALIZATIONS:
             return ExecutionPlan(
                 "coord_unfused", False,
-                f"{normalization} normalization -> unfused (materializes a "
-                "QR basis per compartment); coordinate-space state")
+                f"{normalization} normalization with a random basis -> "
+                "unfused (materializes a QR basis per compartment; a "
+                "materialized BasisSpec -- basis=trajectory_pca / "
+                "gradient_informed -- is orthonormal by construction "
+                "and keeps the packed-resident path); coordinate-space "
+                "state")
         if use_packed and model_sharded and model_axis is not None:
             if normalization == "exact":
                 return ExecutionPlan(
@@ -311,13 +406,24 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
             "jnp backend unpacked -> per-leaf XLA-fused stages (no kernel "
             "launches); coordinate-space state")
 
-    eplan = _decide()
+    eff_basis, basis_why, mplan = _resolve_basis()
+    eplan = mplan if mplan is not None else _decide()
     impl, why = rng.resolve_prng_impl(
         prng_impl, strategy=eplan.strategy, backend=backend,
         hw_available=hw_prng_available, rbd_enabled=rbd_enabled)
     joint_sim = (mode == "independent_bases" and axis_name is None
                  and k_workers > 1)
-    if eplan.strategy != "fused_packed":
+    if eplan.strategy == "materialized_packed":
+        if axis_name is None:
+            ov, ov_why = "none", (
+                "axis_name=None: no data-axis collective exists; the "
+                "materialized sketch and apply matmuls run back-to-back")
+        else:
+            ov, ov_why = "sync", (
+                "materialized-basis step: the one (d,) pmean is issued "
+                "synchronously between the dense sketch and apply "
+                "matmuls (no launch-split window to overlap under)")
+    elif eplan.strategy != "fused_packed":
         ov, ov_why = "none", (
             f"no packed split step: the {eplan.strategy} strategy has "
             "no single coordinate collective to overlap")
@@ -344,7 +450,8 @@ def plan_from_flags(*, optimizer: str = "sgd", weight_decay: float = 0.0,
             "overlaps the collective under XLA's async scheduler -- "
             "still exactly ONE collective site")
     return eplan._replace(prng_impl=impl, prng_reason=why,
-                          overlap_exchange=ov, overlap_reason=ov_why)
+                          overlap_exchange=ov, overlap_reason=ov_why,
+                          basis=eff_basis, basis_reason=basis_why)
 
 
 class _Aux(NamedTuple):
@@ -435,6 +542,27 @@ class SubspaceOptimizer:
                                       # (overlapped), "off" keeps the
                                       # synchronous finish-time issue
                                       # (bit-identical reference path)
+    switch_policy: str = "reset"      # coordinate-state policy at the
+                                      # FPD -> RBD switch (transform.
+                                      # steps_fpd): "reset" re-zeroes
+                                      # momentum/adam state at the first
+                                      # redrawn-basis step (coordinate
+                                      # history in the retired basis is
+                                      # meaningless), "carry" keeps it
+                                      # (the paper's section 4.5 switch
+                                      # without state surgery)
+    coord_clip_norm: float = 0.0      # >0: clip the (d,) coordinate
+                                      # gradient to this global norm
+                                      # before the optimizer (pure (d,)
+                                      # transform; 0 leaves the chain --
+                                      # and the state pytree -- untouched)
+    lr_schedule: str = "constant"     # multiplicative LR schedule applied
+                                      # AFTER the optimizer as a (d,)
+                                      # transform ("constant" | "cosine")
+    lr_warmup_steps: int = 0          # linear warmup steps of the schedule
+    lr_total_steps: int = 0           # cosine horizon (TrainConfig.steps)
+    lbfgs_history: int = 8            # (m, d) ring depth of the lbfgs
+                                      # coordinate optimizer
     log_update_norm: bool = True
     params_template: Any = None       # pytree of shapes/dtypes; required
                                       # for the packed-resident strategy
@@ -474,6 +602,12 @@ class SubspaceOptimizer:
             model_sharded=model_sharded,
             model_axis=model_axis,
             model_shards=model_shards,
+            switch_policy=tcfg.rbd.switch_policy,
+            coord_clip_norm=tcfg.coord_clip_norm,
+            lr_schedule=tcfg.lr_schedule,
+            lr_warmup_steps=tcfg.lr_warmup_steps,
+            lr_total_steps=tcfg.steps,
+            lbfgs_history=tcfg.lbfgs_history,
             log_update_norm=tcfg.log_update_norm,
             params_template=params_template,
         )
@@ -500,6 +634,7 @@ class SubspaceOptimizer:
             prng_impl=requested,
             hw_prng_available=hw_ok,
             overlap=self.overlap,
+            basis=(t.basis if t else "random"),
         )
 
     @property
@@ -511,22 +646,79 @@ class SubspaceOptimizer:
             self.axis_name is not None or self.k_workers > 1)
 
     def _optimizer(self) -> opt.Transform:
-        return opt.get_optimizer(
+        base = opt.get_optimizer(
             self.optimizer, momentum_beta=self.momentum_beta,
             nesterov=self.nesterov, adam_b1=self.adam_b1,
-            adam_b2=self.adam_b2, adam_eps=self.adam_eps)
+            adam_b2=self.adam_b2, adam_eps=self.adam_eps,
+            learning_rate=self.learning_rate,
+            lbfgs_history=self.lbfgs_history)
+        pre = ([opt.clip_by_global_norm(self.coord_clip_norm)]
+               if self.coord_clip_norm else [])
+        post = ([opt.schedule(self.lr_schedule,
+                              total_steps=self.lr_total_steps,
+                              warmup_steps=self.lr_warmup_steps)]
+                if (self.lr_schedule != "constant"
+                    or self.lr_warmup_steps) else [])
+        if not pre and not post:
+            # default config returns the bare optimizer: its state
+            # pytree (and the traced step) is unchanged by the chain
+            # machinery existing
+            return base
+        return opt.chain(*pre, base, *post)
+
+    def _validate_second_order(self, eplan) -> None:
+        """The second-order coordinate optimizers pair gradients ACROSS
+        steps, so the basis must be fixed between steps: materialized
+        (trajectory_pca / gradient_informed) or FPD (redraw=False).
+        Per-step random redraw makes coordinate gradients incomparable,
+        and the per-leaf / joint (K, d) states have no single (d,)
+        buffer for the curvature history."""
+        if self.optimizer not in opt.SECOND_ORDER_OPTIMIZERS:
+            return
+        t = self.transform
+        if eplan.strategy not in ("materialized_packed", "fused_packed") \
+                or self.joint_subspace:
+            raise ValueError(
+                f"{self.optimizer} needs the single (d,)-shaped packed "
+                "coordinate buffer for its curvature history; this "
+                f"config plans {eplan.strategy!r} "
+                f"(joint_subspace={self.joint_subspace}) -- "
+                + eplan.reason)
+        fixed = eplan.materialized or (t is not None and not t.redraw
+                                       and not t.steps_fpd)
+        if not fixed:
+            raise ValueError(
+                f"{self.optimizer} pairs coordinate gradients across "
+                "steps, which requires a basis FIXED between steps: a "
+                "materialized BasisSpec (basis=trajectory_pca / "
+                "gradient_informed) or FPD (redraw=False, steps_fpd=0). "
+                "A per-step random redraw makes coordinate gradients "
+                "incomparable across steps.")
 
     # -- state --------------------------------------------------------------
 
     def init_rbd_state(self, params):
-        return self.transform.init(params) if self.transform else ()
+        if self.transform is None:
+            return ()
+        state = self.transform.init(params)
+        eplan = self.plan_execution()
+        if eplan.materialized:
+            # initial basis: orthonormalized Gaussian from the base
+            # seed (the collector's refreshes replace it in-place --
+            # same shape, no retrace)
+            t = self.transform
+            basis = projector.materialize_random_basis(
+                t.plan, t.plan.packed(), t.base_seed)
+            state = state._replace(basis=basis)
+        return state
 
     def init_opt_state(self, params):
         """Optimizer state: shaped like the coordinate buffer for the
-        coordinate-space strategies ((d_packed,) on the packed path),
-        like ``params`` for the full-space path.  SGD is stateless
-        everywhere."""
+        coordinate-space strategies ((d_packed,) on the packed path,
+        (total_dim,) on the materialized path), like ``params`` for the
+        full-space path.  SGD is stateless everywhere."""
         eplan = self.plan_execution()
+        self._validate_second_order(eplan)
         o = self._optimizer()
         if not eplan.coord_space:
             return o.init(params)
@@ -534,7 +726,12 @@ class SubspaceOptimizer:
 
     def _coord_template(self):
         plan = self.transform.plan
-        if self.plan_execution().strategy == "fused_packed":
+        strategy = self.plan_execution().strategy
+        if strategy == "materialized_packed":
+            # the materialized basis has exactly total_dim live rows --
+            # no dir-block padding slots to carry
+            return jnp.zeros((plan.total_dim,), jnp.float32)
+        if strategy == "fused_packed":
             d = plan.packed().d_packed
             if self.joint_subspace:
                 # the joint subspace is K*d-dimensional: state lives on
@@ -627,9 +824,13 @@ class SubspaceOptimizer:
                 "fault injection) require the packed two-launch "
                 f"strategy; this config plans {eplan.strategy!r} -- "
                 + eplan.reason)
+        self._validate_second_order(eplan)
         if eplan.strategy == "full_space":
             return self._full_space_step(params, grads, rbd_state,
                                          opt_state)
+        if eplan.strategy == "materialized_packed":
+            return self._materialized_step(params, grads, rbd_state,
+                                           opt_state)
         if eplan.strategy == "fused_packed":
             ticket = self._packed_sketch(params, grads, rbd_state,
                                          opt_state, eplan)
@@ -724,6 +925,44 @@ class SubspaceOptimizer:
         return self._apply_exchanged(params, coords, sq, rbd_state,
                                      opt_state, guard_state, reason, eplan)
 
+    def _switch_opt_state(self, opt_state, step):
+        """FPD -> RBD state-carry policy (resolves the PR 2 open item):
+        at the switch step (``transform.steps_fpd``) the ``reset``
+        policy re-zeroes the coordinate optimizer state -- momentum /
+        adam history accumulated in the retired fixed basis pairs
+        coordinates with DIFFERENT directions after the redraw, so it
+        is meaningless there -- while ``carry`` keeps it (the paper's
+        section 4.5 switch without state surgery).  Statically a no-op
+        (byte-identical trace) when no switch is scheduled; coordinate-
+        space strategies only (full-space state never changes basis)."""
+        t = self.transform
+        if (t is None or not t.steps_fpd
+                or self.switch_policy != "reset"):
+            return opt_state
+        at_switch = (jnp.asarray(step, jnp.uint32)
+                     == jnp.uint32(t.steps_fpd))
+        return jax.tree_util.tree_map(
+            lambda s: jnp.where(at_switch, jnp.zeros_like(s), s),
+            opt_state)
+
+    def _materialized_step(self, params, grads, rbd_state, opt_state):
+        """One step on the MATERIALIZED basis (trajectory_pca /
+        gradient_informed): sketch = basis @ g_packed, one (d,) pmean,
+        coordinate-space optimizer, apply = theta - lr * (c @ basis).
+        Zero kernel launches, one collective; the basis itself is
+        refreshed OUTSIDE the traced step by the training loop's
+        collector (same shape -> no retrace)."""
+        basis = rbd_state.basis
+        coords = projector.project_materialized(basis, grads)
+        if self.axis_name is not None:
+            coords = jax.lax.pmean(coords, axis_name=self.axis_name)
+        coords_u, new_opt = self._optimizer().update(coords, opt_state)
+        new_params = projector.reconstruct_apply_materialized(
+            coords_u, basis, params, self.learning_rate)
+        new_rbd = RBDState(step=rbd_state.step + 1, basis=basis)
+        return (new_params, new_rbd, new_opt,
+                self._delta_aux(params, new_params))
+
     def _apply_exchanged(self, params, coords, sq, rbd_state, opt_state,
                          guard_state, reason, eplan):
         t = self.transform
@@ -731,6 +970,9 @@ class SubspaceOptimizer:
         layout = plan.packed()
         prng = eplan.prng_impl
         seed = t.step_seed(rbd_state.step)
+        # the switch-policy reset happens BEFORE the guard freeze reads
+        # opt_state, so a rejected switch step freezes the RESET state
+        opt_state = self._switch_opt_state(opt_state, rbd_state.step)
         gain = None
         ok = None
         new_guard = guard_state
@@ -1043,6 +1285,7 @@ class SubspaceOptimizer:
         else:
             coords, norms = projector.project(
                 grads, t.plan, seed, backend=t.backend, return_norms=True)
+        opt_state = self._switch_opt_state(opt_state, rbd_state.step)
         coords, opt_state = self._optimizer().update(coords, opt_state)
         new_rbd = RBDState(step=rbd_state.step + 1)
         if fused:

@@ -4,6 +4,20 @@ The RBD/FPD transforms from ``repro.core.rbd`` chain in front of any of
 these: backprop -> [random-bases sketch] -> [momentum/adam] -> apply.
 The paper uses plain SGD without momentum or schedules; the framework
 supports the full set as ordinary substrate.
+
+Because ``repro.optim.subspace`` keeps optimizer state in the
+d-dimensional COORDINATE space, second-order methods become cheap:
+:func:`lbfgs` (two-loop recursion, (m, d) ring buffers) and
+:func:`newton` (dense BFGS inverse Hessian, exact (d, d) solve at
+d <= 64) are just more coordinate-space Transforms -- the quasi-Newton
+subspace training of Li et al. (*Low Dimensional Landscape Hypothesis*,
+P-BFGS) at RBD's scale.  Both require the basis to be FIXED between
+steps (a materialized basis, or FPD): coordinate gradients from
+different bases are not comparable, so ``SubspaceOptimizer`` validates
+the pairing.  Coordinate-space gradient clipping
+(:func:`clip_by_global_norm`) and LR schedules (:func:`schedule`) are
+pure (d,) transforms that :func:`chain` in front of / behind any
+optimizer.
 """
 
 from __future__ import annotations
@@ -73,6 +87,197 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Transform:
     return Transform(init, update)
 
 
+class LBFGSState(NamedTuple):
+    """(m, d) ring buffers, oldest -> newest.  ``mask`` is 1.0 on live
+    curvature pairs; masked slots are exact no-ops in the two-loop
+    recursion, so the state shape is static for any history fill."""
+
+    s_hist: Any           # (m, d) coordinate displacements
+    y_hist: Any           # (m, d) gradient differences
+    sy: Any               # (m,) curvature products s.y
+    yy: Any               # (m,) y.y (newest live slot drives gamma)
+    mask: Any             # (m,) f32 pair validity
+    prev_g: Any           # (d,) previous coordinate gradient
+    prev_step: Any        # (d,) applied displacement = -lr * direction
+    count: jax.Array      # i32 update counter
+
+
+def _require_coord_buffer(params, name: str):
+    if not (hasattr(params, "ndim") and params.ndim == 1):
+        raise ValueError(
+            f"{name} keeps its curvature history over the single "
+            "(d,)-shaped coordinate buffer; this state template is "
+            f"{params!r} -- it needs the materialized-basis or "
+            "fixed-basis (FPD) packed path, not per-leaf or joint "
+            "(K, d) coordinate state")
+
+
+def lbfgs(history: int = 8, learning_rate: float = 0.01,
+          curvature_eps: float = 1e-10) -> Transform:
+    """Coordinate-space L-BFGS (two-loop recursion).
+
+    Returns the ASCENT direction ``H_k g_k`` so the caller's standard
+    ``theta -= lr * u`` apply performs the quasi-Newton step; the
+    displacement it implies, ``s_k = -lr * H_k g_k``, is recorded
+    internally, which is why the constructor needs the SAME
+    ``learning_rate`` the apply uses (``SubspaceOptimizer`` plumbs its
+    own).  Curvature pairs with ``s.y <= curvature_eps`` are skipped
+    (the Powell-free damping of choice at this scale), and with an
+    empty history the direction is exactly the gradient -- the first
+    step of L-BFGS IS the SGD step, which the switch tests rely on.
+    """
+    m = int(history)
+
+    def init(params):
+        _require_coord_buffer(params, "lbfgs")
+        d = params.shape[0]
+        z = jnp.zeros((m, d), jnp.float32)
+        v = jnp.zeros((m,), jnp.float32)
+        return LBFGSState(z, z, v, v, v,
+                          jnp.zeros((d,), jnp.float32),
+                          jnp.zeros((d,), jnp.float32),
+                          jnp.zeros((), jnp.int32))
+
+    def update(g, st, p=None):
+        g = g.astype(jnp.float32)
+        s = st.prev_step
+        y = g - st.prev_g
+        sy = jnp.vdot(s, y)
+        good = jnp.logical_and(st.count > 0, sy > curvature_eps)
+
+        def push(buf, v):
+            return jnp.where(good,
+                             jnp.concatenate([buf[1:], v[None]]), buf)
+
+        s_hist = push(st.s_hist, s)
+        y_hist = push(st.y_hist, y)
+        sy_h = push(st.sy, sy)
+        yy_h = push(st.yy, jnp.vdot(y, y))
+        mask = push(st.mask, jnp.float32(1.0))
+
+        # two-loop recursion, statically unrolled over the ring; a
+        # masked slot has rho == 0 so both passes are exact no-ops there
+        q = g
+        alphas = [None] * m
+        for i in reversed(range(m)):
+            rho = mask[i] / jnp.maximum(sy_h[i], curvature_eps)
+            a = rho * jnp.vdot(s_hist[i], q)
+            q = q - a * y_hist[i]
+            alphas[i] = a
+        gamma = jnp.where(mask[-1] > 0,
+                          sy_h[-1] / jnp.maximum(yy_h[-1], curvature_eps),
+                          jnp.float32(1.0))
+        r = gamma * q
+        for i in range(m):
+            rho = mask[i] / jnp.maximum(sy_h[i], curvature_eps)
+            b = rho * jnp.vdot(y_hist[i], r)
+            r = r + s_hist[i] * (alphas[i] - b)
+        new = LBFGSState(s_hist, y_hist, sy_h, yy_h, mask,
+                         prev_g=g,
+                         prev_step=-jnp.float32(learning_rate) * r,
+                         count=st.count + 1)
+        return r, new
+
+    return Transform(init, update)
+
+
+class NewtonState(NamedTuple):
+    h_inv: Any            # (d, d) dense inverse-Hessian estimate
+    prev_g: Any
+    prev_step: Any
+    count: jax.Array
+
+
+def newton(learning_rate: float = 0.01, max_dim: int = 64,
+           curvature_eps: float = 1e-10) -> Transform:
+    """Full-memory BFGS: the dense (d, d) inverse Hessian, updated
+    exactly each step (no history truncation) -- the exact-Newton
+    limit of :func:`lbfgs`, affordable only because d is tiny.  Refuses
+    coordinate buffers above ``max_dim`` (the (d, d) state and the
+    dense matvec stop being a rounding error past ~64 dims; use
+    ``lbfgs`` there)."""
+
+    def init(params):
+        _require_coord_buffer(params, "newton")
+        d = params.shape[0]
+        if d > max_dim:
+            raise ValueError(
+                f"newton keeps a dense ({d}, {d}) inverse Hessian; "
+                f"d={d} exceeds max_dim={max_dim} -- use lbfgs for "
+                "larger coordinate spaces")
+        return NewtonState(jnp.eye(d, dtype=jnp.float32),
+                           jnp.zeros((d,), jnp.float32),
+                           jnp.zeros((d,), jnp.float32),
+                           jnp.zeros((), jnp.int32))
+
+    def update(g, st, p=None):
+        g = g.astype(jnp.float32)
+        s = st.prev_step
+        y = g - st.prev_g
+        sy = jnp.vdot(s, y)
+        good = jnp.logical_and(st.count > 0, sy > curvature_eps)
+        rho = jnp.float32(1.0) / jnp.maximum(sy, curvature_eps)
+        eye = jnp.eye(g.shape[0], dtype=jnp.float32)
+        v = eye - rho * jnp.outer(s, y)
+        h_new = v @ st.h_inv @ v.T + rho * jnp.outer(s, s)
+        h = jnp.where(good, h_new, st.h_inv)
+        direction = h @ g
+        return direction, NewtonState(
+            h, g, -jnp.float32(learning_rate) * direction, st.count + 1)
+
+    return Transform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    """Stateless coordinate-space gradient clipping: on the subspace
+    paths ``u`` is the (d,)-sized coordinate buffer, so the norm costs
+    d multiplies, not D."""
+    def update(u, s, p=None):
+        n = global_norm(u)
+        factor = jnp.minimum(
+            jnp.float32(1.0),
+            jnp.float32(max_norm) / jnp.maximum(n, 1e-12))
+        return jax.tree_util.tree_map(lambda x: x * factor, u), s
+
+    return Transform(init=lambda params: (), update=update)
+
+
+class ScheduleState(NamedTuple):
+    count: jax.Array      # i32 steps taken
+
+
+def schedule(kind: str = "constant", *, total_steps: int = 0,
+             warmup_steps: int = 0) -> Transform:
+    """Multiplicative LR schedule as a pure (d,) transform -- chain it
+    AFTER the optimizer so the decayed factor scales the final update
+    (state is one i32 counter, shared by every strategy)."""
+    if kind not in ("constant", "cosine"):
+        raise ValueError(
+            f"unknown schedule {kind!r}; expected 'constant' or 'cosine'")
+
+    def factor(t):
+        f = jnp.float32(1.0)
+        if warmup_steps:
+            f = f * jnp.minimum(jnp.float32(1.0),
+                                (t + 1.0) / float(warmup_steps))
+        if kind == "cosine":
+            horizon = max(int(total_steps) - int(warmup_steps), 1)
+            prog = jnp.clip((t - warmup_steps) / horizon, 0.0, 1.0)
+            f = f * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return f
+
+    def init(params):
+        del params
+        return ScheduleState(jnp.zeros((), jnp.int32))
+
+    def update(u, st, p=None):
+        f = factor(st.count.astype(jnp.float32))
+        return (jax.tree_util.tree_map(lambda x: x * f, u),
+                ScheduleState(st.count + 1))
+
+    return Transform(init, update)
+
+
 def scale(factor: float) -> Transform:
     return Transform(
         init=lambda params: (),
@@ -103,17 +308,31 @@ def chain(*transforms: Transform) -> Transform:
     return Transform(init, update)
 
 
+# Optimizers whose history pairs coordinate gradients ACROSS steps, so
+# they require a basis that is fixed between steps (materialized, or
+# FPD's redraw=False) -- SubspaceOptimizer validates the pairing.
+SECOND_ORDER_OPTIMIZERS = ("lbfgs", "newton")
+
+
 def get_optimizer(name: str, *, momentum_beta: float = 0.9,
                   nesterov: bool = False, adam_b1: float = 0.9,
-                  adam_b2: float = 0.999, adam_eps: float = 1e-8) -> Transform:
+                  adam_b2: float = 0.999, adam_eps: float = 1e-8,
+                  learning_rate: float = 0.01,
+                  lbfgs_history: int = 8) -> Transform:
     """Optimizer by name with explicit hyperparameters (the TrainConfig
-    fields of the same names plumb through here)."""
+    fields of the same names plumb through here).  ``learning_rate`` is
+    consumed only by the second-order optimizers, which must know the
+    caller's apply scale to record their own displacements."""
     if name == "sgd":
         return sgd()
     if name == "momentum":
         return momentum(momentum_beta, nesterov)
     if name == "adam":
         return adam(adam_b1, adam_b2, adam_eps)
+    if name == "lbfgs":
+        return lbfgs(lbfgs_history, learning_rate)
+    if name == "newton":
+        return newton(learning_rate)
     raise KeyError(f"unknown optimizer {name!r}")
 
 
@@ -125,52 +344,6 @@ def apply_updates(params, updates, lr):
         lambda p, u: (p.astype(jnp.float32)
                       - lr * u.astype(jnp.float32)).astype(p.dtype),
         params, updates)
-
-
-# ---------------------------------------------------------------------------
-# fused sketch-and-apply (single-launch packed RBD step)
-# ---------------------------------------------------------------------------
-
-# Optimizers whose state lives in the d-dimensional coordinate space
-# (repro.optim.subspace), so the sketch and the parameter apply fuse into
-# core.rbd.rbd_step's two launches with only a (d,)-sized pure-jnp state
-# update in between.  Since the coordinate-space redesign this is all of
-# them; the tuple remains for backwards compatibility.
-FUSABLE_OPTIMIZERS = ("sgd", "momentum", "adam")
-
-
-def can_fuse_apply(optimizer: str, weight_decay: float, rbd_cfg) -> bool:
-    """Deprecated shim: the fuse decision (with a structured reason code)
-    now lives in ``repro.optim.subspace.plan_from_flags`` /
-    ``SubspaceOptimizer.plan_execution``."""
-    import warnings
-
-    from repro.optim import subspace
-
-    warnings.warn(
-        "can_fuse_apply is deprecated: use repro.optim.subspace."
-        "plan_from_flags / SubspaceOptimizer.plan_execution (reason-"
-        "coded)", DeprecationWarning, stacklevel=2)
-    return subspace.plan_from_flags(
-        optimizer=optimizer, weight_decay=weight_decay,
-        rbd_enabled=rbd_cfg.enabled, use_packed=rbd_cfg.use_packed,
-        normalization=rbd_cfg.normalization, backend=rbd_cfg.backend,
-    ).fused
-
-
-def fused_rbd_apply(transform, params, grads, rbd_state, lr,
-                    axis_name=None, packed=True):
-    """Deprecated shim (SGD-only fused apply); prefer
-    ``repro.optim.subspace.SubspaceOptimizer.step``.  Returns
-    (new_params, new_rbd_state).  See ``core.rbd.rbd_step``."""
-    import warnings
-
-    warnings.warn(
-        "fused_rbd_apply is deprecated: construct a repro.optim."
-        "subspace.SubspaceOptimizer and call .step()",
-        DeprecationWarning, stacklevel=2)
-    return transform.fused_step(params, grads, rbd_state, lr,
-                                axis_name=axis_name, packed=packed)
 
 
 def global_norm(tree) -> jax.Array:

@@ -1,4 +1,19 @@
-"""Host-side training loop: data feed, jit, metrics, checkpoints."""
+"""Host-side training loop: data feed, jit, metrics, checkpoints,
+and the materialized-basis collector.
+
+The ``trajectory_pca`` / ``gradient_informed`` BasisSpecs store their
+basis as data on ``RBDState`` (see ``optim.subspace`` strategy
+``materialized_packed``); the REFRESH of that basis is a host-side
+concern and lives here, in :class:`BasisCollector`: a ring buffer of
+packed observations (theta deltas for trajectory_pca -- Li et al.'s
+DLDR recipe of PCA over training-trajectory snapshots -- or per-step
+packed gradients for gradient_informed) is reduced every R steps by
+``projector.refresh_materialized_basis`` (numpy SVD + QR against the
+old basis, off the device) and the new basis is installed in-place on
+the state: same shape and dtype, so the jitted step never retraces.
+Coordinate optimizer state is re-zeroed at each refresh -- its history
+pairs coordinates with the RETIRED basis rows (the same argument as the
+FPD -> RBD ``switch_policy="reset"``)."""
 
 from __future__ import annotations
 
@@ -6,10 +21,80 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
+import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.models.registry import Model
 from repro.train.step import make_train_step, stack_microbatches
+
+
+class BasisCollector:
+    """Snapshot ring + periodic refresh for a materialized basis.
+
+    ``observe`` is called once per optimizer step with the post-step
+    state; it pulls one packed (q_packed,) observation to the host,
+    and every ``refresh_every`` steps rebuilds the basis from the ring
+    and returns the state with the new basis (and re-zeroed coordinate
+    optimizer state) installed.  Use :meth:`build`, which returns None
+    unless the execution plan is actually materialized -- the random
+    path never constructs a collector."""
+
+    def __init__(self, sub_opt, spec: str, refresh_every: int,
+                 capacity: int):
+        self.sub_opt = sub_opt
+        self.spec = spec                  # trajectory_pca | gradient_informed
+        self.refresh_every = refresh_every
+        self.capacity = capacity
+        self.ring = []                    # newest-last packed observations
+        self.refreshes = 0                # completed refresh count
+        self._prev_theta = None           # trajectory_pca delta anchor
+
+    @classmethod
+    def build(cls, sub_opt, tcfg: TrainConfig):
+        eplan = sub_opt.plan_execution()
+        if not eplan.materialized:
+            return None
+        d = int(sub_opt.transform.plan.total_dim)
+        # ring depth: enough snapshots to replace a meaningful fraction
+        # of the d basis rows per refresh (the remainder is filled from
+        # the old basis -- see refresh_materialized_basis)
+        capacity = max(4, min(d, 64))
+        refresh_every = int(tcfg.rbd.basis_refresh_every) or capacity
+        return cls(sub_opt, eplan.basis, refresh_every, capacity)
+
+    def _observation(self, state, metrics):
+        if self.spec == "gradient_informed":
+            return np.asarray(metrics["basis_grad"], np.float32)
+        theta = np.asarray(state.params, np.float32)
+        if self._prev_theta is None:
+            self._prev_theta = theta
+            return None
+        delta = theta - self._prev_theta
+        self._prev_theta = theta
+        return delta
+
+    def observe(self, state, metrics, step: int):
+        obs = self._observation(state, metrics)
+        if obs is not None and np.all(np.isfinite(obs)):
+            self.ring.append(obs)
+            if len(self.ring) > self.capacity:
+                self.ring.pop(0)
+        if (step + 1) % self.refresh_every or not self.ring:
+            return state
+        from repro.core import projector
+        import jax.numpy as jnp
+
+        new_basis = projector.refresh_materialized_basis(
+            np.asarray(state.rbd_state.basis, np.float32),
+            np.stack(self.ring))
+        self.ring.clear()
+        self.refreshes += 1
+        return state._replace(
+            rbd_state=state.rbd_state._replace(
+                basis=jnp.asarray(new_basis)),
+            # coordinate history in the retired basis is meaningless --
+            # same reset argument as switch_policy="reset"
+            opt_state=self.sub_opt.init_opt_state(None))
 
 
 def train(
@@ -43,6 +128,9 @@ def train(
     state = init_state(jax.random.PRNGKey(tcfg.seed))
     train_step = jax.jit(train_step)
     n_accum = max(1, int(tcfg.grad_accum_steps))
+    # materialized BasisSpecs only; None on the random path, where the
+    # loop body below is unchanged
+    collector = BasisCollector.build(sub_opt, tcfg)
 
     def fetch():
         # one OPTIMIZER step's worth of data: N consecutive stream
@@ -101,6 +189,8 @@ def train(
             drain_pending()
             raise res_lib.SimulatedWorkerKill(f"fault plan kills step {step}")
         state, metrics = train_step(state, batch)
+        if collector is not None:
+            state = collector.observe(state, metrics, step)
         if step + 1 < tcfg.steps:
             # one-deep prefetch: the step above is dispatched
             # asynchronously, so the host builds step i+1's batch while

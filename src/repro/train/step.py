@@ -71,6 +71,7 @@ def make_transform(model: Model, rbd_cfg: RBDConfig, params_shape=None):
     return rbd_lib.RandomBasesTransform(
         plan, base_seed=rbd_cfg.base_seed, redraw=rbd_cfg.redraw,
         backend=rbd_cfg.backend, prng=rbd_cfg.prng_impl,
+        basis=rbd_cfg.basis, steps_fpd=rbd_cfg.steps_fpd,
     )
 
 
@@ -192,6 +193,12 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     if n_accum < 1:
         raise ValueError(f"grad_accum_steps must be >= 1, got {n_accum}")
     split_step = sub_opt.plan_execution().strategy == "fused_packed"
+    # gradient_informed materialized basis: the loop's collector feeds
+    # its refresh from the packed per-step gradient, surfaced as a
+    # metric (statically gated -- every other config's metrics pytree
+    # is unchanged)
+    _ep = sub_opt.plan_execution()
+    emit_basis_grad = _ep.materialized and _ep.basis == "gradient_informed"
     # sharded packed route: the batch is replicated over the model axis,
     # so the all-gather transpose in the backward pass sums model_shards
     # identical cotangent copies into the slab gradient
@@ -270,6 +277,15 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                 state.params, grads, state.rbd_state, state.opt_state,
                 state.guard)
         metrics = dict(metrics, loss=loss, update_norm=aux.update_norm)
+        if emit_basis_grad:
+            bg = grads
+            if axis_name is not None:
+                # the collector needs the GLOBAL mean gradient; this
+                # (q_packed,) pmean lives on the metrics path of the
+                # materialized gradient_informed config only (the
+                # optimizer step itself still exchanges (d,) floats)
+                bg = jax.lax.pmean(bg, axis_name)
+            metrics["basis_grad"] = bg
         if guard_on:
             metrics["guard_reason"] = aux.reason
             metrics["guard_count"] = aux.guard.nonfinite_count

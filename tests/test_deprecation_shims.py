@@ -1,6 +1,7 @@
-"""The PR 2 compatibility shims must WARN (DeprecationWarning) so legacy
-callers migrate to SubspaceOptimizer -- and the new path must stay
-silent (no shim is reached internally)."""
+"""The PR 2/3/4 compatibility shims are RETIRED, not deprecated: the
+legacy entry points must be gone (AttributeError / TypeError), and the
+one real update path must run clean with DeprecationWarning promoted to
+an error -- proving no shim machinery survives anywhere on it."""
 
 import warnings
 
@@ -8,7 +9,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import RBDConfig
 from repro.core import make_plan, projector
 from repro.core.rbd import RandomBasesTransform
 from repro.optim import transforms as opt
@@ -23,46 +23,47 @@ def _fixture():
     return params, plan, t, grads
 
 
-def test_update_shim_warns():
-    params, _, t, grads = _fixture()
-    state = t.init(params)
-    with pytest.warns(DeprecationWarning, match="SubspaceOptimizer"):
-        t.update(grads, state)
+@pytest.mark.parametrize("name", ["update", "project", "reconstruct",
+                                  "fused_step"])
+def test_transform_shims_removed(name):
+    """RandomBasesTransform is a basis CONFIG now; the PR 2 step-method
+    shims no longer exist on it."""
+    _, _, t, _ = _fixture()
+    assert not hasattr(t, name)
 
 
-def test_fused_step_shim_warns():
-    params, _, t, grads = _fixture()
-    state = t.init(params)
-    with pytest.warns(DeprecationWarning, match="SubspaceOptimizer"):
-        t.fused_step(params, grads, state, 0.1)
+@pytest.mark.parametrize("name", ["can_fuse_apply", "fused_rbd_apply",
+                                  "FUSABLE_OPTIMIZERS"])
+def test_transforms_module_shims_removed(name):
+    """The fuse-decision heuristics live only on plan_from_flags."""
+    assert not hasattr(opt, name)
 
 
-def test_can_fuse_apply_shim_warns():
-    with pytest.warns(DeprecationWarning, match="plan_from_flags"):
-        opt.can_fuse_apply("sgd", 0.0, RBDConfig())
-
-
-def test_fused_rbd_apply_shim_warns():
-    params, _, t, grads = _fixture()
-    state = t.init(params)
-    with pytest.warns(DeprecationWarning):
-        opt.fused_rbd_apply(t, params, grads, state, 0.1)
-
-
-def test_use_hw_prng_shim_warns_and_maps_to_prng():
-    """The per-leaf projection kernel's boolean flag is folded into the
-    PrngSpec backend: passing it (either value) warns, and the False
-    spelling still selects the bit-stable threefry path."""
+def test_use_hw_prng_parameter_removed():
+    """The boolean PRNG flag is gone from the projection kernel: prng=
+    (a core.rng.PrngSpec impl name) is the only spelling."""
     from repro.core import rng
     from repro.kernels import rbd_project
 
     seed = rng.fold_seed(5)
     g = jnp.arange(64, dtype=jnp.float32)
-    with pytest.warns(DeprecationWarning, match="prng='hw'"):
-        u_shim, _ = rbd_project.project_flat(seed, g, 8,
-                                             use_hw_prng=False)
-    u_new, _ = rbd_project.project_flat(seed, g, 8, prng="threefry")
-    assert (jnp.asarray(u_shim) == jnp.asarray(u_new)).all()
+    with pytest.raises(TypeError):
+        rbd_project.project_flat(seed, g, 8, use_hw_prng=True)
+    # the real spelling still works and is warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rbd_project.project_flat(seed, g, 8, prng="threefry")
+
+
+def test_no_deprecation_machinery_in_source():
+    """Acceptance grep as a test: the shim-hosting modules contain no
+    DeprecationWarning at all."""
+    import inspect
+
+    from repro.core import rbd as rbd_mod
+
+    for mod in (opt, rbd_mod):
+        assert "DeprecationWarning" not in inspect.getsource(mod), mod
 
 
 @pytest.mark.parametrize("strategy_kw", [
@@ -72,9 +73,9 @@ def test_use_hw_prng_shim_warns_and_maps_to_prng():
     dict(use_packed=True, mode="independent_bases", k_workers=2),
 ])
 def test_subspace_optimizer_path_does_not_warn(strategy_kw):
-    """Every SubspaceOptimizer strategy -- including the new packed
-    independent_bases joint-subspace path -- runs without touching a
-    deprecated shim."""
+    """Every SubspaceOptimizer strategy -- including the packed
+    independent_bases joint-subspace path -- runs with
+    DeprecationWarning promoted to an error."""
     params, plan, t, grads = _fixture()
     sub = SubspaceOptimizer(transform=t, learning_rate=0.1,
                             params_template=params, **strategy_kw)

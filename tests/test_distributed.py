@@ -43,7 +43,8 @@ _SCRIPT = textwrap.dedent("""
         return flat(upd)[None]
 
     upd_dist = shared(g)[0]
-    upd_single, _ = t.update(unflat(g.mean(0)), state)
+    upd_single = projector.rbd_gradient(unflat(g.mean(0)), plan,
+                                        t.step_seed(state.step))
     out["shared_equals_single_worker_on_mean"] = bool(
         jnp.allclose(upd_dist, flat(upd_single), atol=1e-4))
 

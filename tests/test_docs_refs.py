@@ -7,11 +7,11 @@ Two contracts:
    real ``def``/``class`` in that file (dotted ``Class.method`` refs
    check both parts).
 2. The machine-checked catalog fences in docs/PLANS.md
-   (```plan-catalog / ```overlap-catalog / ```prng-catalog) exactly
-   equal the reason-code sets produced by enumerating
-   ``repro.optim.subspace.plan_from_flags`` over the full flag product
-   -- adding, removing, or rewording a reason code without updating the
-   cookbook fails here with a set diff.
+   (```plan-catalog / ```overlap-catalog / ```prng-catalog /
+   ```basis-catalog) exactly equal the reason-code sets produced by
+   enumerating ``repro.optim.subspace.plan_from_flags`` over the full
+   flag product -- adding, removing, or rewording a reason code without
+   updating the cookbook fails here with a set diff.
 """
 
 import itertools
@@ -90,17 +90,19 @@ _AXES = dict(
     prng_impl=("threefry", "hw", "hw_emulated"),
     hw_prng_available=(False, True),
     overlap=("auto", "off"),
+    basis=("random", "trajectory_pca", "gradient_informed"),
 )
 
 
 def _enumerate_plans():
-    plans, overlaps, prngs = set(), set(), set()
+    plans, overlaps, prngs, bases = set(), set(), set(), set()
     for combo in itertools.product(*_AXES.values()):
         ep = subspace.plan_from_flags(**dict(zip(_AXES, combo)))
         plans.add((ep.strategy, ep.reason))
         overlaps.add((ep.strategy, ep.overlap_exchange, ep.overlap_reason))
         prngs.add((ep.strategy, ep.prng_impl, ep.prng_reason))
-    return plans, overlaps, prngs
+        bases.add((ep.strategy, ep.basis, ep.basis_reason))
+    return plans, overlaps, prngs, bases
 
 
 def _fence(tag: str) -> set:
@@ -132,15 +134,20 @@ def _assert_same(documented: set, actual: set, tag: str):
 
 
 def test_plan_catalog_matches():
-    plans, _, _ = _enumerate_plans()
+    plans, _, _, _ = _enumerate_plans()
     _assert_same(_fence("plan-catalog"), plans, "plan-catalog")
 
 
 def test_overlap_catalog_matches():
-    _, overlaps, _ = _enumerate_plans()
+    _, overlaps, _, _ = _enumerate_plans()
     _assert_same(_fence("overlap-catalog"), overlaps, "overlap-catalog")
 
 
 def test_prng_catalog_matches():
-    _, _, prngs = _enumerate_plans()
+    _, _, prngs, _ = _enumerate_plans()
     _assert_same(_fence("prng-catalog"), prngs, "prng-catalog")
+
+
+def test_basis_catalog_matches():
+    _, _, _, bases = _enumerate_plans()
+    _assert_same(_fence("basis-catalog"), bases, "basis-catalog")

@@ -187,19 +187,21 @@ def test_packed_block_size_invariance(seed):
 # ---------------------------------------------------------------------------
 
 
-def test_fused_step_redraw_seed_folding():
-    """fused_step folds the step counter exactly like update(): step t
-    uses fold(base_seed, t), so RBD (redraw) draws a fresh basis per step
-    and two consecutive fused steps equal the manual two-step sequence."""
+def test_step_seed_redraw_folding():
+    """The transform's seed schedule folds the step counter: step t uses
+    fold(base_seed, t), so RBD (redraw) draws a fresh basis per step and
+    two consecutive rbd_steps through the schedule equal the manual
+    two-step sequence."""
     params = _params()
     plan = _plan(params)
     grads = _grads(params)
     t = RandomBasesTransform(plan, base_seed=11, redraw=True)
     state = t.init(params)
 
-    p1, s1 = t.fused_step(params, grads, state, 0.5)
-    p2, s2 = t.fused_step(p1, grads, s1, 0.5)
-    assert int(s2.step) == 2
+    p1 = rbd_step(params, grads, plan, t.step_seed(state.step), 0.5)
+    s1 = state._replace(step=state.step + 1)
+    p2 = rbd_step(p1, grads, plan, t.step_seed(s1.step), 0.5)
+    assert int(s1.step + 1) == 2
 
     m1 = rbd_step(params, grads, plan, rng.fold_seed(11, jnp.uint32(0)),
                   0.5)
@@ -214,15 +216,13 @@ def test_fused_step_redraw_seed_folding():
                         jax.tree_util.tree_leaves(p2)))
 
 
-def test_fpd_fused_step_reuses_basis():
+def test_fpd_seed_schedule_reuses_basis():
     params = _params()
     plan = _plan(params)
-    grads = _grads(params)
     t = RandomBasesTransform(plan, base_seed=3, redraw=False)
     state = t.init(params)
-    _, s1 = t.fused_step(params, grads, state, 0.5)
     seed0 = t.step_seed(state.step)
-    seed1 = t.step_seed(s1.step)
+    seed1 = t.step_seed(state.step + 1)
     assert np.asarray(seed0) == np.asarray(seed1)
 
 

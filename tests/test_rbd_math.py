@@ -64,10 +64,17 @@ def test_fpd_is_fixed_rbd_redraws(rng_key):
     fpd = RandomBasesTransform(plan, 0, redraw=False)
     s_r = rbd.init(params)
     s_f = fpd.init(params)
-    u1r, s_r = rbd.update(grads, s_r)
-    u2r, s_r = rbd.update(grads, s_r)
-    u1f, s_f = fpd.update(grads, s_f)
-    u2f, s_f = fpd.update(grads, s_f)
+
+    def sketch(t, grads, state):
+        u = projector.rbd_gradient(grads, t.plan,
+                                   t.step_seed(state.step),
+                                   backend=t.backend)
+        return u, state._replace(step=state.step + 1)
+
+    u1r, s_r = sketch(rbd, grads, s_r)
+    u2r, s_r = sketch(rbd, grads, s_r)
+    u1f, s_f = sketch(fpd, grads, s_f)
+    u2f, s_f = sketch(fpd, grads, s_f)
     l1r, l2r = (jax.tree_util.tree_leaves(u)[0] for u in (u1r, u2r))
     l1f, l2f = (jax.tree_util.tree_leaves(u)[0] for u in (u1f, u2f))
     assert not jnp.allclose(l1r, l2r)           # RBD redraws

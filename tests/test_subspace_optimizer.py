@@ -144,17 +144,25 @@ def test_plan_execution_reason_codes():
                            use_packed=True).strategy != "full_space"
 
 
-def test_can_fuse_apply_shim_covers_stateful_optimizers():
-    """The deprecated entry point now reports momentum/adam as fusable
+def test_plan_from_flags_covers_stateful_optimizers():
+    """plan_from_flags (the one decision point that replaced the retired
+    can_fuse_apply heuristic) reports momentum/adam as fused
     (coordinate-space state) and still rejects the ineligible configs."""
+    def fused(optimizer, wd, rcfg):
+        return plan_from_flags(
+            optimizer=optimizer, weight_decay=wd,
+            rbd_enabled=rcfg.enabled, use_packed=rcfg.use_packed,
+            normalization=rcfg.normalization,
+            backend=rcfg.backend).fused
+
     packed = RBDConfig(backend="pallas")
-    assert opt.can_fuse_apply("momentum", 0.0, packed)
-    assert opt.can_fuse_apply("adam", 0.0, packed)
-    assert not opt.can_fuse_apply("sgd", 0.1, packed)          # wd
-    assert not opt.can_fuse_apply(
+    assert fused("momentum", 0.0, packed)
+    assert fused("adam", 0.0, packed)
+    assert not fused("sgd", 0.1, packed)          # wd
+    assert not fused(
         "sgd", 0.0, RBDConfig(backend="pallas",
                               normalization="orthonormal"))
-    assert not opt.can_fuse_apply("sgd", 0.0, RBDConfig(enabled=False))
+    assert not fused("sgd", 0.0, RBDConfig(enabled=False))
 
 
 # ---------------------------------------------------------------------------

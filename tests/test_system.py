@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import make_plan, nes, rng
+from repro.core import make_plan, nes, projector, rng
 from repro.core.rbd import RandomBasesTransform
 from repro.data import synthetic
 from repro.models import vision
@@ -38,7 +38,10 @@ def _train(params, loss_fn, transform, lr, steps=120, seed=0):
     def step(p, st, x, y):
         loss, g = jax.value_and_grad(loss_fn)(p, x, y)
         if transform is not None:
-            g, st = transform.update(g, st)
+            g = projector.rbd_gradient(
+                g, transform.plan, transform.step_seed(st.step),
+                backend=transform.backend)
+            st = st._replace(step=st.step + 1)
         p = jax.tree_util.tree_map(lambda a, u: a - lr * u, p, g)
         return p, st, loss
 
